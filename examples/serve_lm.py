@@ -1,0 +1,13 @@
+"""Serve a small model with batched requests (prefill + decode loop).
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch gemma3_12b]
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    argv = ["--arch", "gemma3_12b", "--reduced", "--batch", "4",
+            "--prompt-len", "16", "--gen", "12"]
+    argv += sys.argv[1:]
+    raise SystemExit(main(argv))

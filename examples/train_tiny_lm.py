@@ -1,0 +1,18 @@
+"""Train a tiny LM end-to-end on the synthetic pipeline with checkpointing.
+
+    PYTHONPATH=src python examples/train_tiny_lm.py [--arch mamba2_370m]
+
+Uses the same launcher the production mesh would run (repro.launch.train):
+reduced config, a few hundred steps, loss printed every 25 steps, checkpoint
+every 50 — kill it anytime and rerun with --resume.
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = ["--arch", "mamba2_370m", "--reduced", "--steps", "200",
+            "--batch", "8", "--seq", "64", "--ckpt-every", "50",
+            "--log-every", "25", "--ckpt-dir", "/tmp/repro_tiny_lm"]
+    argv += sys.argv[1:]
+    raise SystemExit(main(argv))

@@ -1,0 +1,95 @@
+"""PostgreSQL-flavoured cost model (paper §7.1).
+
+The paper uses "a more realistic cost model ... close to the one used by
+PostgreSQL" covering inner equi-joins only.  We model three physical join
+operators and take the min, plus a sequential-scan leaf cost:
+
+    scan(R)          = C_SEQ * rows(R)
+    hash(l, r)       = C_HASH_BUILD*inner + C_HASH_PROBE*outer + C_TUP*out
+    merge(l, r)      = C_SORT*(l*log2 l + r*log2 r) + C_MERGE*(l+r) + C_TUP*out
+    nestloop(l, r)   = C_NL * l * r + C_TUP*out          (computed in log2 space)
+
+Cardinalities are carried in log2 space (f32) — products of 1000 selectivities
+overflow linear f32; costs are linear f32 with rows clamped at 2**LOG2_CAP so
+the worst sum stays far below f32 max.  jnp and numpy twins must agree.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# cost-model constants (dimensionless "PostgreSQL cost units")
+C_SEQ = 0.35
+C_HASH_BUILD = 1.8
+C_HASH_PROBE = 0.55
+C_MERGE = 0.4
+C_SORT = 0.25
+C_NL = 0.02
+C_TUP = 0.05
+LOG2_CAP = 100.0  # rows clamp: 2^100 ~ 1.27e30 -> costs stay < ~1e33 << f32 max
+
+
+# --------------------------------------------------------------------- jnp --
+
+def rows_from_log2(rl2):
+    return jnp.exp2(jnp.minimum(rl2, LOG2_CAP))
+
+
+def scan_cost(rl2):
+    return C_SEQ * rows_from_log2(rl2)
+
+
+def join_cost(rl2_l, rl2_r, rl2_out):
+    """Cheapest physical operator for joining (l, r) -> out.  All log2 rows."""
+    rl = rows_from_log2(rl2_l)
+    rr = rows_from_log2(rl2_r)
+    ro = rows_from_log2(rl2_out)
+    inner = jnp.minimum(rl, rr)
+    outer = jnp.maximum(rl, rr)
+    hj = C_HASH_BUILD * inner + C_HASH_PROBE * outer + C_TUP * ro
+    lg_l = jnp.maximum(rl2_l, 1.0)
+    lg_r = jnp.maximum(rl2_r, 1.0)
+    mj = C_SORT * (rl * lg_l + rr * lg_r) + C_MERGE * (rl + rr) + C_TUP * ro
+    nl = C_NL * jnp.exp2(jnp.minimum(rl2_l + rl2_r, LOG2_CAP)) + C_TUP * ro
+    return jnp.minimum(hj, jnp.minimum(mj, nl))
+
+
+# ------------------------------------------------------------------- numpy --
+
+def np_rows_from_log2(rl2):
+    return np.exp2(np.minimum(np.float32(rl2), np.float32(LOG2_CAP)), dtype=np.float32)
+
+
+def np_scan_cost(rl2):
+    return np.float32(C_SEQ) * np_rows_from_log2(rl2)
+
+
+def np_join_cost(rl2_l, rl2_r, rl2_out):
+    rl = np_rows_from_log2(rl2_l)
+    rr = np_rows_from_log2(rl2_r)
+    ro = np_rows_from_log2(rl2_out)
+    inner = np.minimum(rl, rr)
+    outer = np.maximum(rl, rr)
+    hj = np.float32(C_HASH_BUILD) * inner + np.float32(C_HASH_PROBE) * outer + np.float32(C_TUP) * ro
+    lg_l = np.maximum(np.float32(rl2_l), np.float32(1.0))
+    lg_r = np.maximum(np.float32(rl2_r), np.float32(1.0))
+    mj = (np.float32(C_SORT) * (rl * lg_l + rr * lg_r)
+          + np.float32(C_MERGE) * (rl + rr) + np.float32(C_TUP) * ro)
+    nl = (np.float32(C_NL) * np.exp2(np.minimum(np.float32(rl2_l) + np.float32(rl2_r),
+                                                np.float32(LOG2_CAP)), dtype=np.float32)
+          + np.float32(C_TUP) * ro)
+    return np.minimum(hj, np.minimum(mj, nl))
+
+
+# --------------------------------------------------- set-cardinality helper --
+
+def np_rows_log2(s: int, g) -> np.float32:
+    """log2 rows of the join over relation set ``s`` (host; JoinGraph g)."""
+    out = np.float32(0.0)
+    for v in range(g.n):
+        if (s >> v) & 1:
+            out += np.float32(g.log2_card[v])
+    for i, (u, v) in enumerate(g.edges):
+        if ((s >> u) & 1) and ((s >> v) & 1):
+            out += np.float32(g.log2_sel[i])
+    return np.float32(max(out, 0.0))

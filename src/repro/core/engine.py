@@ -1,0 +1,703 @@
+"""Level-synchronous massively-parallel DP engine (paper Alg. 5, TPU-adapted).
+
+The GPU pipeline *unrank -> filter -> evaluate -> prune -> scatter* maps to:
+
+  unrank    combinatorial-number-system unranking inside the filter kernel
+  filter    connectivity mask on rank chunks; the host compacts (playing the
+            role of the paper's CPU driver / thrust::remove)
+  evaluate  algorithm-specific flat *lane space* per DP level, processed in
+            fixed-size chunks: DPSUB ``sets x 2^i``, MPDP:Tree ``sets x m``,
+            MPDP-general ``sum over (set, block) pairs of 2^|block|`` decoded
+            via searchsorted on a prefix-sum (the warp/thread grid becomes a
+            dense vector of lanes; invalid pairs are masked lanes — the TPU
+            analogue of Collaborative Context Collection)
+  prune     in-chunk ``segment_min`` per set + argmin-by-equality (the paper's
+            in-warp reduction; one memo write per set)
+  scatter   dense memo tables indexed by subset bitmap (the TPU-native
+            replacement of the Murmur3 GPU hash table)
+
+All kernels take the query (adjacency bitmaps, edge masks, stats) as *dynamic*
+inputs, so one compilation per (NMAX, EMAX, CHUNK) bucket serves every query
+and every IDP2/UnionDP subproblem.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from math import comb
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import bitset as bs
+from . import blocks as bl
+from . import cost as cm
+from . import unrank as ur
+from .joingraph import DeviceGraph, JoinGraph
+from .plan import Counters, OptimizeResult, extract_plan
+
+CHUNK = 1 << 15          # lanes per evaluate/filter chunk
+INF = np.float32(np.inf)
+CYC_CAP_DEFAULT = 24     # max cyclomatic number handled by the vector path
+
+
+def _use_pallas() -> bool:
+    """REPRO_PALLAS=1 routes the bit-twiddling evaluate phase through the
+    Pallas TPU kernels (interpret mode on CPU; real kernels on TPU)."""
+    import os
+    return os.environ.get("REPRO_PALLAS", "0") == "1"
+
+
+def _cap(n: int, lo: int = 1024) -> int:
+    c = lo
+    while c < n:
+        c <<= 1
+    return c
+
+
+# =========================================================== jitted kernels ==
+
+@partial(jax.jit, static_argnames=("nmax", "emax", "chunk"))
+def _filter_chunk(rank0, total, k, binom, adj, card_l2, emask_u, emask_v,
+                  esel_l2, *, nmax: int, emax: int, chunk: int):
+    """unrank + connectivity filter + per-set log2 rows."""
+    t = jnp.arange(chunk, dtype=jnp.int32)
+    ranks = rank0 + t
+    mask = ranks < total
+    S = ur.unrank_ksubset(jnp.minimum(ranks, total - 1), k, binom, nmax)
+    if _use_pallas():
+        from ..kernels import ops as _ko
+        conn = (_ko.connectivity(S, adj, nmax) != 0) & mask
+    else:
+        conn = bs.is_connected(S, adj) & mask
+    mem = bs.member_matrix(S, nmax).astype(jnp.float32)
+    rows = mem @ card_l2
+    inside = ((S[:, None] & emask_u[None, :]) != 0) & ((S[:, None] & emask_v[None, :]) != 0)
+    rows = rows + jnp.where(inside, esel_l2[None, :], 0.0).sum(axis=1)
+    rows = jnp.maximum(rows, 0.0)
+    return S, conn, rows
+
+
+@partial(jax.jit, static_argnames=("nmax", "emax", "cap"))
+def _expand_chunk(sets_pad, n_valid, adj, card_l2, emask_u, emask_v, esel_l2,
+                  *, nmax: int, emax: int, cap: int):
+    """Beyond-paper enumeration: grow level-(i-1) connected sets by one
+    neighbour each (host dedups) — skips unranking the full C(n,i) space.
+    Also returns rows for the PARENT sets' candidates lazily (rows are
+    recomputed for the deduped sets by _rows_chunk)."""
+    S = sets_pad
+    nbr = bs.neighbors(S, adj) & ~S                    # (cap,)
+    shifts = jnp.arange(nmax, dtype=jnp.int32)
+    has = ((nbr[:, None] >> shifts) & 1) == 1          # (cap, nmax)
+    cand = jnp.where(has, S[:, None] | (jnp.int32(1) << shifts), 0)
+    live = (jnp.arange(cap) < n_valid)[:, None]
+    return jnp.where(live, cand, 0)
+
+
+@partial(jax.jit, static_argnames=("nmax", "emax", "cap"))
+def _rows_chunk(sets_pad, adj, card_l2, emask_u, emask_v, esel_l2,
+                *, nmax: int, emax: int, cap: int):
+    S = sets_pad
+    mem = bs.member_matrix(S, nmax).astype(jnp.float32)
+    rows = mem @ card_l2
+    inside = ((S[:, None] & emask_u[None, :]) != 0) & ((S[:, None] & emask_v[None, :]) != 0)
+    rows = rows + jnp.where(inside, esel_l2[None, :], 0.0).sum(axis=1)
+    return jnp.maximum(rows, 0.0)
+
+
+@partial(jax.jit, static_argnames=("size", "cap"), donate_argnums=(0,))
+def _scatter_f32(buf, idx, val, *, size: int, cap: int):
+    return buf.at[idx].set(val, mode="drop")
+
+
+@partial(jax.jit, static_argnames=("size", "cap"), donate_argnums=(0,))
+def _scatter_i32(buf, idx, val, *, size: int, cap: int):
+    return buf.at[idx].set(val, mode="drop")
+
+
+def _lane_cost(S_left, S_right, S_rows, memo_cost, memo_rows):
+    cl = memo_cost[S_left]
+    cr = memo_cost[S_right]
+    jc = cm.join_cost(memo_rows[S_left], memo_rows[S_right], S_rows)
+    return cl + cr + jc
+
+
+def _prune(seg, cand_cost, cand_left, nseg: int):
+    """Two-pass in-chunk prune: segment-min cost then max-left among ties."""
+    seg_cost = jax.ops.segment_min(cand_cost, seg, num_segments=nseg,
+                                   indices_are_sorted=True)
+    is_best = cand_cost == seg_cost[seg]
+    left_cand = jnp.where(is_best & jnp.isfinite(cand_cost), cand_left, 0)
+    seg_left = jax.ops.segment_max(left_cand, seg, num_segments=nseg,
+                                   indices_are_sorted=True)
+    return seg_cost, seg_left
+
+
+@partial(jax.jit, static_argnames=("nmax", "chunk", "nseg"))
+def _eval_dpsub_chunk(all_sets, level_off, base_set, base_sub, i, lane_count,
+                      adj, memo_cost, memo_rows,
+                      *, nmax: int, chunk: int, nseg: int):
+    t = jnp.arange(chunk, dtype=jnp.int32)
+    sub_g = base_sub + t
+    set_idx = base_set + (sub_g >> i)
+    sub = sub_g & ((jnp.int32(1) << i) - 1)
+    live = t < lane_count
+    S = all_sets[level_off + set_idx]
+    evaluated = live                                    # Alg.1 line 9
+    if _use_pallas():
+        from ..kernels import ops as _ko
+        lb, rb, ccp_i = _ko.ccp_eval(S, sub, adj, nmax)
+        ccp = live & (ccp_i != 0)
+    else:
+        lb = bs.pdep(sub, S, nmax)
+        rb = S & ~lb
+        nonempty = (lb != 0) & (rb != 0)
+        conn_l = bs.is_connected(lb, adj)
+        conn_r = bs.is_connected(rb, adj)
+        cross = (bs.neighbors(lb, adj) & rb) != 0
+        ccp = live & nonempty & conn_l & conn_r & cross
+    rows_S = memo_rows[S]
+    cand = jnp.where(ccp, _lane_cost(lb, rb, rows_S, memo_cost, memo_rows), INF)
+    seg = set_idx - base_set
+    seg_cost, seg_left = _prune(seg, cand, lb, nseg)
+    return seg_cost, seg_left, evaluated.sum(), ccp.sum()
+
+
+@partial(jax.jit, static_argnames=("nmax", "chunk", "nseg"))
+def _eval_tree_chunk(all_sets, level_off, base_set, base_e, m, lane_count,
+                     adj, emask_u, emask_v, memo_cost, memo_rows,
+                     *, nmax: int, chunk: int, nseg: int):
+    t = jnp.arange(chunk, dtype=jnp.int32)
+    e_g = base_e + t
+    set_idx = base_set + e_g // m
+    e = e_g % m
+    live = t < lane_count
+    S = all_sets[level_off + set_idx]
+    ub = emask_u[e]
+    vb = emask_v[e]
+    edge_in = live & ((S & ub) != 0) & ((S & vb) != 0)
+    S_left = bs.grow_excl_edge(ub, S, adj, ub, vb)
+    S_right = S & ~S_left
+    # MPDP:Tree — every enumerated pair IS a CCP pair (Theorem 3)
+    evaluated = edge_in
+    ccp = edge_in
+    rows_S = memo_rows[S]
+    cand = jnp.where(ccp, _lane_cost(S_left, S_right, rows_S, memo_cost, memo_rows), INF)
+    seg = set_idx - base_set
+    seg_cost, seg_left = _prune(seg, cand, S_left, nseg)
+    return seg_cost, seg_left, evaluated.sum(), ccp.sum()
+
+
+@partial(jax.jit, static_argnames=("nmax", "emax", "cyc_cap", "scap"))
+def _blocks_chunk(sets_pad, n_valid, adj, eu_idx, ev_idx, edge_live,
+                  *, nmax: int, emax: int, cyc_cap: int, scap: int):
+    """Phase A of MPDP-general: blocks of every set in the chunk."""
+    S = sets_pad
+
+    def per_set(s):
+        parent, depth = bl._bfs_tree(s[None], adj, nmax)
+        parent, depth = parent[0], depth[0]
+        ubit = jnp.where(eu_idx >= 0, jnp.int32(1) << jnp.maximum(eu_idx, 0), 0)
+        vbit = jnp.where(ev_idx >= 0, jnp.int32(1) << jnp.maximum(ev_idx, 0), 0)
+        in_s = edge_live & ((ubit & s) != 0) & ((vbit & s) != 0)
+        pu = parent[jnp.maximum(eu_idx, 0)]
+        pv = parent[jnp.maximum(ev_idx, 0)]
+        non_tree = in_s & ~((pu == ev_idx) | (pv == eu_idx))
+        # compact non-tree edge endpoints into cyc_cap slots
+        pos = jnp.cumsum(non_tree.astype(jnp.int32)) - 1
+        slot = jnp.where(non_tree, pos, cyc_cap)
+        cu = jnp.full(cyc_cap, -1, jnp.int32).at[slot].set(eu_idx, mode="drop")
+        cv = jnp.full(cyc_cap, -1, jnp.int32).at[slot].set(ev_idx, mode="drop")
+        act = jnp.zeros(cyc_cap, bool).at[slot].set(non_tree, mode="drop")
+        cycles = bl._fundamental_cycles(s, parent, depth, cu, cv, act, nmax)
+        merged = bl._merge_cycles(cycles, cyc_cap)
+        shifts = jnp.arange(nmax, dtype=jnp.int32)
+        vbits = jnp.int32(1) << shifts
+        has_parent = (parent >= 0) & ((s & vbits) != 0)
+        pbits = jnp.where(has_parent, jnp.int32(1) << jnp.maximum(parent, 0), 0)
+        pair = vbits | pbits
+        cov = ((cycles[None, :] & pair[:, None]) == pair[:, None]) & (cycles[None, :] != 0)
+        bridge = jnp.where(has_parent & ~jnp.any(cov, axis=1), pair, 0)
+        return merged, bridge
+
+    merged, bridge = jax.vmap(per_set)(S)
+    idx = jnp.arange(scap)
+    merged = jnp.where((idx < n_valid)[:, None], merged, 0)
+    bridge = jnp.where((idx < n_valid)[:, None], bridge, 0)
+    return merged, bridge
+
+
+@partial(jax.jit, static_argnames=("nmax", "chunk", "pcap"))
+def _eval_general_chunk(pair_set, pair_block, off_local, n_pairs, lane_count,
+                        adj, memo_cost, memo_rows,
+                        *, nmax: int, chunk: int, pcap: int):
+    t = jnp.arange(chunk, dtype=jnp.int32)
+    live = t < lane_count
+    p = jnp.searchsorted(off_local, t, side="right").astype(jnp.int32) - 1
+    p = jnp.clip(p, 0, n_pairs - 1)
+    r = t - off_local[p]
+    S = pair_set[p]
+    block = pair_block[p]
+    lb = bs.pdep(r, block, nmax)
+    rb = block & ~lb
+    enum_ok = live & (lb != 0) & (rb != 0)                 # Alg.3 line 6/7
+    conn_l = bs.is_connected(lb, adj)
+    conn_r = bs.is_connected(rb, adj)
+    cross = (bs.neighbors(lb, adj) & rb) != 0
+    ccp_blk = enum_ok & conn_l & conn_r & cross
+    S_left = bs.grow(lb, S & ~rb, adj)                     # Alg.3 line 17
+    S_right = S & ~S_left
+    rows_S = memo_rows[S]
+    cand = jnp.where(ccp_blk, _lane_cost(S_left, S_right, rows_S,
+                                         memo_cost, memo_rows), INF)
+    seg_cost, seg_left = _prune(p, cand, S_left, pcap)
+    return seg_cost, seg_left, enum_ok.sum(), ccp_blk.sum()
+
+
+@partial(jax.jit, static_argnames=("nmax", "chunk"))
+def _eval_dpsize_chunk(all_sets, off_a, off_b, count_b, base_a, base_b,
+                       lane_count, adj, memo_cost, memo_rows,
+                       card_l2, emask_u, emask_v, esel_l2,
+                       *, nmax: int, chunk: int):
+    """DPSIZE: cross product of the level-a and level-b set lists.
+
+    Candidate minima are returned per lane-pair union set; the host merges
+    (DPSIZE unions are scattered, no contiguous segments).
+    """
+    t = jnp.arange(chunk, dtype=jnp.int32)
+    g = base_b + t
+    ia = base_a + g // count_b
+    ib = g % count_b
+    live = t < lane_count
+    A = all_sets[off_a + ia]
+    B = all_sets[off_b + ib]
+    evaluated = live
+    disjoint = (A & B) == 0
+    cross = (bs.neighbors(A, adj) & B) != 0
+    ccp = live & disjoint & cross                          # A,B connected by construction
+    S = A | B
+    mem = bs.member_matrix(S, nmax).astype(jnp.float32)
+    rows = mem @ card_l2
+    inside = ((S[:, None] & emask_u[None, :]) != 0) & ((S[:, None] & emask_v[None, :]) != 0)
+    rows = jnp.maximum(rows + jnp.where(inside, esel_l2[None, :], 0.0).sum(axis=1), 0.0)
+    cand = jnp.where(ccp, _lane_cost(A, B, rows, memo_cost, memo_rows), INF)
+    return S, rows, cand, A, evaluated.sum(), ccp.sum()
+
+
+# ============================================================== host driver ==
+
+class ExactEngine:
+    """Runs one exact algorithm (dpsub / mpdp / dpsize) over a JoinGraph."""
+
+    def __init__(self, g: JoinGraph, chunk: int = CHUNK,
+                 cyc_cap: int = CYC_CAP_DEFAULT, enum: str = "unrank"):
+        if not g.is_connected():
+            raise ValueError("query graph must be connected (no cross products)")
+        self.g = g
+        self.enum = enum              # "unrank" (paper Alg.5) | "expand"
+        self.dg = DeviceGraph.from_graph(g)
+        self.n = g.n
+        self.nmax = self.dg.nmax
+        self.emax = self.dg.emax
+        self.chunk = chunk
+        self.cyc_cap = cyc_cap
+        self.size = 1 << self.nmax
+        self.binom = jnp.asarray(ur.binom_table(self.nmax))
+        # edge vertex indices (for block finding)
+        eu = np.full(self.emax, -1, np.int32)
+        ev = np.full(self.emax, -1, np.int32)
+        lv = np.zeros(self.emax, bool)
+        for i, (u, v) in enumerate(g.edges):
+            eu[i], ev[i], lv[i] = u, v, True
+        self.eu_idx = jnp.asarray(eu)
+        self.ev_idx = jnp.asarray(ev)
+        self.edge_live = jnp.asarray(lv)
+        self.counters = Counters()
+        self.timings: dict[str, float] = {}
+        self._init_memo()
+
+    # ------------------------------------------------------------- memo ----
+    def _init_memo(self):
+        size = self.size
+        self.memo_cost = jnp.full(size, INF, jnp.float32)
+        self.memo_rows = jnp.zeros(size, jnp.float32)
+        self.memo_left = jnp.zeros(size, jnp.int32)
+        self.all_sets = jnp.zeros(size, jnp.int32)
+        leaves = np.array([1 << v for v in range(self.n)], np.int32)
+        lrows = self.g.log2_card.astype(np.float32)
+        lcost = cm.np_scan_cost(lrows).astype(np.float32)
+        self._scatter(leaves, cost=lcost, rows=lrows)
+        self.all_sets = self.all_sets.at[jnp.arange(self.n)].set(jnp.asarray(leaves))
+        self.level_off = {1: 0}
+        self.level_cnt = {1: self.n}
+        self._next_off = self.n
+
+    def _scatter(self, sets_np, cost=None, rows=None, left=None):
+        cap = _cap(len(sets_np))
+        idx = np.full(cap, self.size, np.int32)  # OOB pad -> dropped
+        idx[: len(sets_np)] = sets_np
+        idx_d = jnp.asarray(idx)
+
+        def pad(x, dt):
+            b = np.zeros(cap, dt)
+            b[: len(sets_np)] = x
+            return jnp.asarray(b)
+
+        if cost is not None:
+            self.memo_cost = _scatter_f32(self.memo_cost, idx_d, pad(cost, np.float32),
+                                          size=self.size, cap=cap)
+        if rows is not None:
+            self.memo_rows = _scatter_f32(self.memo_rows, idx_d, pad(rows, np.float32),
+                                          size=self.size, cap=cap)
+        if left is not None:
+            self.memo_left = _scatter_i32(self.memo_left, idx_d, pad(left, np.int32),
+                                          size=self.size, cap=cap)
+
+    # ------------------------------------------------------------ filter ---
+    def _level_sets(self, i: int):
+        """Connected sets of level i (unrank+filter, or frontier expansion)."""
+        t0 = time.perf_counter()
+        if self.enum == "expand":
+            sets_np, rows_np = self._level_sets_expand(i)
+        else:
+            sets_np, rows_np = self._level_sets_unrank(i)
+        self._prev_level = sets_np
+        # scatter rows for this level; register in the packed level buffer
+        if len(sets_np):
+            self._scatter(sets_np, rows=rows_np)
+            cap = _cap(len(sets_np))
+            buf = np.zeros(cap, np.int32)
+            buf[: len(sets_np)] = sets_np
+            pos = np.full(cap, self.size, np.int32)
+            pos[: len(sets_np)] = self._next_off + np.arange(len(sets_np))
+            self.all_sets = _scatter_i32(self.all_sets, jnp.asarray(pos),
+                                         jnp.asarray(buf), size=self.size, cap=cap)
+        self.level_off[i] = self._next_off
+        self.level_cnt[i] = len(sets_np)
+        self._next_off += len(sets_np)
+        self.timings["filter"] = self.timings.get("filter", 0.0) + time.perf_counter() - t0
+        return sets_np
+
+    def _level_sets_unrank(self, i: int):
+        """Paper Alg.5: unrank the full C(n, i) space, mask connectivity."""
+        total = comb(self.n, i)
+        sets_l, rows_l = [], []
+        for rank0 in range(0, total, self.chunk):
+            S, conn, rows = _filter_chunk(
+                jnp.int32(rank0), jnp.int32(total), jnp.int32(i), self.binom,
+                self.dg.adj, self.dg.card_l2, self.dg.emask_u, self.dg.emask_v,
+                self.dg.esel_l2, nmax=self.nmax, emax=self.emax, chunk=self.chunk)
+            c = np.asarray(conn)
+            if c.any():
+                sets_l.append(np.asarray(S)[c])
+                rows_l.append(np.asarray(rows)[c])
+        if sets_l:
+            return np.concatenate(sets_l), np.concatenate(rows_l)
+        return np.zeros(0, np.int32), np.zeros(0, np.float32)
+
+    def _level_sets_expand(self, i: int):
+        """Beyond-paper: expand level i-1 connected sets by one neighbour and
+        dedup — O(|L_{i-1}| * deg) instead of O(C(n, i)); big win on sparse
+        graphs where most subsets are disconnected."""
+        if i == 2:
+            prev = np.array([1 << v for v in range(self.n)], np.int32)
+        else:
+            prev = self._prev_level
+        if not len(prev):
+            return np.zeros(0, np.int32), np.zeros(0, np.float32)
+        cand_l = []
+        for s0 in range(0, len(prev), self.chunk):
+            sl = prev[s0: s0 + self.chunk]
+            cap = _cap(len(sl))
+            pad = np.zeros(cap, np.int32)
+            pad[: len(sl)] = sl
+            cand = _expand_chunk(jnp.asarray(pad), jnp.int32(len(sl)),
+                                 self.dg.adj, self.dg.card_l2, self.dg.emask_u,
+                                 self.dg.emask_v, self.dg.esel_l2,
+                                 nmax=self.nmax, emax=self.emax, cap=cap)
+            c = np.asarray(cand).ravel()
+            cand_l.append(c[c != 0])
+        sets_np = np.unique(np.concatenate(cand_l)) if cand_l else np.zeros(0, np.int32)
+        rows_l = []
+        for s0 in range(0, len(sets_np), self.chunk):
+            sl = sets_np[s0: s0 + self.chunk]
+            cap = _cap(len(sl))
+            pad = np.zeros(cap, np.int32)
+            pad[: len(sl)] = sl
+            rows = _rows_chunk(jnp.asarray(pad), self.dg.adj, self.dg.card_l2,
+                               self.dg.emask_u, self.dg.emask_v,
+                               self.dg.esel_l2, nmax=self.nmax,
+                               emax=self.emax, cap=cap)
+            rows_l.append(np.asarray(rows)[: len(sl)])
+        rows_np = np.concatenate(rows_l) if rows_l else np.zeros(0, np.float32)
+        return sets_np, rows_np
+
+    # ----------------------------------------------------------- merging ---
+    def _merge_chunk(self, best_cost, best_left, base_set, seg_cost, seg_left):
+        nseg = len(seg_cost)
+        idx = base_set + np.arange(nseg)
+        ok = idx < len(best_cost)
+        idx = idx[ok]
+        sc = seg_cost[ok]
+        sl = seg_left[ok]
+        better = (sc < best_cost[idx]) | ((sc == best_cost[idx]) & (sl > best_left[idx]))
+        upd = idx[better]
+        best_cost[upd] = sc[better]
+        best_left[upd] = sl[better]
+
+    def _commit_level(self, sets_np, best_cost, best_left):
+        fin = np.isfinite(best_cost)
+        self._scatter(sets_np[fin], cost=best_cost[fin], left=best_left[fin])
+
+    # -------------------------------------------------------------- DPSUB --
+    def run_dpsub(self) -> None:
+        for i in range(2, self.n + 1):
+            sets_np = self._level_sets(i)
+            if not len(sets_np):
+                continue
+            t0 = time.perf_counter()
+            ns = len(sets_np)
+            lanes = ns << i
+            best_cost = np.full(ns, INF, np.float32)
+            best_left = np.zeros(ns, np.int32)
+            off = self.level_off[i]
+            for lane0 in range(0, lanes, self.chunk):
+                cnt = min(self.chunk, lanes - lane0)
+                sc, sl, ev, cc = _eval_dpsub_chunk(
+                    self.all_sets, jnp.int32(off), jnp.int32(lane0 >> i),
+                    jnp.int32(lane0 & ((1 << i) - 1)), jnp.int32(i), jnp.int32(cnt),
+                    self.dg.adj, self.memo_cost, self.memo_rows,
+                    nmax=self.nmax, chunk=self.chunk, nseg=self.chunk + 1)
+                self.counters.evaluated += int(ev)
+                self.counters.ccp += int(cc)
+                self._merge_chunk(best_cost, best_left, lane0 >> i,
+                                  np.asarray(sc), np.asarray(sl))
+            self._commit_level(sets_np, best_cost, best_left)
+            self.timings["evaluate"] = self.timings.get("evaluate", 0.0) + time.perf_counter() - t0
+
+    # ---------------------------------------------------------- MPDP tree --
+    def run_mpdp_tree(self) -> None:
+        m = self.g.m
+        for i in range(2, self.n + 1):
+            sets_np = self._level_sets(i)
+            if not len(sets_np):
+                continue
+            t0 = time.perf_counter()
+            ns = len(sets_np)
+            lanes = ns * m
+            best_cost = np.full(ns, INF, np.float32)
+            best_left = np.zeros(ns, np.int32)
+            off = self.level_off[i]
+            for lane0 in range(0, lanes, self.chunk):
+                cnt = min(self.chunk, lanes - lane0)
+                sc, sl, ev, cc = _eval_tree_chunk(
+                    self.all_sets, jnp.int32(off), jnp.int32(lane0 // m),
+                    jnp.int32(lane0 % m), jnp.int32(m), jnp.int32(cnt),
+                    self.dg.adj, self.dg.emask_u, self.dg.emask_v,
+                    self.memo_cost, self.memo_rows,
+                    nmax=self.nmax, chunk=self.chunk, nseg=self.chunk + 1)
+                self.counters.evaluated += int(ev)
+                self.counters.ccp += int(cc)
+                self._merge_chunk(best_cost, best_left, lane0 // m,
+                                  np.asarray(sc), np.asarray(sl))
+            self._commit_level(sets_np, best_cost, best_left)
+            self.timings["evaluate"] = self.timings.get("evaluate", 0.0) + time.perf_counter() - t0
+
+    # ------------------------------------------------------- MPDP general --
+    def _find_blocks_host(self, sets_np):
+        """Phase A: per-set blocks -> compacted (set, block) pair arrays."""
+        t0 = time.perf_counter()
+        mu = self.g.m - self.g.n + 1
+        pair_set, pair_block = [], []
+        if mu <= self.cyc_cap:
+            scap = 4096
+            # cyclomatic number of any induced subgraph <= mu(G): size the
+            # static fundamental-cycle slots to the query, not the ceiling
+            # (perf log: 24 -> mu slots cut phase A ~4x on near-tree graphs)
+            cyc_cap = max(1, min(self.cyc_cap, mu))
+            for s0 in range(0, len(sets_np), scap):
+                sl = sets_np[s0: s0 + scap]
+                pad = np.zeros(scap, np.int32)
+                pad[: len(sl)] = sl
+                merged, bridge = _blocks_chunk(
+                    jnp.asarray(pad), jnp.int32(len(sl)), self.dg.adj,
+                    self.eu_idx, self.ev_idx, self.edge_live,
+                    nmax=self.nmax, emax=self.emax, cyc_cap=cyc_cap,
+                    scap=scap)
+                mg = np.asarray(merged)[: len(sl)]
+                br = np.asarray(bridge)[: len(sl)]
+                both = np.concatenate([mg, br], axis=1)
+                snp = np.repeat(sl[:, None], both.shape[1], axis=1)
+                nz = both != 0
+                pair_set.append(snp[nz])
+                pair_block.append(both[nz])
+        else:
+            # dense path: no-cut-vertex sets are single blocks (cliques);
+            # rare cut-vertex sets fall back to the host oracle
+            scap = 4096
+            flags = np.zeros(len(sets_np), bool)
+            for s0 in range(0, len(sets_np), scap):
+                sl = sets_np[s0: s0 + scap]
+                pad = np.zeros(scap, np.int32)
+                pad[: len(sl)] = sl
+                hc = bl.has_cut_vertex_batch(jnp.asarray(pad), self.dg.adj, self.nmax)
+                flags[s0: s0 + len(sl)] = np.asarray(hc)[: len(sl)]
+            easy = sets_np[~flags]
+            pair_set.append(easy)
+            pair_block.append(easy)
+            for s in sets_np[flags]:
+                for b in bl.np_find_blocks(int(s), self.g.edges, self.n):
+                    pair_set.append(np.array([s], np.int32))
+                    pair_block.append(np.array([b], np.int32))
+        ps = np.concatenate(pair_set) if pair_set else np.zeros(0, np.int32)
+        pb = np.concatenate(pair_block) if pair_block else np.zeros(0, np.int32)
+        # order pairs by set (stable) so lane segments stay contiguous
+        order = np.argsort(ps, kind="stable")
+        self.timings["blocks"] = self.timings.get("blocks", 0.0) + time.perf_counter() - t0
+        return ps[order], pb[order]
+
+    def run_mpdp_general(self) -> None:
+        for i in range(2, self.n + 1):
+            sets_np = self._level_sets(i)
+            if not len(sets_np):
+                continue
+            ps, pb = self._find_blocks_host(sets_np)
+            if not len(ps):
+                continue
+            t0 = time.perf_counter()
+            sizes = bs.np_popcount(pb).astype(np.int64)
+            lane_sz = (1 << sizes).astype(np.int64)
+            offs = np.zeros(len(ps) + 1, np.int64)
+            np.cumsum(lane_sz, out=offs[1:])
+            total = int(offs[-1])
+            # sets_np is ascending (colex rank order == ascending bitmap), so
+            # pair -> local set index is a vectorised searchsorted
+            pk = np.searchsorted(sets_np, ps).astype(np.int64)
+            best_cost = np.full(len(sets_np), INF, np.float32)
+            best_left = np.zeros(len(sets_np), np.int32)
+            k_all, c_all, l_all = [], [], []
+            for lane0 in range(0, total, self.chunk):
+                lane1 = min(lane0 + self.chunk, total)
+                p0 = int(np.searchsorted(offs, lane0, side="right")) - 1
+                p1 = int(np.searchsorted(offs, lane1, side="left"))
+                npair = p1 - p0
+                pcap = _cap(npair, 256)
+                psl = np.zeros(pcap, np.int32)
+                pbl = np.zeros(pcap, np.int32)
+                ofl = np.full(pcap, np.int64(1 << 40), np.int64)
+                psl[:npair] = ps[p0:p1]
+                pbl[:npair] = pb[p0:p1]
+                ofl[:npair] = offs[p0:p1] - lane0
+                ofl = np.clip(ofl, -(1 << 30), 1 << 30).astype(np.int32)
+                sc, sl, ev, cc = _eval_general_chunk(
+                    jnp.asarray(psl), jnp.asarray(pbl), jnp.asarray(ofl),
+                    jnp.int32(npair), jnp.int32(lane1 - lane0),
+                    self.dg.adj, self.memo_cost, self.memo_rows,
+                    nmax=self.nmax, chunk=self.chunk, pcap=pcap)
+                self.counters.evaluated += int(ev)
+                self.counters.ccp += int(cc)
+                scn = np.asarray(sc)[:npair]
+                fin = np.isfinite(scn)
+                k_all.append(pk[p0:p1][fin])
+                c_all.append(scn[fin])
+                l_all.append(np.asarray(sl)[:npair][fin])
+            if k_all:
+                ks = np.concatenate(k_all)
+                cs = np.concatenate(c_all)
+                ls = np.concatenate(l_all)
+                np.minimum.at(best_cost, ks, cs)
+                tie = cs == best_cost[ks]
+                np.maximum.at(best_left, ks[tie], ls[tie])
+            self._commit_level(sets_np, best_cost, best_left)
+            self.timings["evaluate"] = self.timings.get("evaluate", 0.0) + time.perf_counter() - t0
+
+    # ------------------------------------------------------------- DPSIZE --
+    def run_dpsize(self) -> None:
+        level_sets: dict[int, np.ndarray] = {1: np.array([1 << v for v in range(self.n)], np.int32)}
+        for i in range(2, self.n + 1):
+            sets_np = self._level_sets(i)
+            level_sets[i] = sets_np
+            t0 = time.perf_counter()
+            s_all, c_all, l_all = [], [], []
+            for a in range(1, i):
+                b = i - a
+                ca, cb = self.level_cnt[a], self.level_cnt[b]
+                if ca == 0 or cb == 0:
+                    continue
+                lanes = ca * cb
+                for lane0 in range(0, lanes, self.chunk):
+                    cnt = min(self.chunk, lanes - lane0)
+                    S, rows, cand, A, ev, cc = _eval_dpsize_chunk(
+                        self.all_sets, jnp.int32(self.level_off[a]),
+                        jnp.int32(self.level_off[b]), jnp.int32(cb),
+                        jnp.int32(lane0 // cb), jnp.int32(lane0 % cb),
+                        jnp.int32(cnt), self.dg.adj, self.memo_cost,
+                        self.memo_rows, self.dg.card_l2, self.dg.emask_u,
+                        self.dg.emask_v, self.dg.esel_l2,
+                        nmax=self.nmax, chunk=self.chunk)
+                    self.counters.evaluated += int(ev)
+                    self.counters.ccp += int(cc)
+                    cn = np.asarray(cand)
+                    fin = np.isfinite(cn)
+                    s_all.append(np.asarray(S)[fin])
+                    c_all.append(cn[fin])
+                    l_all.append(np.asarray(A)[fin])
+            if s_all:
+                ss = np.concatenate(s_all).astype(np.int64)
+                cs = np.concatenate(c_all)
+                ls = np.concatenate(l_all)
+                scratch_c = np.full(1 << self.n, INF, np.float32)
+                scratch_l = np.zeros(1 << self.n, np.int32)
+                np.minimum.at(scratch_c, ss, cs)
+                tie = cs == scratch_c[ss]
+                np.maximum.at(scratch_l, ss[tie], ls[tie])
+                ks = np.flatnonzero(np.isfinite(scratch_c)).astype(np.int32)
+                self._scatter(ks, cost=scratch_c[ks], left=scratch_l[ks])
+            self.timings["evaluate"] = self.timings.get("evaluate", 0.0) + time.perf_counter() - t0
+
+    # ------------------------------------------------------------ finish ---
+    def result(self, algorithm: str, t0: float) -> OptimizeResult:
+        full = self.g.full_set
+        cost = float(np.asarray(self.memo_cost[full]))
+        if not np.isfinite(cost):
+            raise RuntimeError("no plan found — disconnected graph?")
+        left_np = np.asarray(self.memo_left)
+        p = extract_plan(full, left_np, self.g)
+        return OptimizeResult(plan=p, cost=cost, counters=self.counters,
+                              algorithm=algorithm,
+                              wall_s=time.perf_counter() - t0, levels=self.n)
+
+
+def optimize(g: JoinGraph, algorithm: str = "auto", chunk: int = CHUNK,
+             cyc_cap: int = CYC_CAP_DEFAULT,
+             enum: str = "unrank") -> OptimizeResult:
+    """Exact join-order optimization.  algorithm in
+    {auto, mpdp, mpdp_tree, mpdp_general, dpsub, dpsize, dpccp};
+    enum in {unrank (paper Alg.5), expand (beyond-paper frontier growth)}."""
+    from . import dpccp as _dpccp
+    if algorithm == "dpccp":
+        return _dpccp.solve(g)
+    if g.n == 1:
+        from .plan import leaf_plan
+        p = leaf_plan(0, g)
+        return OptimizeResult(plan=p, cost=p.cost, counters=Counters(),
+                              algorithm=algorithm, levels=1)
+    t0 = time.perf_counter()
+    eng = ExactEngine(g, chunk=chunk, cyc_cap=cyc_cap, enum=enum)
+    algo = algorithm
+    if algorithm in ("auto", "mpdp"):
+        algo = "mpdp_tree" if g.is_tree() else "mpdp_general"
+    if algo == "mpdp_tree":
+        eng.run_mpdp_tree()
+    elif algo == "mpdp_general":
+        eng.run_mpdp_general()
+    elif algo == "dpsub":
+        eng.run_dpsub()
+    elif algo == "dpsize":
+        eng.run_dpsize()
+    else:
+        raise ValueError(f"unknown algorithm {algorithm!r}")
+    res = eng.result(algo, t0)
+    res.timings = dict(eng.timings)
+    return res

@@ -1,0 +1,173 @@
+"""Host-side join-query representation (paper §2.1).
+
+A query is a graph G(R, E): vertices are the FROM-clause relations, edges the
+inner equi-join predicates.  We carry the statistics the cost model needs
+(base cardinalities, per-edge selectivities) in log2 space.
+
+Two regimes:
+* ``n <= NMAX_HARD`` — device form (``DeviceGraph``): int32 adjacency bitmaps +
+  padded edge arrays, consumed by the exact DP kernels.
+* arbitrary ``n`` (heuristics, up to 1000s of relations) — ``JoinGraph`` keeps
+  Python-int bitsets / numpy arrays; heuristics carve <= k sub-queries out of
+  it and ship those through ``subgraph()`` to the device kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import bitset as bs
+
+
+@dataclasses.dataclass(frozen=True)
+class JoinGraph:
+    """Immutable join query: n relations, undirected edges with selectivities."""
+
+    n: int
+    edges: tuple[tuple[int, int], ...]          # (u, v) with u < v, deduped
+    log2_card: np.ndarray                       # f32[n]  log2(base cardinality)
+    log2_sel: np.ndarray                        # f32[m]  log2(selectivity) (<= 0)
+    names: tuple[str, ...] = ()
+
+    @staticmethod
+    def make(n: int,
+             edges: Sequence[tuple[int, int]],
+             cards: Sequence[float],
+             sels: Sequence[float],
+             names: Sequence[str] = ()) -> "JoinGraph":
+        norm, seen, nsel = [], {}, []
+        for (u, v), s in zip(edges, sels):
+            if u == v:
+                raise ValueError("self-join edge")
+            e = (min(u, v), max(u, v))
+            if e in seen:  # keep the most selective predicate
+                nsel[seen[e]] = min(nsel[seen[e]], float(s))
+                continue
+            seen[e] = len(norm)
+            norm.append(e)
+            nsel.append(float(s))
+        if not names:
+            names = tuple(f"R{i}" for i in range(n))
+        return JoinGraph(
+            n=n,
+            edges=tuple(norm),
+            log2_card=np.log2(np.maximum(np.asarray(cards, np.float64), 1.0)).astype(np.float32),
+            log2_sel=np.log2(np.clip(np.asarray(nsel, np.float64), 1e-30, 1.0)).astype(np.float32),
+            names=tuple(names),
+        )
+
+    @staticmethod
+    def from_log2(n: int,
+                  edges: Sequence[tuple[int, int]],
+                  cards_l2: Sequence[float],
+                  sels_l2: Sequence[float],
+                  names: Sequence[str] = ()) -> "JoinGraph":
+        """Like make(), but stats already in log2 space (composite/temp-table
+        nodes of IDP2/UnionDP can exceed float64 in linear space)."""
+        norm, seen, nsel = [], {}, []
+        for (u, v), s in zip(edges, sels_l2):
+            if u == v:
+                raise ValueError("self-join edge")
+            e = (min(u, v), max(u, v))
+            if e in seen:
+                nsel[seen[e]] = min(nsel[seen[e]], float(s))
+                continue
+            seen[e] = len(norm)
+            norm.append(e)
+            nsel.append(float(s))
+        if not names:
+            names = tuple(f"R{i}" for i in range(n))
+        return JoinGraph(
+            n=n, edges=tuple(norm),
+            log2_card=np.maximum(np.asarray(cards_l2, np.float32), 0.0),
+            log2_sel=np.minimum(np.asarray(nsel, np.float32), 0.0),
+            names=tuple(names),
+        )
+
+    @property
+    def m(self) -> int:
+        return len(self.edges)
+
+    @property
+    def full_set(self) -> int:
+        return (1 << self.n) - 1
+
+    def adjacency(self) -> list:
+        """Python-int bitmaps (arbitrary precision — heuristics reach 1000s
+        of relations, far past int64)."""
+        adj = [0] * self.n
+        for (u, v) in self.edges:
+            adj[u] |= 1 << v
+            adj[v] |= 1 << u
+        return adj
+
+    def is_connected(self) -> bool:
+        if self.n == 0:
+            return True
+        return bs.np_grow(1, self.full_set, self.adjacency()) == self.full_set
+
+    def is_tree(self) -> bool:
+        return self.m == self.n - 1 and self.is_connected()
+
+    def edge_index(self) -> dict[tuple[int, int], int]:
+        return {e: i for i, e in enumerate(self.edges)}
+
+    # -- subproblem extraction (heuristics -> device kernels) ---------------
+    def subgraph(self, rel_ids: Sequence[int]) -> tuple["JoinGraph", list[int]]:
+        """Induced subgraph on ``rel_ids``; returns (graph, local->global map)."""
+        rel_ids = list(rel_ids)
+        gmap = {g: l for l, g in enumerate(rel_ids)}
+        sub_edges, sub_sels = [], []
+        for (u, v), s in zip(self.edges, self.log2_sel):
+            if u in gmap and v in gmap:
+                sub_edges.append((gmap[u], gmap[v]))
+                sub_sels.append(float(2.0 ** s))
+        g = JoinGraph.make(
+            n=len(rel_ids),
+            edges=sub_edges,
+            cards=[float(2.0 ** self.log2_card[r]) for r in rel_ids],
+            sels=sub_sels,
+            names=[self.names[r] for r in rel_ids],
+        )
+        return g, rel_ids
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceGraph:
+    """Padded device-side mirror of a JoinGraph (NMAX/EMAX bucketed)."""
+
+    n: int
+    m: int
+    nmax: int
+    emax: int
+    adj: jnp.ndarray         # i32[nmax]    adjacency bitmaps
+    emask_u: jnp.ndarray     # i32[emax]    1 << u  (0 pad)
+    emask_v: jnp.ndarray     # i32[emax]    1 << v  (0 pad)
+    esel_l2: jnp.ndarray     # f32[emax]    log2 selectivity (0 pad)
+    card_l2: jnp.ndarray     # f32[nmax]    log2 base cardinality (0 pad)
+
+    @staticmethod
+    def from_graph(g: JoinGraph) -> "DeviceGraph":
+        nmax = bs.nmax_bucket(g.n)
+        emax = max(8, int(np.ceil(max(g.m, 1) / 8.0)) * 8)
+        adj = np.zeros(nmax, np.int32)
+        for (u, v) in g.edges:
+            adj[u] |= 1 << v
+            adj[v] |= 1 << u
+        eu = np.zeros(emax, np.int32)
+        ev = np.zeros(emax, np.int32)
+        es = np.zeros(emax, np.float32)
+        for i, (u, v) in enumerate(g.edges):
+            eu[i] = 1 << u
+            ev[i] = 1 << v
+            es[i] = g.log2_sel[i]
+        cl = np.zeros(nmax, np.float32)
+        cl[: g.n] = g.log2_card
+        return DeviceGraph(
+            n=g.n, m=g.m, nmax=nmax, emax=emax,
+            adj=jnp.asarray(adj), emask_u=jnp.asarray(eu), emask_v=jnp.asarray(ev),
+            esel_l2=jnp.asarray(es), card_l2=jnp.asarray(cl),
+        )

@@ -1,0 +1,87 @@
+"""Activation-sharding context.
+
+Models call ``hint(x, kind)`` at key points; when a mesh context is active
+(set by the dry-run / launchers via ``activate(mesh)``), the hint becomes a
+``with_sharding_constraint`` — otherwise it is a no-op (CPU smoke tests).
+Constraints are sanitized against divisibility per dim, so e.g. starcoder2's
+24 heads simply skip the model-axis split on the head dim while the merged
+H*Hd projection dim still gets it.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_STATE = {"mesh": None, "dp": ("data",)}
+
+# kind -> list of candidate spec builders over (dp_axes); the first whose
+# sharded dims all divide evenly wins (e.g. logits prefer vocab-TP, but a
+# 49155-vocab falls back to sequence-TP instead of replicating 30 GB)
+_KINDS = {
+    "act": [lambda dp: (dp, None, None)],        # (B, S, D) residual stream
+    "proj": [lambda dp: (dp, None, "model")],    # (B, S, H*Hd | 2F) col out
+    "logits": [lambda dp: (dp, None, "model"),   # (B, S, V) vocab-TP
+               lambda dp: (dp, "model", None)],  #           seq-TP fallback
+    "logits2d": [lambda dp: (dp, "model"), lambda dp: (dp, None)],
+    "vec": [lambda dp: (dp, None)],              # (B, S) per-token scalars
+    "expert": [lambda dp: ("model", None, None)],  # (E, C, D) MoE dispatch
+}
+
+
+def activate(mesh, dp_axes):
+    _STATE["mesh"] = mesh
+    _STATE["dp"] = tuple(dp_axes)
+
+
+def deactivate():
+    _STATE["mesh"] = None
+
+
+@contextlib.contextmanager
+def use(mesh, dp_axes):
+    old = dict(_STATE)
+    activate(mesh, dp_axes)
+    try:
+        yield
+    finally:
+        _STATE.update(old)
+
+
+def _axis_size(mesh, axes):
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    s = 1
+    for a in axes:
+        s *= mesh.shape[a]
+    return s
+
+
+def hint(x, kind: str):
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return x
+    best = None
+    for builder in _KINDS[kind]:
+        spec = builder(_STATE["dp"])
+        out = []
+        clean = True
+        for d, axes in enumerate(spec):
+            if d >= x.ndim:
+                break
+            if axes is not None and x.shape[d] % _axis_size(mesh, axes) == 0:
+                out.append(axes)
+            else:
+                out.append(None)
+                clean = clean and axes is None
+        out += [None] * (x.ndim - len(out))
+        if best is None:
+            best = out
+        if clean:
+            best = out
+            break
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*best)))

@@ -1,0 +1,176 @@
+"""Parameter / batch / cache sharding rules (DP+FSDP x TP x EP x SP).
+
+Policy (per pod: data=16 is the FSDP+batch axis, model=16 is the tensor/
+expert axis; the multi-pod `pod` axis joins the batch axes, while params
+stay pod-replicated — grads reduce over DCN once per step):
+
+  embeddings       (V, D)        -> (model, data)    vocab-TP + FSDP
+  attn in-proj     (L, D, H*Hd)  -> (_, data, model) Megatron column
+  attn out-proj    (L, H*Hd, D)  -> (_, model, data) Megatron row
+  MLP in / out     analogous column/row
+  MoE experts      (L, E, D, F)  -> (_, model, data, _)   expert parallelism
+  SSM/LRU mixers   channel dims over model, D over data
+  norms/gates      replicated
+
+KV caches (serving): batch over the data axes when divisible, else the
+*sequence* dimension over `model` (SP — mandatory for MQA/MLA whose single
+head cannot be TP-sharded).  Every preferred spec is sanitized against the
+actual mesh: a dimension that does not divide evenly is replicated instead
+(e.g. granite's vocab 49155 on a 16-way axis).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..launch.mesh import dp_axes
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    s = 1
+    for a in axes:
+        s *= mesh.shape[a]
+    return s
+
+
+def sanitize(spec: P, shape, mesh) -> P:
+    out = []
+    for d, axes in enumerate(spec):
+        if axes is None or d >= len(shape):
+            out.append(None)
+            continue
+        if shape[d] % _axis_size(mesh, axes) == 0:
+            out.append(axes)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+# ------------------------------------------------------------- param rules --
+
+def param_spec(path: str, shape) -> P:
+    r = len(shape)
+    if "embed" in path:
+        return P("model", "data")
+    if "patch_proj" in path or "frame_proj" in path:
+        return P(None, "model")
+    if "router" in path:
+        return P(None, "data", None)
+    if "shared_wi" in path:
+        return P(None, "data", "model")
+    if "shared_wo" in path:
+        return P(None, "model", "data")
+    if r == 4:                         # MoE experts (L, E, D, F)/(L, E, F, D)
+        if path.endswith("wi"):
+            return P(None, "model", "data", None)
+        return P(None, "model", None, "data")
+    if r == 3:
+        last = path.rsplit("/", 1)[-1]
+        if last in ("wq", "wk", "wv", "wi", "w_x", "w_gate", "in_proj"):
+            return P(None, "data", "model")       # column parallel
+        if last in ("wo", "w_out", "out_proj", "w_uk", "w_uv"):
+            return P(None, "model", "data")       # row parallel
+        if last == "w_dkv":
+            return P(None, "data", None)          # MLA latent down-proj
+        if last == "conv_w":
+            return P(None, None, "model")
+        return P(None, None, "model")
+    if r == 2:
+        last = path.rsplit("/", 1)[-1]
+        if last in ("a_log", "d_skip", "dt_bias", "lam"):
+            return P(None, "model")
+        return P(None, None)                      # stacked norms: replicate
+    return P(*([None] * r))
+
+
+def _tree_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        out.append((path, leaf))
+    return out, treedef
+
+
+def param_shardings(param_tree, mesh):
+    """Pytree of NamedSharding matching param_tree (works on ShapeDtypeStructs)."""
+    flat, treedef = _tree_paths(param_tree)
+    out = []
+    for path, leaf in flat:
+        spec = sanitize(param_spec(path, leaf.shape), leaf.shape, mesh)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def state_shardings(state_tree, mesh):
+    """TrainState {params, m, v, step}: m/v mirror params; step replicated."""
+    return {
+        "params": param_shardings(state_tree["params"], mesh),
+        "m": param_shardings(state_tree["m"], mesh),
+        "v": param_shardings(state_tree["v"], mesh),
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+# ------------------------------------------------------------- batch rules --
+
+def batch_shardings(batch_tree, mesh):
+    dp = dp_axes(mesh)
+
+    def spec(leaf):
+        shape = leaf.shape
+        s = [None] * len(shape)
+        if len(shape) >= 1 and shape[0] % _axis_size(mesh, dp) == 0:
+            s[0] = dp
+        return NamedSharding(mesh, P(*s))
+
+    return jax.tree.map(spec, batch_tree)
+
+
+def cache_shardings(cache_tree, mesh, seq_axis_hint: dict | None = None):
+    """Serving caches: dim0 is the stacked-layer dim (replicated); batch over
+    dp when divisible; the longest remaining dim (sequence / channel) over
+    `model` when divisible (SP fallback for MQA/MLA)."""
+    dp = dp_axes(mesh)
+    dpn = _axis_size(mesh, dp)
+    mn = mesh.shape["model"]
+
+    def spec(leaf):
+        shape = leaf.shape
+        s = [None] * len(shape)
+        batch_sharded = len(shape) >= 2 and shape[1] % dpn == 0
+        if batch_sharded:
+            s[1] = dp
+        # largest dim >=2 goes over the model axis; when the batch cannot be
+        # sharded (long-context, B=1) fold the idle data axes in too —
+        # sequence-sharding the cache over (data x model) = 256-way
+        # (EXPERIMENTS §Perf: gemma long_500k memory-term iteration)
+        long_axes = "model" if batch_sharded else tuple(dp) + ("model",)
+        n_need = mn if batch_sharded else mn * dpn
+        cand = sorted(range(2, len(shape)), key=lambda d: -shape[d])
+        for d in cand:
+            if shape[d] % n_need == 0 and shape[d] >= n_need:
+                s[d] = long_axes
+                break
+            if not batch_sharded and shape[d] % mn == 0 and shape[d] >= mn:
+                s[d] = "model"
+                break
+        return NamedSharding(mesh, P(*s))
+
+    return jax.tree.map(spec, cache_tree)
+
+
+def logits_sharding(mesh, vocab: int, batch: int = 0):
+    dp = dp_axes(mesh)
+    s_b = dp if batch and batch % _axis_size(mesh, dp) == 0 else None
+    s_v = "model" if vocab % mesh.shape["model"] == 0 else None
+    return NamedSharding(mesh, P(s_b, s_v))
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,132 @@
+"""Tiny numpy hash-join executor + data generator.
+
+Purpose (paper §7.2.3 and testing):
+ * execute optimized plans on synthetic data so the exec-vs-opt experiment
+   (Fig. 10) has a real execution side;
+ * act as a *semantic oracle*: every optimizer must produce a plan whose
+   result multiset is identical — a property test over the whole stack.
+
+Data model: one int64 key column per join edge endpoint; edge (u, v) with
+selectivity s gets a shared key domain of size ~1/s (capped), so observed
+join sizes track the cost model's cardinality math at small scale.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from ..core import bitset as bs
+from ..core.joingraph import JoinGraph
+from ..core.plan import Plan
+
+
+def generate_data(g: JoinGraph, max_rows: int = 2000, seed: int = 0):
+    """dict rel -> dict: {"n": rows, "cols": {edge_id: int64 key array}}."""
+    r = np.random.default_rng(seed)
+    total_l2 = g.log2_card.sum()
+    data = {}
+    rows = {}
+    for v in range(g.n):
+        # compress cardinalities into [8, max_rows] preserving ordering
+        frac = float(g.log2_card[v]) / max(float(g.log2_card.max()), 1.0)
+        n = int(8 + (max_rows - 8) * frac)
+        rows[v] = n
+        data[v] = {"n": n, "cols": {}}
+    for e, (u, v) in enumerate(g.edges):
+        # key domain scaled to the *compressed* cardinalities so joins stay
+        # non-empty: expected matches ~ rows_u * rows_v / dom
+        sel = float(2.0 ** g.log2_sel[e])
+        dom = int(np.clip(round(1.0 / max(sel, 1e-9)), 2,
+                          max(2, min(rows[u], rows[v]))))
+        data[u]["cols"][e] = r.integers(0, dom, rows[u]).astype(np.int64)
+        data[v]["cols"][e] = r.integers(0, dom, rows[v]).astype(np.int64)
+    return data
+
+
+class ExecResult:
+    """Join result as a matrix of row ids, one column per base relation."""
+
+    def __init__(self, rels: list[int], rows: np.ndarray):
+        self.rels = rels            # sorted base relation ids
+        self.rows = rows            # int64[count, len(rels)]
+
+    @property
+    def count(self) -> int:
+        return self.rows.shape[0]
+
+    def canonical(self) -> np.ndarray:
+        order = np.lexsort(self.rows.T[::-1])
+        return self.rows[order]
+
+
+def _leaf(v: int, data) -> ExecResult:
+    return ExecResult([v], np.arange(data[v]["n"], dtype=np.int64)[:, None])
+
+
+def _join(l: ExecResult, r: ExecResult, g: JoinGraph, data) -> ExecResult:
+    lset = set(l.rels)
+    rset = set(r.rels)
+    preds = [(e, u, v) for e, (u, v) in enumerate(g.edges)
+             if (u in lset and v in rset) or (v in lset and u in rset)]
+    if not preds:
+        raise ValueError("cross product during execution")
+
+    def keycols(res: ExecResult):
+        cols = []
+        for (e, u, v) in preds:
+            rel = u if u in set(res.rels) else v
+            ridx = res.rels.index(rel)
+            cols.append(data[rel]["cols"][e][res.rows[:, ridx]])
+        return cols
+
+    lk = keycols(l)
+    rk = keycols(r)
+
+    def pack(cols):
+        k = cols[0].astype(np.int64)
+        for c in cols[1:]:
+            k = k * np.int64(1 << 20) + c.astype(np.int64)
+        return k
+
+    lkey = pack(lk)
+    rkey = pack(rk)
+    # build on smaller side
+    if l.count <= r.count:
+        build_key, probe_key = lkey, rkey
+        build, probe = l, r
+        swap = False
+    else:
+        build_key, probe_key = rkey, lkey
+        build, probe = r, l
+        swap = True
+    order = np.argsort(build_key, kind="stable")
+    sk = build_key[order]
+    starts = np.searchsorted(sk, probe_key, side="left")
+    ends = np.searchsorted(sk, probe_key, side="right")
+    counts = ends - starts
+    probe_idx = np.repeat(np.arange(probe.count, dtype=np.int64), counts)
+    if len(probe_idx) == 0:
+        build_idx = np.zeros(0, np.int64)
+    else:
+        offs = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        within = np.arange(counts.sum(), dtype=np.int64) - np.repeat(offs, counts)
+        build_idx = order[np.repeat(starts, counts) + within]
+    lrows = (build.rows[build_idx] if not swap else probe.rows[probe_idx])
+    rrows = (probe.rows[probe_idx] if not swap else build.rows[build_idx])
+    rels = l.rels + r.rels
+    rows = np.concatenate([lrows, rrows], axis=1)
+    order_cols = np.argsort(rels)
+    return ExecResult([rels[i] for i in order_cols], rows[:, order_cols])
+
+
+def execute(p: Plan, g: JoinGraph, data) -> ExecResult:
+    if p.is_leaf:
+        return _leaf(p.relations()[0], data)
+    return _join(execute(p.left, g, data), execute(p.right, g, data), g, data)
+
+
+def execute_timed(p: Plan, g: JoinGraph, data):
+    t0 = time.perf_counter()
+    res = execute(p, g, data)
+    return res, time.perf_counter() - t0

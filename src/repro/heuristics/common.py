@@ -1,0 +1,141 @@
+"""Shared machinery for large-query heuristics (paper §4).
+
+``UnitGraph`` is the working graph every heuristic operates on: its nodes
+("units") are either base relations or *temp tables* (already-optimized
+composite sub-plans, the IDP2 materialization device).  Node cardinalities
+and aggregated inter-unit selectivities are kept in log2 space, so a unit
+graph built from units is *exactly* consistent with the base graph:
+rows(union of units) == sum of unit log2-cards + crossing selectivities.
+
+Heuristics return plans over base relations (composites expanded), and every
+result is canonically re-costed bottom-up on the base graph so that plan
+quality is comparable across techniques (Table 1/2 methodology).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from ..core import bitset as bs
+from ..core import cost as cm
+from ..core.joingraph import JoinGraph
+from ..core.plan import Plan, cost_plan, join_plans, leaf_plan
+
+
+@dataclasses.dataclass
+class Unit:
+    rel_set: int                 # bitmap over BASE relations (python int)
+    rows_log2: float
+    plan: Plan                   # plan over base relations for this unit
+
+
+def base_units(g: JoinGraph) -> list[Unit]:
+    return [Unit(rel_set=1 << v, rows_log2=float(g.log2_card[v]),
+                 plan=leaf_plan(v, g)) for v in range(g.n)]
+
+
+class UnitGraph:
+    """Mutable graph over units with aggregated log2 selectivities."""
+
+    def __init__(self, g: JoinGraph, units: Optional[list[Unit]] = None):
+        self.base = g
+        self.units = units if units is not None else base_units(g)
+        self._rebuild_edges()
+
+    def _rebuild_edges(self):
+        g = self.base
+        idx_of = {}
+        for i, u in enumerate(self.units):
+            for v in bs.iter_bits(u.rel_set):
+                idx_of[v] = i
+        agg: dict[tuple[int, int], float] = {}
+        for (a, b), s in zip(g.edges, g.log2_sel):
+            ia, ib = idx_of[a], idx_of[b]
+            if ia == ib:
+                continue
+            key = (min(ia, ib), max(ia, ib))
+            agg[key] = agg.get(key, 0.0) + float(s)
+        self.edges = sorted(agg.keys())
+        self.sel_l2 = {e: agg[e] for e in self.edges}
+
+    @property
+    def n(self) -> int:
+        return len(self.units)
+
+    def neighbors(self, i: int) -> list[int]:
+        out = []
+        for (a, b) in self.edges:
+            if a == i:
+                out.append(b)
+            elif b == i:
+                out.append(a)
+        return out
+
+    def join_rows_log2(self, i: int, j: int) -> float:
+        s = self.units[i].rows_log2 + self.units[j].rows_log2
+        key = (min(i, j), max(i, j))
+        s += self.sel_l2.get(key, 0.0)
+        return max(s, 0.0)
+
+    def union_rows_log2(self, idxs: list[int]) -> float:
+        s = sum(self.units[i].rows_log2 for i in idxs)
+        ii = set(idxs)
+        for (a, b) in self.edges:
+            if a in ii and b in ii:
+                s += self.sel_l2[(a, b)]
+        return max(s, 0.0)
+
+    def merge(self, idxs: list[int], plan: Plan) -> None:
+        """Replace units ``idxs`` by one composite unit with the given plan."""
+        rel = 0
+        for i in idxs:
+            rel |= self.units[i].rel_set
+        rows = self.union_rows_log2(idxs)
+        keep = [u for k, u in enumerate(self.units) if k not in set(idxs)]
+        keep.append(Unit(rel_set=rel, rows_log2=rows, plan=plan))
+        self.units = keep
+        self._rebuild_edges()
+
+    def as_joingraph(self, idxs: Optional[list[int]] = None):
+        """JoinGraph over (a subset of) units, for exact-DP subcalls.
+        Returns (graph, unit index list)."""
+        if idxs is None:
+            idxs = list(range(self.n))
+        lmap = {g: l for l, g in enumerate(idxs)}
+        ed, sl = [], []
+        for (a, b) in self.edges:
+            if a in lmap and b in lmap:
+                ed.append((lmap[a], lmap[b]))
+                sl.append(self.sel_l2[(a, b)])
+        jg = JoinGraph.from_log2(
+            n=len(idxs), edges=ed,
+            cards_l2=[self.units[i].rows_log2 for i in idxs],
+            sels_l2=sl)
+        return jg, idxs
+
+
+def expand_unit_plan(p: Plan, units: list[Unit], g: JoinGraph) -> Plan:
+    """Substitute unit leaves by their underlying base-relation plans and
+    re-cost canonically on the base graph."""
+
+    def rec(node: Plan) -> Plan:
+        if node.is_leaf:
+            return units[node.relations()[0]].plan
+        l = rec(node.left)
+        r = rec(node.right)
+        return join_plans(l, r, g)
+
+    return cost_plan(rec(p), g)
+
+
+def exact_subsolver(algorithm: str = "mpdp") -> Callable:
+    from ..core import engine
+
+    def solve(jg: JoinGraph) -> Plan:
+        if jg.n == 1:
+            return leaf_plan(0, jg)
+        return engine.optimize(jg, algorithm).plan
+
+    return solve

@@ -1,0 +1,38 @@
+"""GOO — Greedy Operator Ordering (Fegaras '98; paper §6/§7.3 baseline).
+
+Repeatedly joins the connected unit pair with the smallest resulting
+cardinality until one unit remains.  Also serves as the IDP2 seed-plan
+builder (the paper uses GOO for the IDP2 heuristic step).
+"""
+from __future__ import annotations
+
+import time
+
+from ..core.joingraph import JoinGraph
+from ..core.plan import OptimizeResult, Counters, join_plans
+from .common import UnitGraph, expand_unit_plan, cost_plan
+
+
+def goo_plan(ug: UnitGraph):
+    """Run GOO on a UnitGraph in place; returns the final single unit."""
+    while ug.n > 1:
+        if not ug.edges:
+            raise ValueError("disconnected unit graph (cross product needed)")
+        best, best_rows = None, None
+        for (a, b) in ug.edges:
+            r = ug.join_rows_log2(a, b)
+            if best is None or r < best_rows:
+                best, best_rows = (a, b), r
+        a, b = best
+        p = join_plans(ug.units[a].plan, ug.units[b].plan, ug.base)
+        ug.merge([a, b], p)
+    return ug.units[0]
+
+
+def solve(g: JoinGraph) -> OptimizeResult:
+    t0 = time.perf_counter()
+    ug = UnitGraph(g)
+    u = goo_plan(ug)
+    p = cost_plan(u.plan, g)
+    return OptimizeResult(plan=p, cost=p.cost, counters=Counters(),
+                          algorithm="goo", wall_s=time.perf_counter() - t0)

@@ -1,0 +1,226 @@
+"""IDP2 (Kossmann & Stocker, TODS'00) with MPDP inside — paper §4.1.
+
+Two components, exactly as in the paper:
+ 1. *Initial join order*: a GOO plan over the unit graph.
+ 2. *Iterative DP*: repeatedly select the most costly subtree with <= k
+    leaves, optimize its units exactly (MPDP by default — the paper's point
+    is that a massively-parallel exact core affords a much larger k),
+    replace it by a single temp-table unit, and continue until one unit
+    remains.  Composite cardinalities stay exact (log2 bookkeeping), so the
+    search is over materialization boundaries only.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+from ..core import bitset as bs
+from ..core.joingraph import JoinGraph
+from ..core.plan import Counters, OptimizeResult, cost_plan
+from ..core import cost as cm
+from .common import UnitGraph, exact_subsolver
+from .goo import goo_plan
+
+
+class _TNode:
+    """Plan-over-units tree with cached unit-id set and cost."""
+
+    __slots__ = ("uids", "left", "right", "cost", "rows_l2", "unit")
+
+    def __init__(self, uids, left=None, right=None, unit=None):
+        self.uids = uids          # frozenset of unit ids
+        self.left = left
+        self.right = right
+        self.unit = unit          # Unit for leaves
+        self.cost = 0.0
+        self.rows_l2 = 0.0
+
+    @property
+    def is_leaf(self):
+        return self.left is None
+
+    def leaves(self):
+        if self.is_leaf:
+            return [self]
+        return self.left.leaves() + self.right.leaves()
+
+
+def _goo_tree(ug: UnitGraph) -> _TNode:
+    """GOO merge tree over unit ids (non-destructive: works on id sets)."""
+    active: dict[int, _TNode] = {i: _TNode(frozenset([i]), unit=ug.units[i])
+                                 for i in range(ug.n)}
+    # aggregated sel between active groups
+    rows = {i: ug.units[i].rows_log2 for i in range(ug.n)}
+    sel: dict[tuple[int, int], float] = dict(ug.sel_l2)
+    gid = ug.n
+    group_of = {i: i for i in range(ug.n)}
+    members: dict[int, list[int]] = {i: [i] for i in range(ug.n)}
+
+    while len(active) > 1:
+        best, best_rows = None, None
+        for (a, b), s in sel.items():
+            r = max(rows[a] + rows[b] + s, 0.0)
+            if best is None or r < best_rows:
+                best, best_rows = (a, b), r
+        if best is None:
+            raise ValueError("disconnected unit graph")
+        a, b = best
+        node = _TNode(active[a].uids | active[b].uids, active[a], active[b])
+        del active[a], active[b]
+        active[gid] = node
+        rows[gid] = best_rows
+        members[gid] = members[a] + members[b]
+        # re-aggregate edges touching a or b
+        new_sel: dict[tuple[int, int], float] = {}
+        for (x, y), s in sel.items():
+            if (x, y) == (a, b) or (x, y) == (b, a):
+                continue
+            nx = gid if x in (a, b) else x
+            ny = gid if y in (a, b) else y
+            key = (min(nx, ny), max(nx, ny))
+            new_sel[key] = new_sel.get(key, 0.0) + s
+        sel = new_sel
+        gid += 1
+    return next(iter(active.values()))
+
+
+def _recost(node: _TNode, ug: UnitGraph):
+    """Bottom-up cost/rows over the unit graph (temp-table semantics)."""
+    if node.is_leaf:
+        uid = next(iter(node.uids))
+        node.unit = ug.units[uid]
+        node.rows_l2 = ug.units[uid].rows_log2
+        node.cost = float(cm.np_scan_cost(node.rows_l2))
+        return
+    _recost(node.left, ug)
+    _recost(node.right, ug)
+    ids = list(node.uids)
+    node.rows_l2 = ug.union_rows_log2(ids)
+    jc = float(cm.np_join_cost(node.left.rows_l2, node.right.rows_l2,
+                               node.rows_l2))
+    node.cost = node.left.cost + node.right.cost + jc
+
+
+def _most_costly_subtree(root: _TNode, k: int) -> _TNode:
+    best = None
+
+    def rec(n: _TNode):
+        nonlocal best
+        if n.is_leaf:
+            return
+        if 2 <= len(n.uids) <= k and (best is None or n.cost > best.cost):
+            best = n
+        rec(n.left)
+        rec(n.right)
+
+    rec(root)
+    if best is None:
+        # root has > k leaves but no internal node within k: take the
+        # smallest internal node (its leaf count may still exceed k; clamp
+        # by walking down)
+        n = root
+        while not n.is_leaf and len(n.uids) > k:
+            n = n.left if len(n.left.uids) >= len(n.right.uids) else n.right
+        best = n if not n.is_leaf else root
+    return best
+
+
+def _replace(root: _TNode, target: _TNode, leaf: _TNode) -> _TNode:
+    if root is target:
+        return leaf
+    if root.is_leaf:
+        return root
+    root.left = _replace(root.left, target, leaf)
+    root.right = _replace(root.right, target, leaf)
+    root.uids = root.left.uids | root.right.uids
+    return root
+
+
+def solve(g: JoinGraph, k: int = 15, subsolver: str = "mpdp",
+          max_rounds: Optional[int] = None) -> OptimizeResult:
+    t0 = time.perf_counter()
+    counters = Counters()
+    if subsolver == "lindp":
+        from . import lindp as _l
+
+        def sub(jg):
+            order = _l.ikkbz.best_order(jg)
+            p, _ = _l.dp_over_order(jg, order)
+            return p
+    else:
+        from ..core import engine as _e
+
+        def sub(jg):
+            if jg.n == 1:
+                from ..core.plan import leaf_plan
+                return leaf_plan(0, jg)
+            r = _e.optimize(jg, subsolver)
+            counters.evaluated += r.counters.evaluated
+            counters.ccp += r.counters.ccp
+            return r.plan
+
+    ug = UnitGraph(g)
+    if ug.n <= k:
+        jg, idxs = ug.as_joingraph()
+        from .common import expand_unit_plan
+        p = expand_unit_plan(sub(jg), [ug.units[i] for i in idxs], g)
+        return OptimizeResult(plan=p, cost=p.cost, counters=counters,
+                              algorithm=f"idp2_{subsolver}",
+                              wall_s=time.perf_counter() - t0)
+
+    tree = _goo_tree(ug)
+    rounds = 0
+    # unit-id indirection: _TNode.uids refer to slots in ug.units; merging
+    # rewrites ug.units, so we rebuild uid maps via relsets after each merge
+    while True:
+        _recost(tree, ug)
+        if ug.n == 1:
+            break
+        target = _most_costly_subtree(tree, k)
+        ids = sorted(target.uids)
+        if len(ids) == len(tree.uids) and len(ids) <= k:
+            target = tree
+        jg, idxs = ug.as_joingraph(ids)
+        from .common import expand_unit_plan
+        base_plan = expand_unit_plan(sub(jg), [ug.units[i] for i in idxs], g)
+        ug.merge(ids, base_plan)
+        # ug.units reindexed: composite appended at end, others shift.
+        old2new = {}
+        j = 0
+        dropped = set(ids)
+        for old in range(len(ug.units) + len(ids) - 1):
+            if old in dropped:
+                continue
+            old2new[old] = j
+            j += 1
+        new_leaf = _TNode(frozenset([len(ug.units) - 1]),
+                          unit=ug.units[-1])
+        tree = _replace(tree, target, new_leaf)
+
+        def remap(n: _TNode):
+            if n is new_leaf:
+                return
+            if n.is_leaf:
+                n.uids = frozenset(old2new[u] for u in n.uids)
+                return
+            remap(n.left)
+            remap(n.right)
+            n.uids = n.left.uids | n.right.uids
+
+        remap(tree)
+        rounds += 1
+        if max_rounds and rounds >= max_rounds:
+            break
+        if len(tree.uids) == 1 and tree.is_leaf:
+            break
+
+    # final plan: the single remaining unit's base plan
+    final_unit = ug.units[-1] if ug.n > 1 else ug.units[0]
+    if ug.n > 1:
+        # stopped early (max_rounds): finish greedily with GOO
+        from .goo import goo_plan as _gp
+        final_unit = _gp(ug)
+    p = cost_plan(final_unit.plan, g)
+    return OptimizeResult(plan=p, cost=p.cost, counters=counters,
+                          algorithm=f"idp2_{subsolver}",
+                          wall_s=time.perf_counter() - t0)

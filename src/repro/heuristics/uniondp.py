@@ -1,0 +1,97 @@
+"""UnionDP — the paper's novel graph-conscious heuristic (§4.2, Alg. 4).
+
+Partition the unit graph with a union-find sweep that visits edges in
+increasing ``size(left partition) + size(right partition)`` (ties: cheaper
+edge weight first, so expensive joins end up as cut edges and are applied
+late), unioning while the merged partition stays <= k.  Each partition is
+optimized exactly with MPDP, becomes a composite node, and the procedure
+recurses on the composite graph until it fits a single MPDP call.
+"""
+from __future__ import annotations
+
+import heapq
+import time
+
+import numpy as np
+
+from ..core import cost as cm
+from ..core.joingraph import JoinGraph
+from ..core.plan import Counters, OptimizeResult, cost_plan
+from .common import UnitGraph, expand_unit_plan
+
+
+def _partition(ug: UnitGraph, k: int) -> list[list[int]]:
+    n = ug.n
+    parent = list(range(n))
+    size = [1] * n
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    def weight(a, b):
+        ra = ug.units[a].rows_log2
+        rb = ug.units[b].rows_log2
+        ro = ug.join_rows_log2(a, b)
+        return float(cm.np_join_cost(np.float32(ra), np.float32(rb),
+                                     np.float32(ro)))
+
+    heap = []
+    for (a, b) in ug.edges:
+        heapq.heappush(heap, (2, weight(a, b), a, b))
+    while heap:
+        ssum, w, a, b = heapq.heappop(heap)
+        ra, rb = find(a), find(b)
+        if ra == rb:
+            continue
+        cur = size[ra] + size[rb]
+        if cur != ssum:
+            heapq.heappush(heap, (cur, w, a, b))   # lazy key refresh
+            continue
+        if cur <= k:
+            parent[ra] = rb
+            size[rb] = cur
+    groups: dict[int, list[int]] = {}
+    for i in range(n):
+        groups.setdefault(find(i), []).append(i)
+    return list(groups.values())
+
+
+def solve(g: JoinGraph, k: int = 15, subsolver: str = "mpdp") -> OptimizeResult:
+    t0 = time.perf_counter()
+    counters = Counters()
+    from ..core import engine as _e
+    from ..core.plan import leaf_plan
+
+    def sub(jg):
+        if jg.n == 1:
+            return leaf_plan(0, jg)
+        r = _e.optimize(jg, subsolver)
+        counters.evaluated += r.counters.evaluated
+        counters.ccp += r.counters.ccp
+        return r.plan
+
+    ug = UnitGraph(g)
+    while ug.n > k:
+        groups = _partition(ug, k)
+        if all(len(gr) == 1 for gr in groups):
+            # cannot union anything (all merges would exceed k): force the
+            # two cheapest-connected groups together to guarantee progress
+            a, b = ug.edges[0]
+            groups = [[a, b]] + [[i] for i in range(ug.n) if i not in (a, b)]
+        # capture unit objects up-front: each merge reindexes ug.units
+        merge_units = [[ug.units[i] for i in gr] for gr in groups if len(gr) >= 2]
+        for ulist in merge_units:
+            ids = [next(j for j, u in enumerate(ug.units) if u is t) for t in ulist]
+            ids.sort()
+            jg, idxs = ug.as_joingraph(ids)
+            base_plan = expand_unit_plan(sub(jg), [ug.units[i] for i in idxs], g)
+            ug.merge(ids, base_plan)
+    jg, idxs = ug.as_joingraph()
+    p = expand_unit_plan(sub(jg), [ug.units[i] for i in idxs], g)
+    p = cost_plan(p, g)
+    return OptimizeResult(plan=p, cost=p.cost, counters=counters,
+                          algorithm=f"uniondp_{subsolver}",
+                          wall_s=time.perf_counter() - t0)

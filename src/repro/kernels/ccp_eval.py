@@ -1,0 +1,162 @@
+"""Pallas TPU kernel for the evaluate-phase bit-twiddling hot spot.
+
+The paper's GPU *evaluate* phase (warp per set, thread per Join-Pair,
+Collaborative Context Collection against divergence) becomes a dense VPU
+kernel: lanes are tiled (ROWS x 128) int32 blocks in VMEM; the adjacency
+bitmaps live in SMEM via scalar prefetch and are combined with the lane
+vectors through a static NMAX-step select-OR loop (no gathers, no
+divergence — masked lanes are the TPU-native CCC).
+
+Per lane (DPSUB/MPDP-general inner enumeration):
+    lb   = pdep(sub, S)            # bit-deposit enumeration index onto S
+    rb   = S & ~lb
+    ccp  = lb,rb nonempty & connected(lb) & connected(rb) & cross-edge(lb,rb)
+grow(lb | rb) runs as a fixed NMAX-sweep frontier expansion.
+
+The matching pure-jnp oracle is kernels/ref.py; ops.py wraps pallas_call
+(interpret=True on CPU — this container validates semantics, TPU is the
+performance target).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128      # TPU vector lane width
+SUBLANE = 8     # int32 sublane tile
+
+
+def _neighbors_smem(cur, adj_ref, nmax: int):
+    """OR_{v in cur} adj[v] with adj in SMEM: static select-OR loop."""
+    acc = jnp.zeros_like(cur)
+    for v in range(nmax):
+        a_v = adj_ref[v]                      # scalar read (SMEM)
+        take = ((cur >> v) & 1) != 0
+        acc = jnp.where(take, acc | a_v, acc)
+    return acc
+
+
+def _grow_block(src, restrict, adj_ref, nmax: int):
+    cur = src & restrict
+    for _ in range(nmax):                     # diameter-bounded sweeps
+        cur = (cur | _neighbors_smem(cur, adj_ref, nmax)) & restrict
+    return cur
+
+
+def _lsb(x):
+    return x & (~x + jnp.int32(1))
+
+
+def _pdep_block(rank, mask, nmax: int):
+    out = jnp.zeros_like(mask)
+    k = jnp.zeros_like(mask)
+    for b in range(nmax):
+        mbit = (mask >> b) & 1
+        take = (rank >> k) & 1                # vector-by-vector shift
+        out = out | (((mbit & take) != 0).astype(jnp.int32) << b)
+        k = k + mbit
+    return out
+
+
+def ccp_eval_kernel(adj_ref, s_ref, sub_ref, lb_ref, rb_ref, ccp_ref,
+                    *, nmax: int):
+    """One (ROWS, LANE) block of lanes."""
+    S = s_ref[...]
+    sub = sub_ref[...]
+    lb = _pdep_block(sub, S, nmax)
+    rb = S & ~lb
+    conn_l = _grow_block(_lsb(lb), lb, adj_ref, nmax) == lb
+    conn_r = _grow_block(_lsb(rb), rb, adj_ref, nmax) == rb
+    cross = (_neighbors_smem(lb, adj_ref, nmax) & rb) != 0
+    ccp = (lb != 0) & (rb != 0) & conn_l & conn_r & cross
+    lb_ref[...] = lb
+    rb_ref[...] = rb
+    ccp_ref[...] = ccp.astype(jnp.int32)
+
+
+def connectivity_kernel(adj_ref, s_ref, conn_ref, *, nmax: int):
+    """Filter-phase block: is G[S] connected, per lane."""
+    S = s_ref[...]
+    reach = _grow_block(_lsb(S), S, adj_ref, nmax)
+    conn_ref[...] = (reach == S).astype(jnp.int32)
+
+
+def grow_pair_kernel(adj_ref, s_ref, lb_ref, rb_ref, sl_ref, sr_ref,
+                     *, nmax: int):
+    """MPDP-general: grow the block-level seed (lb, rb) to (S_left, S_right)."""
+    S = s_ref[...]
+    lb = lb_ref[...]
+    rb = rb_ref[...]
+    sl = _grow_block(lb, S & ~rb, adj_ref, nmax)
+    sl_ref[...] = sl
+    sr_ref[...] = S & ~sl
+
+
+def _pad2d(x, rows_blk: int):
+    n = x.shape[0]
+    rows = -(-n // LANE)
+    rows_pad = -(-rows // rows_blk) * rows_blk
+    flat = jnp.zeros(rows_pad * LANE, x.dtype).at[:n].set(x)
+    return flat.reshape(rows_pad, LANE), n
+
+
+@functools.partial(jax.jit, static_argnames=("nmax", "rows_blk", "interpret"))
+def ccp_eval(S, sub, adj, *, nmax: int, rows_blk: int = 32,
+             interpret: bool = True):
+    """(L,) int32 lanes -> (lb, rb, ccp int32) via the Pallas kernel."""
+    S2, n = _pad2d(S, rows_blk)
+    sub2, _ = _pad2d(sub, rows_blk)
+    rows = S2.shape[0]
+    grid = (rows // rows_blk,)
+    blk = pl.BlockSpec((rows_blk, LANE), lambda i, *_: (i, 0))
+    out_shape = [jax.ShapeDtypeStruct((rows, LANE), jnp.int32)] * 3
+    lb, rb, ccp = pl.pallas_call(
+        functools.partial(ccp_eval_kernel, nmax=nmax),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=grid,
+            in_specs=[blk, blk], out_specs=[blk, blk, blk]),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(adj, S2, sub2)
+    return (lb.reshape(-1)[:n], rb.reshape(-1)[:n], ccp.reshape(-1)[:n])
+
+
+@functools.partial(jax.jit, static_argnames=("nmax", "rows_blk", "interpret"))
+def connectivity(S, adj, *, nmax: int, rows_blk: int = 32,
+                 interpret: bool = True):
+    S2, n = _pad2d(S, rows_blk)
+    rows = S2.shape[0]
+    blk = pl.BlockSpec((rows_blk, LANE), lambda i, *_: (i, 0))
+    conn = pl.pallas_call(
+        functools.partial(connectivity_kernel, nmax=nmax),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=(rows // rows_blk,),
+            in_specs=[blk], out_specs=blk),
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.int32),
+        interpret=interpret,
+    )(adj, S2)
+    return conn.reshape(-1)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("nmax", "rows_blk", "interpret"))
+def grow_pair(S, lb, rb, adj, *, nmax: int, rows_blk: int = 32,
+              interpret: bool = True):
+    S2, n = _pad2d(S, rows_blk)
+    lb2, _ = _pad2d(lb, rows_blk)
+    rb2, _ = _pad2d(rb, rows_blk)
+    rows = S2.shape[0]
+    blk = pl.BlockSpec((rows_blk, LANE), lambda i, *_: (i, 0))
+    out_shape = [jax.ShapeDtypeStruct((rows, LANE), jnp.int32)] * 2
+    sl, sr = pl.pallas_call(
+        functools.partial(grow_pair_kernel, nmax=nmax),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=(rows // rows_blk,),
+            in_specs=[blk, blk, blk], out_specs=[blk, blk]),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(adj, S2, lb2, rb2)
+    return sl.reshape(-1)[:n], sr.reshape(-1)[:n]

@@ -1,0 +1,33 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On this CPU container the kernels execute with ``interpret=True`` (Pallas
+interprets the kernel body in Python/XLA — semantics identical, perf not
+representative).  On a real TPU set ``REPRO_PALLAS_INTERPRET=0``.
+``use_pallas()`` gates the engine integration: the XLA lane path stays the
+CPU default; REPRO_PALLAS=1 routes the evaluate phase through these kernels.
+"""
+from __future__ import annotations
+
+import os
+
+from . import ccp_eval as _k
+
+
+def interpret_mode() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def use_pallas() -> bool:
+    return os.environ.get("REPRO_PALLAS", "0") == "1"
+
+
+def ccp_eval(S, sub, adj, nmax: int):
+    return _k.ccp_eval(S, sub, adj, nmax=nmax, interpret=interpret_mode())
+
+
+def connectivity(S, adj, nmax: int):
+    return _k.connectivity(S, adj, nmax=nmax, interpret=interpret_mode())
+
+
+def grow_pair(S, lb, rb, adj, nmax: int):
+    return _k.grow_pair(S, lb, rb, adj, nmax=nmax, interpret=interpret_mode())

@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for the Pallas kernels (bit-exact reference)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core import bitset as bs
+
+
+def ccp_eval_ref(S, sub, adj, nmax: int):
+    lb = bs.pdep(sub, S, nmax)
+    rb = S & ~lb
+    conn_l = bs.is_connected(lb, adj)
+    conn_r = bs.is_connected(rb, adj)
+    cross = (bs.neighbors(lb, adj) & rb) != 0
+    ccp = (lb != 0) & (rb != 0) & conn_l & conn_r & cross
+    return lb, rb, ccp.astype(jnp.int32)
+
+
+def connectivity_ref(S, adj, nmax: int):
+    return bs.is_connected(S, adj).astype(jnp.int32)
+
+
+def grow_pair_ref(S, lb, rb, adj, nmax: int):
+    sl = bs.grow(lb, S & ~rb, adj)
+    return sl, S & ~sl

@@ -1,0 +1,208 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count on first init).  Everything below may import jax.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell on the production meshes, record memory/cost analysis + the
+collective schedule, and emit the roofline table inputs.
+
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch ID] [--shape NAME]
+        [--mesh single|multi|both] [--out results/dryrun.json]
+
+Results are cached incrementally: finished cells are skipped on re-run.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES
+from repro.models import api
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_production_mesh
+from repro.launch import roofline as rf
+
+
+def _zeros_spec_tree(tree):
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree)
+
+
+def lower_cell(cfg, shape, mesh, kind):
+    """Returns (lowered, in-tree description) for one cell."""
+    if kind == "train":
+        pspec = api.param_specs(cfg)
+        state_spec = {"params": pspec, "m": pspec, "v": pspec,
+                      "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        batch_spec = api.input_specs(cfg, shape)
+        state_sh = shd.state_shardings(state_spec, mesh)
+        batch_sh = shd.batch_shardings(batch_spec, mesh)
+        # deployable artifact (scan_unroll=0): 8-way scanned gradient
+        # accumulation (bounds the remat stack).  Cost variants: a single
+        # full-batch pass — identical flop/byte totals, 8x smaller graphs.
+        mb = 1 if cfg.scan_unroll else (8 if shape.global_batch % 8 == 0 else 1)
+        step_fn = api.make_train_step(cfg, microbatches=mb,
+                                      mb_scan=not cfg.scan_unroll)
+        jf = jax.jit(step_fn, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, shd.replicated(mesh)),
+                     donate_argnums=(0,))
+        return jf.lower(state_spec, batch_spec)
+    if kind == "prefill":
+        pspec = api.param_specs(cfg)
+        batch_spec = api.input_specs(cfg, shape)
+        fn = api.make_prefill_step(cfg)
+        jf = jax.jit(fn,
+                     in_shardings=(shd.param_shardings(pspec, mesh),
+                                   shd.batch_shardings(batch_spec, mesh)),
+                     out_shardings=shd.logits_sharding(mesh, cfg.vocab,
+                                                       shape.global_batch))
+        return jf.lower(pspec, batch_spec)
+    # decode
+    pspec = api.param_specs(cfg)
+    cache_spec = api.cache_specs(cfg, shape)
+    tok_spec = api.input_specs(cfg, shape)["token"]
+    fn = api.make_serve_step(cfg)
+    cache_sh = shd.cache_shardings(cache_spec, mesh)
+    jf = jax.jit(fn,
+                 in_shardings=(shd.param_shardings(pspec, mesh), cache_sh,
+                               shd.batch_shardings({"t": tok_spec}, mesh)["t"],
+                               shd.replicated(mesh)),
+                 out_shardings=(shd.logits_sharding(mesh, cfg.vocab,
+                                                    shape.global_batch),
+                                cache_sh),
+                 donate_argnums=(1,))
+    return jf.lower(pspec, cache_spec, tok_spec,
+                    jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def _measure(cfg, shape, mesh, unroll: int):
+    """Lower+compile one variant; return metrics dict."""
+    from repro.distributed import ctx
+    from repro.launch.mesh import dp_axes
+    cfgu = dataclasses.replace(cfg, scan_unroll=unroll)
+    with mesh, ctx.use(mesh, dp_axes(mesh)):
+        t0 = time.time()
+        lowered = lower_cell(cfgu, shape, mesh, shape.kind)
+        lower_s = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t1
+        mem = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        txt = compiled.as_text()
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "collectives": rf.collective_bytes(txt),
+        "memory": {k: int(getattr(mem, k, 0) or 0)
+                   for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                             "temp_size_in_bytes",
+                             "generated_code_size_in_bytes")},
+        "lower_s": round(lower_s, 1), "compile_s": round(compile_s, 1),
+    }
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_name: str) -> dict:
+    """Two-point unroll extrapolation: XLA's cost_analysis counts while-loop
+    bodies ONCE (trip counts ignored), so we compile the cell at layer-scan
+    unroll u=1 and u=2 and extrapolate linearly to the full trip count G:
+        metric(G) = f(1) + (G - 1) * (f(2) - f(1)).
+    Attention block loops are statically unrolled (with true causal/window
+    block skipping) in both variants, so per-layer attention flops are exact.
+    memory_analysis comes from the u=1 artifact (the deployable scan form).
+    """
+    cfg = api.get_config(arch_id)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    chips = int(np.prod(list(mesh.shape.values())))
+    rec = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+           "chips": chips}
+    if shape_name == "long_500k" and cfg.skip_long:
+        rec["status"] = "skipped"
+        rec["reason"] = ("pure full-attention arch; long_500k needs "
+                         "sub-quadratic (DESIGN.md §Arch-applicability)")
+        return rec
+    G = api.scan_trips(cfg)
+    f0 = _measure(cfg, shape, mesh, unroll=0)   # deployable artifact: memory
+    f1 = _measure(cfg, shape, mesh, unroll=1)
+    f2 = _measure(cfg, shape, mesh, unroll=2)
+
+    def extrap(a, b):
+        return a + (G - 1) * max(b - a, 0.0)
+
+    flops = extrap(f1["flops"], f2["flops"])
+    bytes_acc = extrap(f1["bytes_accessed"], f2["bytes_accessed"])
+    coll = {k: extrap(f1["collectives"][k], f2["collectives"][k])
+            for k in f1["collectives"]}
+    rec["scan_trips"] = G
+    rec["lower_s"] = f0["lower_s"] + f1["lower_s"] + f2["lower_s"]
+    rec["compile_s"] = f0["compile_s"] + f1["compile_s"] + f2["compile_s"]
+    rec["memory"] = f0["memory"]
+    rec["flops"] = flops
+    rec["bytes_accessed"] = bytes_acc
+    rec["collectives"] = coll
+    rec["u1"] = {k: f1[k] for k in ("flops", "bytes_accessed")}
+    rec["roofline"] = rf.roofline_terms(flops, bytes_acc, coll["total"], chips)
+    mf = rf.model_flops(cfg, shape)
+    rec["model_flops"] = mf
+    rec["useful_compute_ratio"] = (mf / chips / flops) if flops else None
+    rec["status"] = "ok"
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = {}
+    if os.path.exists(args.out) and not args.force:
+        with open(args.out) as f:
+            results = json.load(f)
+
+    archs = [args.arch] if args.arch else api.ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    for arch in archs:
+        for shape in shapes:
+            for mesh_name in meshes:
+                key = f"{arch}|{shape}|{mesh_name}"
+                if key in results and results[key].get("status") in ("ok", "skipped") \
+                        and not args.force:
+                    continue
+                print(f"=== {key} ===", flush=True)
+                try:
+                    rec = run_cell(arch, shape, mesh_name)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                           "status": "error", "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                    print(rec["error"], flush=True)
+                results[key] = rec
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+                if rec.get("status") == "ok":
+                    r = rec["roofline"]
+                    print(f"  ok lower={rec['lower_s']}s compile={rec['compile_s']}s "
+                          f"flops={rec['flops']:.3g} coll={rec['collectives']['total']:.3g}B "
+                          f"bottleneck={r['bottleneck']}", flush=True)
+
+    ok = sum(1 for r in results.values() if r.get("status") == "ok")
+    sk = sum(1 for r in results.values() if r.get("status") == "skipped")
+    er = sum(1 for r in results.values() if r.get("status") == "error")
+    print(f"DONE ok={ok} skipped={sk} error={er}")
+
+
+if __name__ == "__main__":
+    main()

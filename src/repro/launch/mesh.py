@@ -1,0 +1,35 @@
+"""Production mesh builders.
+
+Single pod: (16, 16) = (data, model) — 256 chips (TPU v5e pod).
+Multi-pod:  (2, 16, 16) = (pod, data, model) — 512 chips; the thin `pod`
+axis composes with `data` for batch/gradient reduction (DCN-side), `model`
+stays intra-pod (ICI-side).
+
+Functions, not module constants: importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    return jax.make_mesh(
+        shape, axes, devices=jax.devices()[:n],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape=(1, 1), axes=("data", "model")):
+    """Tiny mesh for CPU smoke tests (1 real device)."""
+    n = int(np.prod(shape))
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n],
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def dp_axes(mesh) -> tuple:
+    """Axes used for batch/data parallelism on this mesh."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)

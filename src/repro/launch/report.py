@@ -1,0 +1,70 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from dryrun.json.
+
+    PYTHONPATH=src python -m repro.launch.report [results/dryrun.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:7.2f}s"
+    if x >= 1e-3:
+        return f"{1e3*x:6.2f}ms"
+    return f"{1e6*x:6.1f}us"
+
+
+def render(path="results/dryrun.json", mesh="single", fh=sys.stdout):
+    data = json.load(open(path))
+    rows = []
+    for k, v in sorted(data.items()):
+        if v.get("mesh") != mesh:
+            continue
+        if v.get("status") == "skipped":
+            rows.append((v["arch"], v["shape"], "skipped", "", "", "", "", "", ""))
+            continue
+        if v.get("status") != "ok":
+            rows.append((v["arch"], v["shape"], "ERROR", "", "", "", "", "", ""))
+            continue
+        r = v["roofline"]
+        dom = r["bottleneck"].replace("_s", "")
+        ucr = v.get("useful_compute_ratio")
+        rows.append((
+            v["arch"], v["shape"], dom,
+            fmt_s(r["compute_s"]), fmt_s(r["memory_s"]), fmt_s(r["collective_s"]),
+            f"{v['memory']['temp_size_in_bytes']/1e9:.1f}G",
+            f"{ucr:.2f}" if ucr else "-",
+            f"{v['compile_s']:.0f}s",
+        ))
+    hdr = ("arch", "shape", "bound", "compute", "memory", "collective",
+           "temp", "useful", "compile")
+    widths = [max(len(str(r[i])) for r in rows + [hdr]) for i in range(len(hdr))]
+    line = " | ".join(h.ljust(w) for h, w in zip(hdr, widths))
+    print(line, file=fh)
+    print("-" * len(line), file=fh)
+    for r in rows:
+        print(" | ".join(str(c).ljust(w) for c, w in zip(r, widths)), file=fh)
+
+
+def summary(path="results/dryrun.json", fh=sys.stdout):
+    data = json.load(open(path))
+    ok = sum(1 for v in data.values() if v.get("status") == "ok")
+    sk = sum(1 for v in data.values() if v.get("status") == "skipped")
+    er = sum(1 for v in data.values() if v.get("status") == "error")
+    print(f"cells: ok={ok} skipped={sk} error={er}", file=fh)
+    over = [(k, v["memory"]["temp_size_in_bytes"] / 1e9) for k, v in data.items()
+            if v.get("status") == "ok" and v["memory"]["temp_size_in_bytes"] > 16e9]
+    if over:
+        print("over 16GB HBM (temp):", file=fh)
+        for k, g in sorted(over, key=lambda x: -x[1]):
+            print(f"  {k}: {g:.1f} GB", file=fh)
+
+
+if __name__ == "__main__":
+    p = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun.json"
+    summary(p)
+    for m in ("single", "multi"):
+        print(f"\n=== mesh: {m} ===")
+        render(p, m)

@@ -1,0 +1,194 @@
+"""Model registry + uniform step/spec builders for every assigned arch.
+
+``build_model(cfg)`` returns an object with: init_params, loss,
+decode_step/init_cache (except pure-train archs), and this module provides
+``input_specs(cfg, shape)`` (ShapeDtypeStruct stand-ins, the dry-run
+currency) plus ``make_train_step`` / ``make_serve_step``.
+"""
+from __future__ import annotations
+
+import importlib
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeSpec, SHAPES
+
+ARCH_IDS = [
+    "gemma3_12b", "starcoder2_3b", "granite_3_8b", "codeqwen15_7b",
+    "llava_next_34b", "mamba2_370m", "recurrentgemma_9b",
+    "seamless_m4t_medium", "deepseek_v2_lite", "phi35_moe",
+]
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.CONFIG
+
+
+def scan_trips(cfg: ArchConfig) -> int:
+    """Trip count of the layer scan(s).  All loops in one model share it
+    (encdec: enc_layers == dec_layers), which the dry-run's two-point unroll
+    extrapolation relies on."""
+    if cfg.family == "ssm":
+        return cfg.n_layers
+    if cfg.family == "hybrid":
+        return cfg.n_layers // len(cfg.block_pattern)
+    if cfg.family == "encdec":
+        assert cfg.enc_layers == cfg.dec_layers
+        return cfg.enc_layers
+    return (cfg.n_layers - cfg.dense_head_layers) // len(cfg.window_pattern)
+
+
+def build_model(cfg: ArchConfig):
+    if cfg.family in ("dense", "vlm", "moe"):
+        from .transformer import TransformerLM
+        return TransformerLM(cfg)
+    if cfg.family == "ssm":
+        from .ssm import Mamba2LM
+        return Mamba2LM(cfg)
+    if cfg.family == "hybrid":
+        from .griffin import GriffinLM
+        return GriffinLM(cfg)
+    if cfg.family == "encdec":
+        from .encdec import EncDecLM
+        return EncDecLM(cfg)
+    raise ValueError(cfg.family)
+
+
+# -------------------------------------------------------------- input specs --
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of (arch, shape)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        if cfg.family == "encdec":
+            return {"frames": jax.ShapeDtypeStruct((B, min(S, cfg.src_frames), cfg.frame_dim), jnp.bfloat16),
+                    "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                    "targets": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.family == "vlm":
+            st = S - cfg.n_patches
+            return {"patch_embeds": jax.ShapeDtypeStruct((B, cfg.n_patches, cfg.patch_dim), jnp.bfloat16),
+                    "tokens": jax.ShapeDtypeStruct((B, st), i32),
+                    "targets": jax.ShapeDtypeStruct((B, st), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "targets": jax.ShapeDtypeStruct((B, S), i32)}
+    if shape.kind == "prefill":
+        if cfg.family == "encdec":
+            return {"frames": jax.ShapeDtypeStruct((B, min(S, cfg.src_frames), cfg.frame_dim), jnp.bfloat16),
+                    "tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.family == "vlm":
+            return {"patch_embeds": jax.ShapeDtypeStruct((B, cfg.n_patches, cfg.patch_dim), jnp.bfloat16),
+                    "tokens": jax.ShapeDtypeStruct((B, S - cfg.n_patches), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    # decode: one new token against a cache of length S
+    return {"token": jax.ShapeDtypeStruct((B, 1), i32)}
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    model = build_model(cfg)
+    spec = model.cache_spec(shape.global_batch, shape.seq_len)
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s[0], s[1]), spec,
+                        is_leaf=lambda s: isinstance(s, tuple) and isinstance(s[0], tuple))
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    model = build_model(cfg)
+    return jax.eval_shape(lambda r: model.init_params(r),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+# ----------------------------------------------------------------- steps ----
+
+def make_loss_fn(cfg: ArchConfig):
+    model = build_model(cfg)
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    return loss_fn
+
+
+def make_train_step(cfg: ArchConfig, microbatches: int = 1,
+                    mb_scan: bool = True):
+    """(state, batch) -> (state, metrics); state = TrainState pytree.
+
+    microbatches > 1: gradient accumulation, bounding the remat checkpoint
+    stack to batch/microbatches.  mb_scan=True uses a rolled lax.scan (the
+    deployable form); mb_scan=False unrolls a static Python loop — used by
+    the dry-run's flop measurement because XLA cost_analysis ignores loop
+    trip counts.
+    """
+    from ..train.optimizer import adamw_update
+
+    model = build_model(cfg)
+
+    def train_step(state, batch):
+        params, m, v, step = state["params"], state["m"], state["v"], state["step"]
+
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        else:
+            mbs = jax.tree.map(
+                lambda x: x.reshape((microbatches, -1) + x.shape[1:]), batch)
+            if mb_scan:
+                def body(carry, mb):
+                    loss_a, grads_a = carry
+                    li, gi = jax.value_and_grad(model.loss)(params, mb)
+                    return (loss_a + li,
+                            jax.tree.map(jnp.add, grads_a, gi)), None
+
+                zero = (jnp.float32(0.0),
+                        jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                     params))
+                (loss, grads), _ = jax.lax.scan(body, zero, mbs)
+            else:
+                def slice_mb(i):
+                    return jax.tree.map(lambda x: x[i], mbs)
+
+                loss, grads = jax.value_and_grad(model.loss)(params, slice_mb(0))
+                for i in range(1, microbatches):
+                    li, gi = jax.value_and_grad(model.loss)(params, slice_mb(i))
+                    loss = loss + li
+                    grads = jax.tree.map(jnp.add, grads, gi)
+            inv = 1.0 / microbatches
+            loss = loss * inv
+            grads = jax.tree.map(lambda g: g * inv, grads)
+        params, m, v = adamw_update(params, grads, m, v, step,
+                                    lr=3e-4, wd=0.01)
+        new_state = {"params": params, "m": m, "v": v, "step": step + 1}
+        return new_state, {"loss": loss}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    model = build_model(cfg)
+
+    def prefill(params, batch):
+        if cfg.family == "encdec":
+            enc = model.encode(params, batch["frames"])
+            return model.decode_stack(params, batch["tokens"], enc,
+                                      last_only=True)[:, -1]
+        if cfg.family == "vlm":
+            logits, _ = model.forward(params, batch["tokens"],
+                                      batch.get("patch_embeds"),
+                                      last_only=True)
+            return logits[:, -1]
+        if cfg.family in ("dense", "moe"):
+            logits, _ = model.forward(params, batch["tokens"], last_only=True)
+            return logits[:, -1]
+        return model.forward(params, batch["tokens"], last_only=True)[:, -1]
+
+    return prefill
+
+
+def make_serve_step(cfg: ArchConfig):
+    model = build_model(cfg)
+
+    def serve_step(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+
+    return serve_step

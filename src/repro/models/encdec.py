@@ -1,0 +1,197 @@
+"""Encoder-decoder transformer (SeamlessM4T-medium backbone).
+
+Audio frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, src_frames, frame_dim); a linear projection
+lifts them to d_model.  Decoder: causal self-attn + cross-attn over encoder
+states; decode shapes exercise the target-side KV cache (cross-KV computed
+once at prefill, passed via the cache).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .transformer import _attn_params, _ffn_params, _ffn_apply
+
+
+def _xattn_params(rng, cfg, n: int):
+    D, H, KV, Hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    ks = jax.random.split(rng, 5)
+    return {
+        "wq": L.dense_init(ks[0], (n, D, H * Hd)),
+        "wk": L.dense_init(ks[1], (n, D, KV * Hd)),
+        "wv": L.dense_init(ks[2], (n, D, KV * Hd)),
+        "wo": L.dense_init(ks[3], (n, H * Hd, D)),
+        "ln": jnp.zeros((n, D), jnp.float32),
+    }
+
+
+def _self_attn(p, x, li, cfg, causal, positions, cache=None, cache_len=None):
+    B, S, D = x.shape
+    H, KV, Hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    h = L.rms_norm(x, p["ln"][li])
+    dt = h.dtype
+    q = (h @ p["wq"][li].astype(dt)).reshape(B, S, H, Hd)
+    k = (h @ p["wk"][li].astype(dt)).reshape(B, S, KV, Hd)
+    v = (h @ p["wv"][li].astype(dt)).reshape(B, S, KV, Hd)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    if cache is None:
+        o = L.causal_attention(q, k, v, causal=causal,
+                               static_unroll=bool(cfg.scan_unroll))
+        nc = None
+    else:
+        slot = positions[0, 0]
+        ck = jax.lax.dynamic_update_index_in_dim(cache["k"], k[:, 0], slot, axis=1)
+        cv = jax.lax.dynamic_update_index_in_dim(cache["v"], v[:, 0], slot, axis=1)
+        o = L.decode_attention(q, ck, cv, cache_len + 1)
+        nc = {"k": ck, "v": cv}
+    return x + o.reshape(B, S, H * Hd) @ p["wo"][li].astype(dt), nc
+
+
+def _cross_attn(p, x, li, cfg, enc_kv):
+    """enc_kv: precomputed (k, v) from encoder states: (B, Ssrc, KV, Hd)."""
+    B, S, D = x.shape
+    H, KV, Hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    h = L.rms_norm(x, p["ln"][li])
+    q = (h @ p["wq"][li].astype(h.dtype)).reshape(B, S, H, Hd)
+    k, v = enc_kv
+    o = L.causal_attention(q, k, v, causal=False,
+                           static_unroll=bool(cfg.scan_unroll))
+    return x + o.reshape(B, S, H * Hd) @ p["wo"][li].astype(h.dtype)
+
+
+class EncDecLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def init_params(self, rng):
+        cfg = self.cfg
+        ks = jax.random.split(rng, 10)
+        return {
+            "frame_proj": L.dense_init(ks[0], (cfg.frame_dim, cfg.d_model)),
+            "embed": L.dense_init(ks[1], (cfg.vocab, cfg.d_model), scale=1.0),
+            "enc_attn": _attn_params(ks[2], cfg, cfg.enc_layers),
+            "enc_ffn": _ffn_params(ks[3], cfg, cfg.enc_layers, moe=False),
+            "dec_attn": _attn_params(ks[4], cfg, cfg.dec_layers),
+            "dec_xattn": _xattn_params(ks[5], cfg, cfg.dec_layers),
+            "dec_ffn": _ffn_params(ks[6], cfg, cfg.dec_layers, moe=False),
+            "enc_ln": jnp.zeros((cfg.d_model,), jnp.float32),
+            "final_ln": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+
+    def encode(self, params, frames):
+        cfg = self.cfg
+        x = frames.astype(jnp.bfloat16) @ params["frame_proj"].astype(jnp.bfloat16)
+        B, S, _ = x.shape
+        pos = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+
+        def step(carry, li):
+            x, = carry
+            x, _ = _self_attn(params["enc_attn"], x, li, cfg, causal=False,
+                              positions=pos)
+            x, _ = _ffn_apply(params["enc_ffn"], x, li, cfg, moe=False)
+            return (x,), None
+
+        f = jax.checkpoint(step) if cfg.remat else step
+        (x,), _ = jax.lax.scan(f, (x,), jnp.arange(cfg.enc_layers),
+                               unroll=max(1, int(cfg.scan_unroll)))
+        return L.rms_norm(x, params["enc_ln"])
+
+    def enc_kv(self, params, enc_out):
+        """Per-decoder-layer cross K/V from encoder output."""
+        cfg = self.cfg
+        B, S, D = enc_out.shape
+        KV, Hd = cfg.n_kv, cfg.head_dim
+        px = params["dec_xattn"]
+        h = jax.vmap(lambda ln: L.rms_norm(enc_out, ln))(px["ln"])  # (L,B,S,D)
+        k = jnp.einsum("lbsd,ldk->lbsk", h, px["wk"].astype(h.dtype))
+        v = jnp.einsum("lbsd,ldk->lbsk", h, px["wv"].astype(h.dtype))
+        return (k.reshape(cfg.dec_layers, B, S, KV, Hd),
+                v.reshape(cfg.dec_layers, B, S, KV, Hd))
+
+    def decode_stack(self, params, tokens, enc_out, cache=None, pos0=0,
+                     last_only=False):
+        cfg = self.cfg
+        x = params["embed"].astype(jnp.bfloat16)[tokens] * float(np.sqrt(cfg.d_model))
+        B, S, _ = x.shape
+        pos = pos0 + jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+        ek, ev = self.enc_kv(params, enc_out)
+
+        def step(carry, inp):
+            x, = carry
+            li = inp
+            x, _ = _self_attn(params["dec_attn"], x, li, cfg, causal=True,
+                              positions=pos)
+            x = _cross_attn(params["dec_xattn"], x, li, cfg, (ek[li], ev[li]))
+            x, _ = _ffn_apply(params["dec_ffn"], x, li, cfg, moe=False)
+            return (x,), None
+
+        f = jax.checkpoint(step) if cfg.remat else step
+        (x,), _ = jax.lax.scan(f, (x,), jnp.arange(cfg.dec_layers),
+                               unroll=max(1, int(cfg.scan_unroll)))
+        x = L.rms_norm(x, params["final_ln"])
+        if last_only:
+            x = x[:, -1:]
+        from ..distributed.ctx import hint as _h
+        return _h(x @ params["embed"].astype(x.dtype).T, "logits")
+
+    def loss(self, params, batch):
+        enc = self.encode(params, batch["frames"])
+        logits = self.decode_stack(params, batch["tokens"], enc)
+        tgt = batch["targets"]
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(logits.astype(jnp.float32), tgt[..., None],
+                                   axis=-1)[..., 0]
+        return (lse - gold).mean()
+
+    # ------------------------------------------------------------ decode --
+    def cache_spec(self, B: int, max_len: int):
+        cfg = self.cfg
+        KV, Hd = cfg.n_kv, cfg.head_dim
+        Ld = cfg.dec_layers
+        S = cfg.src_frames
+        return {
+            "k": ((Ld, B, max_len, KV, Hd), jnp.bfloat16),
+            "v": ((Ld, B, max_len, KV, Hd), jnp.bfloat16),
+            "ek": ((Ld, B, S, KV, Hd), jnp.bfloat16),
+            "ev": ((Ld, B, S, KV, Hd), jnp.bfloat16),
+        }
+
+    def init_cache(self, B: int, max_len: int):
+        return jax.tree.map(lambda s: jnp.zeros(s[0], s[1]),
+                            self.cache_spec(B, max_len),
+                            is_leaf=lambda s: isinstance(s, tuple))
+
+    def decode_step(self, params, cache, token, pos):
+        cfg = self.cfg
+        x = params["embed"].astype(jnp.bfloat16)[token] * float(np.sqrt(cfg.d_model))
+        B = token.shape[0]
+        posb = jnp.full((B, 1), pos, jnp.int32)
+
+        def step(carry, inp):
+            x, = carry
+            li, ck, cv, ek, ev = inp
+            x, nc = _self_attn(params["dec_attn"], x, li, cfg, causal=True,
+                               positions=posb, cache={"k": ck, "v": cv},
+                               cache_len=pos)
+            # cross attention against cached encoder K/V (full source)
+            h = L.rms_norm(x, params["dec_xattn"]["ln"][li])
+            q = (h @ params["dec_xattn"]["wq"][li].astype(h.dtype)
+                 ).reshape(B, 1, cfg.n_heads, cfg.head_dim)
+            o = L.decode_attention(q, ek, ev, ek.shape[1])
+            x = x + (o.reshape(B, 1, cfg.n_heads * cfg.head_dim)
+                     @ params["dec_xattn"]["wo"][li].astype(h.dtype))
+            x, _ = _ffn_apply(params["dec_ffn"], x, li, cfg, moe=False)
+            return (x,), (nc["k"], nc["v"])
+
+        (x,), (ks, vs) = jax.lax.scan(
+            step, (x,), (jnp.arange(cfg.dec_layers), cache["k"], cache["v"],
+                         cache["ek"], cache["ev"]),
+            unroll=max(1, int(cfg.scan_unroll)))
+        x = L.rms_norm(x, params["final_ln"])
+        logits = x @ params["embed"].astype(x.dtype).T
+        return logits[:, 0], {"k": ks, "v": vs, "ek": cache["ek"],
+                              "ev": cache["ev"]}

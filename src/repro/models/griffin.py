@@ -1,0 +1,182 @@
+"""RecurrentGemma / Griffin (arXiv:2402.19427): RG-LRU recurrent blocks mixed
+with local MQA attention (pattern rec,rec,attn).  The linear recurrence runs
+as an associative scan (parallel prefix) in training/prefill and as an O(1)
+state update in decode — hence this arch runs long_500k.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from ..distributed.ctx import hint
+from .transformer import _attn_params, _ffn_params, _attn_apply, _ffn_apply
+
+_C = 8.0  # RG-LRU exponent scale
+
+
+def _rglru_scan(x, r, i, lam):
+    """h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t * x_t), a = exp(-c*softplus(L)*r).
+    x/r/i: (B,S,W); lam: (W,) -> associative scan over S."""
+    log_a = -_C * jax.nn.softplus(lam)[None, None, :] * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = (i.astype(jnp.float32) * x.astype(jnp.float32)
+             * jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)))
+
+    def op(ca, cb):
+        a1, b1 = ca
+        a2, b2 = cb
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(op, (a, gated), axis=1)
+    return h.astype(x.dtype)
+
+
+def _rec_params(rng, cfg, n: int):
+    D = cfg.d_model
+    W = cfg.lru_width or D
+    ks = jax.random.split(rng, 6)
+    return {
+        "ln": jnp.zeros((n, D), jnp.float32),
+        "w_x": L.dense_init(ks[0], (n, D, W)),
+        "w_gate": L.dense_init(ks[1], (n, D, 2 * W), scale=0.02),
+        "conv_w": L.dense_init(ks[2], (n, cfg.d_conv, W), scale=0.5),
+        "lam": jnp.full((n, W), 0.5, jnp.float32),
+        "w_out": L.dense_init(ks[3], (n, W, D)),
+    }
+
+
+def _rec_apply(p, x, li, cfg, state=None):
+    """Recurrent block. state: {conv (B,K-1,W), h (B,W)} for decode."""
+    B, S, D = x.shape
+    W = cfg.lru_width or D
+    hx = L.rms_norm(x, p["ln"][li])
+    u = hint(hx @ p["w_x"][li].astype(hx.dtype), "proj")  # (B,S,W)
+    gates = jax.nn.sigmoid((hx @ p["w_gate"][li].astype(hx.dtype))
+                           .astype(jnp.float32))
+    r, i = gates[..., :W], gates[..., W:]
+    w = p["conv_w"][li].astype(u.dtype)
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+        conv = sum(pad[:, k: k + S, :] * w[k] for k in range(K))
+        h = _rglru_scan(conv, r, i, p["lam"][li])
+        out = hint(x + (h * jax.nn.gelu(u)) @ p["w_out"][li].astype(x.dtype), "act")
+        return out, None
+    hist = jnp.concatenate([state["conv"], u], axis=1)
+    conv = jnp.einsum("bkc,kc->bc", hist, w)[:, None, :]
+    log_a = -_C * jax.nn.softplus(p["lam"][li])[None, None, :] * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = (i.astype(jnp.float32) * conv.astype(jnp.float32)
+             * jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)))
+    h_new = a[:, 0] * state["h"] + gated[:, 0]
+    h = h_new[:, None, :].astype(x.dtype)
+    out = x + (h * jax.nn.gelu(u)) @ p["w_out"][li].astype(x.dtype)
+    return out, {"conv": hist[:, 1:], "h": h_new}
+
+
+class GriffinLM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        pat = cfg.block_pattern
+        assert cfg.n_layers % len(pat) == 0, "n_layers must fit pattern"
+        self.n_groups = cfg.n_layers // len(pat)
+        self.pat = pat
+
+    def init_params(self, rng):
+        cfg = self.cfg
+        ks = jax.random.split(rng, 2 + 2 * len(self.pat))
+        params = {
+            "embed": L.dense_init(ks[0], (cfg.vocab, cfg.d_model), scale=1.0),
+            "final_ln": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+        for gi, kind in enumerate(self.pat):
+            if kind == "attn":
+                params[f"mix{gi}"] = _attn_params(ks[1 + 2 * gi], cfg, self.n_groups)
+            else:
+                params[f"mix{gi}"] = _rec_params(ks[1 + 2 * gi], cfg, self.n_groups)
+            params[f"ffn{gi}"] = _ffn_params(ks[2 + 2 * gi], cfg, self.n_groups,
+                                             moe=False)
+        return params
+
+    def forward(self, params, tokens, last_only=False):
+        cfg = self.cfg
+        x = params["embed"].astype(jnp.bfloat16)[tokens] * float(np.sqrt(cfg.d_model))
+        B, S, _ = x.shape
+        pos = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+
+        def step(carry, li):
+            x, = carry
+            for gi, kind in enumerate(self.pat):
+                if kind == "attn":
+                    x, _ = _attn_apply(params[f"mix{gi}"], x, li, cfg, pos,
+                                       cfg.window_pattern[0])
+                else:
+                    x, _ = _rec_apply(params[f"mix{gi}"], x, li, cfg)
+                x, _ = _ffn_apply(params[f"ffn{gi}"], x, li, cfg, moe=False)
+            return (x,), None
+
+        f = jax.checkpoint(step) if cfg.remat else step
+        (x,), _ = jax.lax.scan(f, (x,), jnp.arange(self.n_groups),
+                               unroll=max(1, int(cfg.scan_unroll)))
+        x = L.rms_norm(x, params["final_ln"])
+        if last_only:
+            x = x[:, -1:]
+        return hint(x @ params["embed"].astype(x.dtype).T, "logits")
+
+    def loss(self, params, batch):
+        logits = self.forward(params, batch["tokens"])
+        tgt = batch["targets"]
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(logits.astype(jnp.float32), tgt[..., None],
+                                   axis=-1)[..., 0]
+        return (lse - gold).mean()
+
+    def cache_spec(self, B: int, max_len: int):
+        cfg = self.cfg
+        W = cfg.lru_width or cfg.d_model
+        win = cfg.window_pattern[0] or max_len
+        spec = {}
+        for gi, kind in enumerate(self.pat):
+            n = self.n_groups
+            if kind == "attn":
+                sz = min(win, max_len)
+                spec[f"g{gi}"] = {"k": ((n, B, sz, cfg.n_kv, cfg.head_dim), jnp.bfloat16),
+                                  "v": ((n, B, sz, cfg.n_kv, cfg.head_dim), jnp.bfloat16)}
+            else:
+                spec[f"g{gi}"] = {"conv": ((n, B, cfg.d_conv - 1, W), jnp.bfloat16),
+                                  "h": ((n, B, W), jnp.float32)}
+        return spec
+
+    def init_cache(self, B: int, max_len: int):
+        return jax.tree.map(lambda s: jnp.zeros(s[0], s[1]),
+                            self.cache_spec(B, max_len),
+                            is_leaf=lambda s: isinstance(s, tuple))
+
+    def decode_step(self, params, cache, token, pos):
+        cfg = self.cfg
+        x = params["embed"].astype(jnp.bfloat16)[token] * float(np.sqrt(cfg.d_model))
+        B = token.shape[0]
+        posb = jnp.full((B, 1), pos, jnp.int32)
+
+        def step(carry, inp):
+            x, = carry
+            li, gc = inp
+            upd = {}
+            for gi, kind in enumerate(self.pat):
+                if kind == "attn":
+                    x, nc = _attn_apply(params[f"mix{gi}"], x, li, cfg, posb,
+                                        cfg.window_pattern[0],
+                                        cache=gc[f"g{gi}"], cache_len=pos)
+                else:
+                    x, nc = _rec_apply(params[f"mix{gi}"], x, li, cfg,
+                                       state=gc[f"g{gi}"])
+                x, _ = _ffn_apply(params[f"ffn{gi}"], x, li, cfg, moe=False)
+                upd[f"g{gi}"] = nc
+            return (x,), upd
+
+        (x,), upd = jax.lax.scan(step, (x,), (jnp.arange(self.n_groups), cache),
+                                 unroll=max(1, int(cfg.scan_unroll)))
+        x = L.rms_norm(x, params["final_ln"])
+        return (x @ params["embed"].astype(x.dtype).T)[:, 0], upd

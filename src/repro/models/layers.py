@@ -1,0 +1,287 @@
+"""Shared neural layers: RMSNorm, RoPE, GQA attention (chunked/flash-style,
+local-window, decode), MLA, SwiGLU/GeGLU, MoE dispatch. Pure JAX, params as
+dicts; dtype policy: params f32 (master), compute bf16 unless noted.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..distributed.ctx import hint
+
+ACT = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}
+NEG_INF = -1e30
+
+
+def rms_norm(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, Hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-np.arange(0, half, dtype=np.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq        # (..., S, half)
+    ang = ang[..., None, :]                                       # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention --
+
+def causal_attention(q, k, v, q_offset=0, window: Optional[int] = None,
+                     block: int = 1024, causal: bool = True,
+                     static_unroll: bool = False):
+    """Memory-efficient blocked attention with running logsumexp.
+
+    q: (B, Sq, H, D), k: (B, Sk, KV, D), v: (B, Sk, KV, Dv) — Dv may differ
+    from D (MLA).  q positions are q_offset..q_offset+Sq-1 against kv
+    positions 0..Sk-1.  ``window``: local attention span (None = global).
+    O(Sq * min(Sk, window)) memory.
+
+    static_unroll=True (dry-run costing): block loops become Python loops
+    with TRUE causal/window block skipping, so cost_analysis sees the exact
+    deployable flop count (XLA ignores while-loop trip counts).
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    KV = k.shape[2]
+    Dv = v.shape[-1]
+    G = H // KV
+    if static_unroll:
+        block = max(1024, Sq // 8, Sk // 8)
+    qb = min(block, Sq)
+    kb = min(block, Sk)
+    nq = -(-Sq // qb)
+    nk = -(-Sk // kb)
+    Sqp, Skp = nq * qb, nk * kb
+    qp = jnp.pad(q, ((0, 0), (0, Sqp - Sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Skp - Sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Skp - Sk), (0, 0), (0, 0)))
+    qpos = q_offset + jnp.arange(Sqp)
+    kpos = jnp.arange(Skp)
+
+    def q_block(qi):
+        qblk = jax.lax.dynamic_slice_in_dim(qp, qi * qb, qb, axis=1)
+        qpb = jax.lax.dynamic_slice_in_dim(qpos, qi * qb, qb)
+        qg = qblk.reshape(B, qb, KV, G, D)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            ki_eff = jnp.minimum(ki, nk - 1)
+            kblk = jax.lax.dynamic_slice_in_dim(kp, ki_eff * kb, kb, axis=1)
+            vblk = jax.lax.dynamic_slice_in_dim(vp, ki_eff * kb, kb, axis=1)
+            kpb = jax.lax.dynamic_slice_in_dim(kpos, ki_eff * kb, kb)
+            bias = jnp.where(ki < nk, 0.0, NEG_INF) * jnp.ones((qb, kb), jnp.float32)
+            dpos = qpb[:, None] - kpb[None, :]
+            if causal:
+                bias = jnp.where(dpos >= 0, bias, NEG_INF)
+            if window is not None:
+                bias = jnp.where(dpos < window, bias, NEG_INF)
+            bias = jnp.where(kpb[None, :] < Sk, bias, NEG_INF)
+            s = jnp.einsum("btkgd,bskd->bkgts", qg, kblk).astype(jnp.float32)
+            s = s * (1.0 / np.sqrt(D)) + bias[None, None, None]
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            scale = jnp.exp(m - m_new)
+            l_new = l * scale + jnp.sum(p, axis=-1)
+            acc = acc * scale[..., None] + jnp.einsum(
+                "bkgts,bskd->bkgtd", p.astype(vblk.dtype), vblk).astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, KV, G, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qb), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, qb, Dv), jnp.float32)
+        if window is not None and causal:
+            # only kv blocks overlapping [qpos - window + 1, qpos] matter;
+            # out-of-range ki are masked inside kv_step (never clamped onto
+            # a live block — that would double count)
+            k_lo = jnp.maximum((qi * qb + q_offset - (window - 1) - (kb - 1)) // kb, 0)
+            n_need = (qb + window - 1 + kb - 1) // kb + 1
+            kis = k_lo + jnp.arange(min(n_need, nk))
+        else:
+            kis = jnp.arange(nk)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), kis)
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.transpose(0, 3, 1, 2, 4).reshape(B, qb, H, Dv)
+
+    if static_unroll and isinstance(q_offset, int):
+        # python block loops + true causal/window skipping (exact flops)
+        outs = []
+        for qi in range(nq):
+            q_hi = qi * qb + q_offset + qb - 1
+            if causal:
+                k_hi = min(nk - 1, q_hi // kb)
+            else:
+                k_hi = nk - 1
+            k_lo = 0
+            if window is not None and causal:
+                k_lo = max(0, (qi * qb + q_offset - (window - 1)) // kb)
+            m = jnp.full((B, KV, G, qb), NEG_INF, jnp.float32)
+            l = jnp.zeros((B, KV, G, qb), jnp.float32)
+            acc = jnp.zeros((B, KV, G, qb, Dv), jnp.float32)
+            for ki in range(k_lo, k_hi + 1):
+                (m, l, acc), _ = _unrolled_kv_step(
+                    qp, kp, vp, qpos, kpos, qi, ki, qb, kb, m, l, acc,
+                    B, KV, G, D, Dv, Sk, causal, window)
+            out = acc / jnp.maximum(l[..., None], 1e-30)
+            outs.append(out.transpose(0, 3, 1, 2, 4).reshape(B, qb, H, Dv))
+        return jnp.concatenate(outs, axis=1)[:, :Sq].astype(q.dtype)
+
+    blocks = jax.lax.map(q_block, jnp.arange(nq))
+    out = blocks.transpose(1, 0, 2, 3, 4).reshape(B, Sqp, H, Dv)[:, :Sq]
+    return out.astype(q.dtype)
+
+
+def _unrolled_kv_step(qp, kp, vp, qpos, kpos, qi, ki, qb, kb, m, l, acc,
+                      B, KV, G, D, Dv, Sk, causal, window):
+    """One statically-indexed (qi, ki) attention block (dry-run costing)."""
+    qblk = qp[:, qi * qb: (qi + 1) * qb]
+    qg = qblk.reshape(B, qb, KV, G, D)
+    kblk = kp[:, ki * kb: (ki + 1) * kb]
+    vblk = vp[:, ki * kb: (ki + 1) * kb]
+    qpb = qpos[qi * qb: (qi + 1) * qb]
+    kpb = kpos[ki * kb: (ki + 1) * kb]
+    bias = jnp.zeros((qb, kb), jnp.float32)
+    dpos = qpb[:, None] - kpb[None, :]
+    if causal:
+        bias = jnp.where(dpos >= 0, bias, NEG_INF)
+    if window is not None:
+        bias = jnp.where(dpos < window, bias, NEG_INF)
+    bias = jnp.where(kpb[None, :] < Sk, bias, NEG_INF)
+    s = jnp.einsum("btkgd,bskd->bkgts", qg, kblk).astype(jnp.float32)
+    s = s * (1.0 / np.sqrt(D)) + bias[None, None, None]
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    scale = jnp.exp(m - m_new)
+    l_new = l * scale + jnp.sum(p, axis=-1)
+    acc = acc * scale[..., None] + jnp.einsum(
+        "bkgts,bskd->bkgtd", p.astype(vblk.dtype), vblk).astype(jnp.float32)
+    return (m_new, l_new, acc), None
+
+
+def decode_attention(q, k_cache, v_cache, cache_len):
+    """Single-step decode: q (B,1,H,D) against caches (B,Smax,KV,D[v])."""
+    B, _, H, D = q.shape
+    KV = k_cache.shape[2]
+    Dv = v_cache.shape[-1]
+    G = H // KV
+    qg = q.reshape(B, KV, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache).astype(jnp.float32)
+    s = s * (1.0 / np.sqrt(D))
+    pos = jnp.arange(k_cache.shape[1])
+    s = jnp.where(pos[None, None, None, :] < cache_len, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(B, 1, H, Dv).astype(q.dtype)
+
+
+# --------------------------------------------------------------------- MoE --
+
+def moe_dispatch(x, router_w, n_experts: int, top_k: int, capacity_factor=1.25):
+    """GShard-style token-choice top-k dispatch.
+
+    x: (T, D) -> (dispatch (T, E, C) bool-ish, combine (T, E, C) f32, aux loss)
+    """
+    T = x.shape[0]
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    # floor at 2*top_k so tiny decode batches are effectively dropless
+    cap = int(max(2 * top_k, round(T * top_k * capacity_factor / n_experts)))
+    gates, idx = jax.lax.top_k(probs, top_k)          # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    onehot = jax.nn.one_hot(idx, n_experts, dtype=jnp.float32)   # (T,k,E)
+    # position of each (token, slot) within its expert queue — counted over
+    # the flattened (T*k) stream so slots of different ranks never collide
+    T_, K_ = idx.shape
+    oh_flat = onehot.reshape(T_ * K_, n_experts)
+    pos = jnp.cumsum(oh_flat, axis=0) - oh_flat
+    pos = jnp.einsum("te,te->t", pos, oh_flat).reshape(T_, K_)
+    keep = pos < cap
+    gates = gates * keep
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+    dispatch = jnp.einsum("tke,tkc->tec", onehot * keep[..., None], pos_oh)
+    combine = jnp.einsum("tk,tke,tkc->tec", gates, onehot, pos_oh)
+    # load-balance auxiliary loss (Switch)
+    me = probs.mean(0)
+    ce = onehot[:, 0].mean(0)
+    aux = n_experts * jnp.sum(me * ce)
+    return dispatch, combine, aux, cap
+
+
+def _moe_ffn_tokens(xt, params, n_experts, top_k, act, capacity_factor):
+    dispatch, combine, aux, cap = moe_dispatch(xt, params["router"],
+                                               n_experts, top_k,
+                                               capacity_factor)
+    xe = hint(jnp.einsum("tec,td->ecd", dispatch.astype(xt.dtype), xt), "expert")
+    gate_up = jnp.einsum("ecd,edf->ecf", xe, params["wi"].astype(xt.dtype))
+    f = params["wo"].shape[1]
+    g, u = gate_up[..., :f], gate_up[..., f:]
+    h = ACT[act](g) * u
+    ye = hint(jnp.einsum("ecf,efd->ecd", h, params["wo"].astype(xt.dtype)), "expert")
+    y = jnp.einsum("tec,ecd->td", combine.astype(xt.dtype), ye)
+    return y, aux
+
+
+def moe_ffn(x, params, n_experts: int, top_k: int, act="silu",
+            capacity_factor: float = 1.25, token_chunk: int = 4096,
+            static_chunks: bool = False):
+    """x: (B,S,D); params: router (D,E), wi (E,D,2F), wo (E,F,D).
+
+    Long sequences are dispatched in ``token_chunk`` groups — the (T, E, C)
+    dispatch one-hots are O(T^2/E) and explode past ~8k tokens otherwise.
+    static_chunks=True uses a Python loop (dry-run costing: exact flops);
+    False uses lax.scan (deployable memory profile).
+    """
+    B, S, D = x.shape
+    xt = x.reshape(B * S, D)
+    T = B * S
+    if static_chunks:
+        # dry-run costing: coarser chunks keep the unrolled HLO tractable;
+        # dispatch-tensor flops are negligible either way (deployable memory
+        # is measured on the scan path with 4k chunks)
+        token_chunk = max(token_chunk, 32768)
+    if T <= token_chunk:
+        y, aux = _moe_ffn_tokens(xt, params, n_experts, top_k, act,
+                                 capacity_factor)
+        return y.reshape(B, S, D), aux
+    nchunk = -(-T // token_chunk)
+    Tp = nchunk * token_chunk
+    xp = jnp.pad(xt, ((0, Tp - T), (0, 0))).reshape(nchunk, token_chunk, D)
+    if static_chunks:
+        outs, aux = [], 0.0
+        for i in range(nchunk):
+            yi, ai = _moe_ffn_tokens(xp[i], params, n_experts, top_k, act,
+                                     capacity_factor)
+            outs.append(yi)
+            aux = aux + ai
+        y = jnp.concatenate(outs, axis=0)
+    else:
+        def body(_, xc):
+            yi, ai = _moe_ffn_tokens(xc, params, n_experts, top_k, act,
+                                     capacity_factor)
+            return None, (yi, ai)
+
+        _, (y, auxs) = jax.lax.scan(body, None, xp)
+        y = y.reshape(Tp, D)
+        aux = auxs.sum()
+    return y[:T].reshape(B, S, D), aux / nchunk
+
+
+# -------------------------------------------------------------------- init --
+
+def dense_init(rng, shape, scale=None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(rng, shape, jnp.float32) * s)

@@ -1,0 +1,222 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) backbone.
+
+Training/prefill use the chunked SSD algorithm (within-chunk quadratic form +
+cross-chunk recurrent state carry via lax.scan); decode is the O(1) recurrent
+update — the reason this arch runs the long_500k shape.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from ..distributed.ctx import hint
+
+
+def _segsum(x):
+    """log-space segment sums: out[..., i, j] = sum_{j<k<=i} x[..., k]."""
+    T = x.shape[-1]
+    c = jnp.cumsum(x, axis=-1)
+    out = c[..., :, None] - c[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+    """SSD forward.
+    x: (b, l, h, p); dt: (b, l, h); A: (h,) (<0); Bm/Cm: (b, l, n).
+    Returns y: (b, l, h, p) and final state (b, h, p, n)."""
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    chunk = min(chunk, l)
+    if l % chunk:
+        # pad tail: dt=0 => decay exp(0)=1, zero input => state/y unaffected
+        pad = chunk - l % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        y, fin = ssd_chunked(x, dt, A, Bm, Cm, chunk)
+        return y[:, :l], fin
+    nc = l // chunk
+    xr = x.reshape(b, nc, chunk, h, p)
+    dtr = dt.reshape(b, nc, chunk, h)
+    Br = Bm.reshape(b, nc, chunk, n)
+    Cr = Cm.reshape(b, nc, chunk, n)
+    dA = dtr * A[None, None, None, :]                   # (b,nc,c,h)  (<0)
+    dAc = jnp.cumsum(dA, axis=2)
+
+    # 1. intra-chunk (quadratic) term
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))   # (b,nc,h,c,c)
+    scores = jnp.einsum("bzin,bzjn->bzij", Cr, Br)      # (b,nc,c,c)
+    y_diag = jnp.einsum("bzhij,bzij,bzjh,bzjhp->bzihp", Lmat, scores, dtr, xr)
+
+    # 2. chunk states: state_z = sum_j exp(dAc_end - dAc_j) * dt_j * B_j x_j
+    decay_tail = jnp.exp(dAc[:, :, -1:, :] - dAc)       # (b,nc,c,h)
+    states = jnp.einsum("bzch,bzch,bzcn,bzchp->bzhpn",
+                        decay_tail, dtr, Br, xr)        # (b,nc,h,p,n)
+
+    # 3. inter-chunk recurrence over z
+    chunk_decay = jnp.exp(dAc[:, :, -1, :])             # (b,nc,h)
+
+    def scan_fn(carry, inp):
+        s_prev = carry
+        s_z, dec_z = inp
+        s_new = s_prev * dec_z[..., None, None] + s_z
+        return s_new, s_prev
+
+    s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        scan_fn, s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (b,nc,h,p,n)
+
+    # 4. inter-chunk output: y_off = C_i . (decay_in * prev_state)
+    decay_in = jnp.exp(dAc)                              # (b,nc,c,h)
+    y_off = jnp.einsum("bzcn,bzch,bzhpn->bzchp", Cr, decay_in, prev_states)
+    y = y_diag.reshape(b, l, h, p) + y_off.reshape(b, l, h, p)
+    return y, final
+
+
+def ssd_decode_step(state, x, dt, A, Bm, Cm):
+    """state: (b,h,p,n); x: (b,h,p); dt: (b,h); Bm/Cm: (b,n)."""
+    dA = jnp.exp(dt * A[None, :])                        # (b,h)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt, Bm, x)
+    state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cm, state)
+    return y, state
+
+
+class Mamba2LM:
+    def __init__(self, cfg):
+        self.cfg = cfg
+        self.d_inner = cfg.expand * cfg.d_model
+        self.n_heads_ssm = self.d_inner // cfg.ssm_headdim
+
+    def init_params(self, rng):
+        cfg = self.cfg
+        D = cfg.d_model
+        di = self.d_inner
+        n = cfg.ssm_state
+        h = self.n_heads_ssm
+        Lr = cfg.n_layers
+        ks = jax.random.split(rng, 8)
+        return {
+            "embed": L.dense_init(ks[0], (cfg.vocab, D), scale=1.0),
+            "final_ln": jnp.zeros((D,), jnp.float32),
+            "blocks": {
+                "ln": jnp.zeros((Lr, D), jnp.float32),
+                "in_proj": L.dense_init(ks[1], (Lr, D, 2 * di + 2 * n + h)),
+                "conv_w": L.dense_init(ks[2], (Lr, cfg.d_conv, di + 2 * n), scale=0.5),
+                "a_log": jnp.zeros((Lr, h), jnp.float32),
+                "d_skip": jnp.ones((Lr, h), jnp.float32),
+                "dt_bias": jnp.zeros((Lr, h), jnp.float32),
+                "out_proj": L.dense_init(ks[3], (Lr, di, D)),
+            },
+        }
+
+    def _mix(self, p, li, x):
+        """in_proj split -> (z, xBC, dt)."""
+        cfg = self.cfg
+        di, n, h = self.d_inner, cfg.ssm_state, self.n_heads_ssm
+        zxbcdt = hint(x @ p["in_proj"][li].astype(x.dtype), "proj")
+        z = zxbcdt[..., :di]
+        xBC = zxbcdt[..., di: 2 * di + 2 * n]
+        dt = jax.nn.softplus(zxbcdt[..., 2 * di + 2 * n:].astype(jnp.float32)
+                             + p["dt_bias"][li])
+        return z, xBC, dt
+
+    def _block_train(self, p, li, x):
+        cfg = self.cfg
+        di, n, h = self.d_inner, cfg.ssm_state, self.n_heads_ssm
+        hd = cfg.ssm_headdim
+        B, S, D = x.shape
+        hx = L.rms_norm(x, p["ln"][li])
+        z, xBC, dt = self._mix(p, li, hx)
+        # causal depthwise conv over (di + 2n) channels
+        w = p["conv_w"][li].astype(xBC.dtype)            # (K, C)
+        K = w.shape[0]
+        pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+        conv = sum(pad[:, k: k + S, :] * w[k] for k in range(K))
+        conv = jax.nn.silu(conv)
+        xs = conv[..., :di].reshape(B, S, h, hd)
+        Bm = conv[..., di: di + n]
+        Cm = conv[..., di + n:]
+        A = -jnp.exp(p["a_log"][li])
+        y, _ = ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk)
+        y = y + xs.astype(jnp.float32) * p["d_skip"][li][None, None, :, None]
+        y = (y.reshape(B, S, di) * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+        return x + y @ p["out_proj"][li].astype(x.dtype)
+
+    def forward(self, params, tokens, last_only=False):
+        cfg = self.cfg
+        x = params["embed"].astype(jnp.bfloat16)[tokens] * float(np.sqrt(cfg.d_model))
+
+        def step(x, li):
+            return self._block_train(params["blocks"], li, x), None
+
+        f = jax.checkpoint(step) if cfg.remat else step
+        x, _ = jax.lax.scan(f, x, jnp.arange(cfg.n_layers),
+                            unroll=max(1, int(cfg.scan_unroll)))
+        x = L.rms_norm(x, params["final_ln"])
+        if last_only:
+            x = x[:, -1:]
+        return hint(x @ params["embed"].astype(x.dtype).T, "logits")
+
+    def loss(self, params, batch):
+        logits = self.forward(params, batch["tokens"])
+        tgt = batch["targets"]
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(logits.astype(jnp.float32), tgt[..., None],
+                                   axis=-1)[..., 0]
+        return (lse - gold).mean()
+
+    # ------------------------------------------------------------ decode --
+    def cache_spec(self, Bt: int, max_len: int):
+        cfg = self.cfg
+        di, n, h = self.d_inner, cfg.ssm_state, self.n_heads_ssm
+        return {
+            "state": ((cfg.n_layers, Bt, h, cfg.ssm_headdim, n), jnp.float32),
+            "conv": ((cfg.n_layers, Bt, cfg.d_conv - 1, di + 2 * n), jnp.bfloat16),
+        }
+
+    def init_cache(self, Bt: int, max_len: int):
+        return jax.tree.map(lambda s: jnp.zeros(s[0], s[1]),
+                            self.cache_spec(Bt, max_len),
+                            is_leaf=lambda s: isinstance(s, tuple))
+
+    def decode_step(self, params, cache, token, pos):
+        cfg = self.cfg
+        di, n, h = self.d_inner, cfg.ssm_state, self.n_heads_ssm
+        hd = cfg.ssm_headdim
+        x = params["embed"].astype(jnp.bfloat16)[token] * float(np.sqrt(cfg.d_model))
+        p = params["blocks"]
+
+        def step(x, inp):
+            li, st, cv = inp
+            hx = L.rms_norm(x, p["ln"][li])
+            z, xBC, dt = self._mix(p, li, hx)
+            hist = jnp.concatenate([cv, xBC], axis=1)       # (B, K, C)
+            w = p["conv_w"][li].astype(xBC.dtype)
+            conv = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist, w))[:, None, :]
+            xs = conv[..., :di].reshape(-1, h, hd)
+            Bm = conv[:, 0, di: di + n]
+            Cm = conv[:, 0, di + n:]
+            A = -jnp.exp(p["a_log"][li])
+            y, st_new = ssd_decode_step(st.astype(jnp.float32),
+                                        xs.astype(jnp.float32),
+                                        dt[:, 0], A, Bm.astype(jnp.float32),
+                                        Cm.astype(jnp.float32))
+            y = y + xs.astype(jnp.float32) * p["d_skip"][li][None, :, None]
+            y = (y.reshape(x.shape[0], 1, di)
+                 * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+            x = x + y @ p["out_proj"][li].astype(x.dtype)
+            return x, (st_new, hist[:, 1:, :])
+
+        (x, (sts, cvs)) = jax.lax.scan(
+            step, x, (jnp.arange(cfg.n_layers), cache["state"], cache["conv"]),
+            unroll=max(1, int(cfg.scan_unroll)))
+        x = L.rms_norm(x, params["final_ln"])
+        logits = x @ params["embed"].astype(x.dtype).T
+        return logits[:, 0], {"state": sts, "conv": cvs}

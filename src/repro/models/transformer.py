@@ -1,0 +1,340 @@
+"""Decoder-only transformer LM covering the dense, VLM-backbone and MoE
+(incl. DeepSeek MLA) assigned architectures.
+
+Layer stacks are grouped by the repeating layer *pattern* (e.g. gemma3's
+5 local + 1 global) and scanned with stacked params, so HLO size is O(1) in
+depth and local layers keep their O(S*window) cost.  KV caches are
+ring-buffered for local layers (window-sized) and full-length for global
+layers — the memory term of the roofline depends on it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from ..distributed.ctx import hint
+
+
+# ----------------------------------------------------------------- params --
+
+def _attn_params(rng, cfg, n: int):
+    D, H, KV, Hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    ks = jax.random.split(rng, 8)
+    if cfg.mla:
+        r, qn, qr, vh = cfg.kv_lora, cfg.q_nope, cfg.q_rope, cfg.v_head
+        return {
+            "wq": L.dense_init(ks[0], (n, D, H * (qn + qr))),
+            "w_dkv": L.dense_init(ks[1], (n, D, r + qr)),   # c_kv + shared k_rope
+            "w_uk": L.dense_init(ks[2], (n, r, H * qn)),
+            "w_uv": L.dense_init(ks[3], (n, r, H * vh)),
+            "wo": L.dense_init(ks[4], (n, H * vh, D)),
+            "ln": jnp.zeros((n, D), jnp.float32),
+        }
+    return {
+        "wq": L.dense_init(ks[0], (n, D, H * Hd)),
+        "wk": L.dense_init(ks[1], (n, D, KV * Hd)),
+        "wv": L.dense_init(ks[2], (n, D, KV * Hd)),
+        "wo": L.dense_init(ks[3], (n, H * Hd, D)),
+        "ln": jnp.zeros((n, D), jnp.float32),
+    }
+
+
+def _ffn_params(rng, cfg, n: int, moe: bool):
+    D = cfg.d_model
+    ks = jax.random.split(rng, 4)
+    if moe:
+        E, F = cfg.n_experts, cfg.d_ff_expert
+        p = {
+            "router": L.dense_init(ks[0], (n, D, E), scale=0.02),
+            "wi": L.dense_init(ks[1], (n, E, D, 2 * F)),
+            "wo": L.dense_init(ks[2], (n, E, F, D)),
+            "ln": jnp.zeros((n, D), jnp.float32),
+        }
+        if cfg.n_shared:
+            Fs = cfg.d_ff_expert * cfg.n_shared
+            p["shared_wi"] = L.dense_init(ks[3], (n, D, 2 * Fs))
+            p["shared_wo"] = L.dense_init(ks[0], (n, Fs, D))
+        return p
+    F = cfg.d_ff
+    width = 2 * F if cfg.glu else F
+    return {
+        "wi": L.dense_init(ks[0], (n, D, width)),
+        "wo": L.dense_init(ks[1], (n, F, D)),
+        "ln": jnp.zeros((n, D), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------- forward --
+
+def _attn_apply(p, x, li, cfg, positions, window, cache=None, cache_len=None):
+    """One attention sub-block.  li indexes the stacked layer params.
+    cache: dict with k/v (ring or full) for decode; returns (out, new_cache)."""
+    B, S, D = x.shape
+    H, KV, Hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    h = L.rms_norm(x, p["ln"][li])
+    dt = h.dtype
+    if cfg.mla:
+        return _mla_apply(p, h, x, li, cfg, positions, cache, cache_len)
+    q = hint(h @ p["wq"][li].astype(dt), "proj").reshape(B, S, H, Hd)
+    k = (h @ p["wk"][li].astype(dt)).reshape(B, S, KV, Hd)
+    v = (h @ p["wv"][li].astype(dt)).reshape(B, S, KV, Hd)
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+    if cache is None:
+        o = L.causal_attention(q, k, v, window=window,
+                               static_unroll=bool(cfg.scan_unroll))
+        new_cache = None
+    else:
+        # decode: S == 1; write k/v into the (ring) cache — local layers keep
+        # only `window` slots, slot = pos % size
+        Smax = cache["k"].shape[1]
+        slot = positions[0, 0] % Smax
+        ck = jax.lax.dynamic_update_index_in_dim(cache["k"], k[:, 0], slot, axis=1)
+        cv = jax.lax.dynamic_update_index_in_dim(cache["v"], v[:, 0], slot, axis=1)
+        eff_len = jnp.minimum(cache_len + 1, Smax)
+        o = L.decode_attention(q, ck, cv, eff_len)
+        new_cache = {"k": ck, "v": cv}
+    o = o.reshape(B, S, H * Hd) @ p["wo"][li].astype(dt)
+    return hint(x + o, "act"), new_cache
+
+
+def _mla_apply(p, h, x, li, cfg, positions, cache, cache_len):
+    """DeepSeek-V2 MLA: latent KV cache (kv_lora + shared rope key)."""
+    B, S, D = h.shape
+    H = cfg.n_heads
+    r, qn, qr, vh = cfg.kv_lora, cfg.q_nope, cfg.q_rope, cfg.v_head
+    dt = h.dtype
+    q = (h @ p["wq"][li].astype(dt)).reshape(B, S, H, qn + qr)
+    q_nope, q_rope = q[..., :qn], q[..., qn:]
+    q_rope = L.rope(q_rope, positions, cfg.rope_theta)
+    ckr = h @ p["w_dkv"][li].astype(dt)                     # (B,S,r+qr)
+    c_kv, k_rope = ckr[..., :r], ckr[..., r:]
+    k_rope = L.rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    if cache is None:
+        # prefill/train: expand per head (standard formulation)
+        k_nope = (c_kv @ p["w_uk"][li].astype(dt)).reshape(B, S, H, qn)
+        v = (c_kv @ p["w_uv"][li].astype(dt)).reshape(B, S, H, vh)
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(
+            k_rope[:, :, None, :], (B, S, H, qr))], axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        o = L.causal_attention(qq, k, v, window=None,
+                               static_unroll=bool(cfg.scan_unroll))
+        new_cache = None
+    else:
+        # decode: absorbed formulation against the latent cache.  The
+        # absorbed contractions run in f32 (decode flops are negligible;
+        # bf16 here loses too much vs the expanded prefill formulation).
+        slot = positions[0, 0]
+        cc = jax.lax.dynamic_update_index_in_dim(cache["c_kv"], c_kv[:, 0], slot, axis=1)
+        cr = jax.lax.dynamic_update_index_in_dim(cache["k_rope"], k_rope[:, 0], slot, axis=1)
+        eff = cache_len + 1
+        w_uk = p["w_uk"][li].reshape(r, H, qn)                      # f32 master
+        q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32), w_uk)
+        s = (jnp.einsum("bhr,btr->bht", q_abs, cc.astype(jnp.float32))
+             + jnp.einsum("bhd,btd->bht", q_rope[:, 0].astype(jnp.float32),
+                          cr.astype(jnp.float32)))
+        s = s * (1.0 / np.sqrt(qn + qr))
+        tpos = jnp.arange(cc.shape[1])
+        s = jnp.where(tpos[None, None, :] < eff, s, L.NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bht,btr->bhr", pr, cc.astype(jnp.float32))
+        w_uv = p["w_uv"][li].reshape(r, H, vh)
+        o = jnp.einsum("bhr,rhv->bhv", ctx, w_uv).reshape(B, 1, H * vh).astype(dt)
+        new_cache = {"c_kv": cc, "k_rope": cr}
+        return x + o @ p["wo"][li].astype(dt), new_cache
+    o = o.reshape(B, S, H * vh) @ p["wo"][li].astype(dt)
+    return hint(x + o, "act"), new_cache
+
+
+def _ffn_apply(p, x, li, cfg, moe: bool):
+    h = L.rms_norm(x, p["ln"][li])
+    dt = h.dtype
+    aux = 0.0
+    if moe:
+        y, aux = L.moe_ffn(h, {"router": p["router"][li], "wi": p["wi"][li],
+                               "wo": p["wo"][li]},
+                           cfg.n_experts, cfg.top_k, cfg.act,
+                           capacity_factor=cfg.moe_cap_factor,
+                           static_chunks=bool(cfg.scan_unroll))
+        if cfg.n_shared:
+            gu = h @ p["shared_wi"][li].astype(dt)
+            f = p["shared_wo"].shape[1]
+            y = y + (L.ACT[cfg.act](gu[..., :f]) * gu[..., f:]) @ p["shared_wo"][li].astype(dt)
+    else:
+        gu = hint(h @ p["wi"][li].astype(dt), "proj")
+        if cfg.glu:
+            f = p["wo"].shape[1]
+            y = (L.ACT[cfg.act](gu[..., :f]) * gu[..., f:]) @ p["wo"][li].astype(dt)
+        else:
+            y = L.ACT[cfg.act](gu) @ p["wo"][li].astype(dt)
+    return hint(x + y, "act"), aux
+
+
+class TransformerLM:
+    """Decoder-only LM; cfg: configs.base.ArchConfig."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+        pat = cfg.window_pattern
+        n_layers = cfg.n_layers
+        # split stack into [unrolled head layers][scanned groups of |pat|]
+        self.group = len(pat)
+        self.head_layers = cfg.dense_head_layers       # e.g. deepseek layer 0
+        body = n_layers - self.head_layers
+        assert body % self.group == 0, (
+            f"{cfg.name}: {body} body layers not divisible by pattern {pat}")
+        self.n_groups = body // self.group
+
+    # -------------------------------------------------------------- init --
+    def init_params(self, rng):
+        cfg = self.cfg
+        ks = jax.random.split(rng, 8)
+        params = {
+            "embed": L.dense_init(ks[0], (cfg.vocab, cfg.d_model), scale=1.0),
+            "final_ln": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+        if self.head_layers:
+            params["head_attn"] = _attn_params(ks[1], cfg, self.head_layers)
+            params["head_ffn"] = _ffn_params(ks[2], cfg, self.head_layers, moe=False)
+        for gi in range(self.group):
+            params[f"attn{gi}"] = _attn_params(ks[3 + (gi % 4)], cfg, self.n_groups)
+            params[f"ffn{gi}"] = _ffn_params(ks[(gi + 5) % 8], cfg, self.n_groups,
+                                             moe=cfg.moe)
+        if cfg.n_patches:
+            params["patch_proj"] = L.dense_init(ks[7], (cfg.patch_dim, cfg.d_model))
+        return params
+
+    # ----------------------------------------------------------- forward --
+    def _embed(self, params, tokens, patch_embeds=None):
+        cfg = self.cfg
+        x = params["embed"].astype(jnp.bfloat16)[tokens]
+        x = hint(x * float(np.sqrt(cfg.d_model)), "act")
+        if patch_embeds is not None:
+            pe = patch_embeds.astype(jnp.bfloat16) @ params["patch_proj"].astype(jnp.bfloat16)
+            x = jnp.concatenate([pe, x], axis=1)
+        return x
+
+    def forward(self, params, tokens, patch_embeds=None, last_only=False):
+        cfg = self.cfg
+        x = self._embed(params, tokens, patch_embeds)
+        B, S, _ = x.shape
+        pos = jnp.arange(S, dtype=jnp.int32)[None, :].repeat(B, 0)
+        for li in range(self.head_layers):
+            x, _ = _attn_apply(params["head_attn"], x, li, cfg, pos, None)
+            x, _ = _ffn_apply(params["head_ffn"], x, li, cfg, moe=False)
+
+        aux_total = 0.0
+
+        def group_step(carry, li):
+            x, aux = carry
+            for gi in range(self.group):
+                w = cfg.window_pattern[gi]
+                x, _ = _attn_apply(params[f"attn{gi}"], x, li, cfg, pos, w)
+                x, a = _ffn_apply(params[f"ffn{gi}"], x, li, cfg, moe=cfg.moe)
+                aux = aux + a
+            return (x, aux), None
+
+        if self.n_groups:
+            step = group_step
+            if cfg.remat:
+                step = jax.checkpoint(group_step,
+                                      policy=jax.checkpoint_policies.nothing_saveable)
+            (x, aux_total), _ = jax.lax.scan(step, (x, jnp.float32(0.0)),
+                                             jnp.arange(self.n_groups),
+                                             unroll=max(1, int(cfg.scan_unroll)))
+        x = L.rms_norm(x, params["final_ln"])
+        if last_only:
+            x = x[:, -1:]
+        logits = hint(x @ params["embed"].astype(x.dtype).T, "logits")
+        return logits, aux_total
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        logits, aux = self.forward(params, batch["tokens"],
+                                   batch.get("patch_embeds"))
+        tgt = batch["targets"]
+        V = cfg.vocab
+        if cfg.n_patches:
+            logits = logits[:, -tgt.shape[1]:]
+        lse = hint(jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1), "vec")
+        gold = hint(jnp.take_along_axis(logits.astype(jnp.float32), tgt[..., None],
+                                   axis=-1)[..., 0], "vec")
+        mask = (tgt >= 0).astype(jnp.float32)
+        nll = ((lse - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+        return nll + 0.01 * aux
+
+    # ------------------------------------------------------------ decode --
+    def cache_spec(self, B: int, max_len: int):
+        """Cache shapes: ring (window) for local layers, full for global."""
+        cfg = self.cfg
+        KV, Hd = cfg.n_kv, cfg.head_dim
+        spec = {}
+
+        def attn_cache(n, w):
+            size = min(w, max_len) if w else max_len
+            if cfg.mla:
+                return {"c_kv": ((n, B, size, cfg.kv_lora), jnp.bfloat16),
+                        "k_rope": ((n, B, size, cfg.q_rope), jnp.bfloat16)}
+            return {"k": ((n, B, size, KV, Hd), jnp.bfloat16),
+                    "v": ((n, B, size, KV, Hd), jnp.bfloat16)}
+
+        if self.head_layers:
+            spec["head"] = attn_cache(self.head_layers, None)
+        for gi in range(self.group):
+            spec[f"g{gi}"] = attn_cache(self.n_groups, cfg.window_pattern[gi])
+        return spec
+
+    def init_cache(self, B: int, max_len: int):
+        return jax.tree.map(lambda s: jnp.zeros(s[0], s[1]),
+                            self.cache_spec(B, max_len),
+                            is_leaf=lambda s: isinstance(s, tuple))
+
+    def decode_step(self, params, cache, token, pos):
+        """token: (B, 1) int32; pos: scalar int32 position. Returns logits."""
+        cfg = self.cfg
+        x = params["embed"].astype(jnp.bfloat16)[token] * float(np.sqrt(cfg.d_model))
+        B = token.shape[0]
+        posb = jnp.full((B, 1), pos, jnp.int32)
+        new_cache = {k: dict(v) for k, v in cache.items()}
+        for li in range(self.head_layers):
+            lc = jax.tree.map(lambda a: a[li], cache["head"])
+            x, nc = _attn_apply(params["head_attn"], x, li, cfg, posb, None,
+                                cache=lc, cache_len=pos)
+            for kk in nc:
+                new_cache["head"][kk] = cache["head"][kk].at[li].set(nc[kk])
+            x, _ = _ffn_apply(params["head_ffn"], x, li, cfg, moe=False)
+
+        def group_step(carry, inp):
+            x, = carry
+            li, gcaches = inp
+            outs = {}
+            for gi in range(self.group):
+                lc = gcaches[f"g{gi}"]
+                x, nc = _attn_apply(params[f"attn{gi}"], x, li, cfg, posb,
+                                    cfg.window_pattern[gi], cache=lc,
+                                    cache_len=pos)
+                x, _ = _ffn_apply(params[f"ffn{gi}"], x, li, cfg, moe=cfg.moe)
+                outs[f"g{gi}"] = nc
+            return (x,), outs
+
+        if self.n_groups:
+            gc = {k: cache[k] for k in cache if k.startswith("g")}
+            (x,), upd = jax.lax.scan(group_step, (x,),
+                                     (jnp.arange(self.n_groups), gc),
+                                     unroll=max(1, int(cfg.scan_unroll)))
+            for k in upd:
+                new_cache[k] = upd[k]
+        x = L.rms_norm(x, params["final_ln"])
+        logits = hint(x @ params["embed"].astype(x.dtype).T, "logits")
+        return logits[:, 0], new_cache
+
+    def prefill(self, params, tokens):
+        """Returns final logits after processing the prompt (cache omitted:
+        the dry-run decode path initializes caches directly)."""
+        logits, _ = self.forward(params, tokens)
+        return logits[:, -1]

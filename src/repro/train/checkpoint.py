@@ -1,0 +1,138 @@
+"""Fault-tolerant checkpointing: sharded save/restore, async writer,
+keep-K retention, atomic manifests, **elastic restart** (a checkpoint written
+under one mesh restores under another — params are saved as full logical
+arrays per leaf and re-sharded on load).
+
+Layout:
+  <dir>/step_000123/
+      manifest.json            {step, leaf paths, shapes, dtypes, complete}
+      <leaf-hash>.npy          one file per pytree leaf
+  <dir>/LATEST                 atomically-updated pointer
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+import time
+
+import numpy as np
+import jax
+import ml_dtypes
+
+_NPY_SAFE = {"bfloat16": np.uint16}   # npy cannot store ml_dtypes natively
+
+
+def _leaf_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        out.append((path, leaf))
+    return out, treedef
+
+
+def _fname(path: str) -> str:
+    return hashlib.md5(path.encode()).hexdigest()[:16] + ".npy"
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_write: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_write = async_write
+        self._thread = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------- save ----
+    def save(self, step: int, state) -> None:
+        # fetch to host synchronously (cheap vs training step at scale —
+        # production would snapshot device buffers); write possibly async
+        leaves, _ = _leaf_paths(state)
+        host = [(p, np.asarray(x)) for p, x in leaves]
+        if self.async_write:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host), daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, host_leaves) -> None:
+        d = os.path.join(self.dir, f"step_{step:09d}")
+        tmp = d + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "leaves": []}
+        for path, arr in host_leaves:
+            dt = str(arr.dtype)
+            if dt in _NPY_SAFE:
+                arr = arr.view(_NPY_SAFE[dt])
+            np.save(os.path.join(tmp, _fname(path)), arr)
+            manifest["leaves"].append(
+                {"path": path, "file": _fname(path),
+                 "shape": list(arr.shape), "dtype": dt})
+        manifest["complete"] = True
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(d):
+            shutil.rmtree(d)
+        os.rename(tmp, d)                                  # atomic publish
+        with open(os.path.join(self.dir, "LATEST.tmp"), "w") as f:
+            f.write(os.path.basename(d))
+        os.replace(os.path.join(self.dir, "LATEST.tmp"),
+                   os.path.join(self.dir, "LATEST"))
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(x for x in os.listdir(self.dir) if x.startswith("step_"))
+        for old in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, old), ignore_errors=True)
+
+    # ---------------------------------------------------------- restore ----
+    def latest_step(self):
+        p = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(p):
+            return None
+        with open(p) as f:
+            name = f.read().strip()
+        d = os.path.join(self.dir, name)
+        if not os.path.exists(os.path.join(d, "manifest.json")):
+            return None
+        return int(name.split("_")[1])
+
+    def restore(self, template, step=None, shardings=None):
+        """Load into the structure of ``template``; if ``shardings`` given,
+        device_put each leaf with its (possibly new-mesh) sharding —
+        this is the elastic-restart path."""
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError("no checkpoint found")
+        d = os.path.join(self.dir, f"step_{step:09d}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        assert manifest.get("complete"), "incomplete checkpoint"
+        by_path = {l["path"]: l for l in manifest["leaves"]}
+        leaves, treedef = _leaf_paths(template)
+        sh_leaves = None
+        if shardings is not None:
+            sh_leaves = [s for _, s in _leaf_paths(shardings)[0]]
+        out = []
+        for i, (path, tmpl) in enumerate(leaves):
+            meta = by_path[path]
+            arr = np.load(os.path.join(d, meta["file"]))
+            if meta["dtype"] == "bfloat16":
+                arr = arr.view(ml_dtypes.bfloat16)
+            assert tuple(arr.shape) == tuple(tmpl.shape), (path, arr.shape)
+            if sh_leaves is not None:
+                out.append(jax.device_put(arr, sh_leaves[i]))
+            else:
+                out.append(jax.device_put(arr))
+        return jax.tree_util.tree_unflatten(treedef, out), step

@@ -1,0 +1,53 @@
+"""Sharded AdamW + LR schedules (pure JAX, optimizer state mirrors param
+sharding so FSDP covers m/v automatically)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def zeros_like_tree(params):
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def adamw_update(params, grads, m, v, step, lr=3e-4, b1=0.9, b2=0.95,
+                 eps=1e-8, wd=0.01, clip=1.0):
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, clip / jnp.maximum(gnorm, 1e-9))
+    stepf = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - b1 ** stepf
+    bc2 = 1.0 - b2 ** stepf
+
+    def upd(p, g, mm, vv):
+        g = g.astype(jnp.float32) * scale
+        mm = b1 * mm + (1 - b1) * g
+        vv = b2 * vv + (1 - b2) * g * g
+        mh = mm / bc1
+        vh = vv / bc2
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (mh / (jnp.sqrt(vh) + eps) + wd * p32)
+        return p32.astype(p.dtype), mm, vv
+
+    flat_p, tree = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(m)
+    flat_v = jax.tree.leaves(v)
+    out = [upd(p, g, mm, vv) for p, g, mm, vv in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tree.unflatten([o[0] for o in out])
+    new_m = tree.unflatten([o[1] for o in out])
+    new_v = tree.unflatten([o[2] for o in out])
+    return new_p, new_m, new_v
+
+
+def init_train_state(params):
+    return {"params": params, "m": zeros_like_tree(params),
+            "v": zeros_like_tree(params), "step": jnp.zeros((), jnp.int32)}
+
+
+def cosine_lr(step, base=3e-4, warmup=100, total=10000, floor=0.1):
+    warm = base * (step + 1) / warmup
+    prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = base * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)

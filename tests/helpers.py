@@ -1,0 +1,15 @@
+"""Shared test graph builders."""
+import itertools, random
+from repro.core.joingraph import JoinGraph
+
+
+def rand_graph(n, extra=0, seed=0):
+    r = random.Random(seed)
+    edges = [(r.randrange(i), i) for i in range(1, n)]
+    edges = [(min(a, b), max(a, b)) for a, b in edges]
+    pool = [e for e in itertools.combinations(range(n), 2) if e not in set(edges)]
+    r.shuffle(pool)
+    edges += pool[:extra]
+    cards = [r.uniform(10, 1e6) for _ in range(n)]
+    sels = [10 ** r.uniform(-6, -0.5) for _ in edges]
+    return JoinGraph.make(n, edges, cards, sels)

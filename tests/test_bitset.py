@@ -1,0 +1,48 @@
+"""bitset primitives: jnp vs numpy mirrors (hypothesis property tests)."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitset as bs
+
+NMAX = 16
+
+
+def np_adj(n, edges):
+    a = np.zeros(NMAX, np.int32)
+    for u, v in edges:
+        a[u] |= 1 << v
+        a[v] |= 1 << u
+    return a
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, (1 << 12) - 1), st.integers(0, (1 << NMAX) - 1))
+def test_pdep_matches_numpy(rank, mask):
+    got = int(bs.pdep(jnp.int32(rank), jnp.int32(mask), NMAX))
+    assert got == bs.np_pdep(rank, mask)
+    # deposit then extract: low popcount(mask) bits of rank survive
+    assert got & ~mask == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, NMAX - 1), st.integers(0, NMAX - 1)),
+                max_size=24),
+       st.integers(1, (1 << NMAX) - 1))
+def test_grow_and_connectivity(edges, s):
+    edges = [(min(a, b), max(a, b)) for a, b in edges if a != b]
+    adj = np_adj(NMAX, edges)
+    adjd = jnp.asarray(adj)
+    src = s & (-s)
+    got = int(bs.grow(jnp.int32(src), jnp.int32(s), adjd))
+    exp = bs.np_grow(src, s, adj.astype(np.int64))
+    assert got == exp
+    assert bool(bs.is_connected(jnp.int32(s), adjd)) == bs.np_is_connected(
+        s, adj.astype(np.int64))
+
+
+def test_lsb_neighbors():
+    assert int(bs.lsb(jnp.int32(12))) == 4
+    assert int(bs.lsb(jnp.int32(0))) == 0
+    adj = jnp.asarray(np_adj(NMAX, [(0, 1), (1, 2)]))
+    assert int(bs.neighbors(jnp.int32(0b010), adj)) == 0b101

@@ -1,0 +1,56 @@
+"""Biconnected components: vectorized vs Hopcroft-Tarjan oracle."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import blocks as bl, bitset as bs
+from tests.helpers import rand_graph
+
+NMAX = 16
+
+
+def _device_edges(g):
+    emax = max(8, ((g.m + 7) // 8) * 8)
+    eu = np.full(emax, -1, np.int32)
+    ev = np.full(emax, -1, np.int32)
+    live = np.zeros(emax, bool)
+    for i, (u, v) in enumerate(g.edges):
+        eu[i], ev[i], live[i] = u, v, True
+    adj = np.zeros(NMAX, np.int32)
+    for u, v in g.edges:
+        adj[u] |= 1 << v
+        adj[v] |= 1 << u
+    return (jnp.asarray(adj), jnp.asarray(eu), jnp.asarray(ev),
+            jnp.asarray(live))
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(4, 11), st.integers(0, 6), st.integers(0, 10_000))
+def test_blocks_match_oracle(n, extra, seed):
+    g = rand_graph(n, extra, seed)
+    adj, eu, ev, live = _device_edges(g)
+    adj_np = g.adjacency()
+    rng = np.random.default_rng(seed)
+    for _ in range(6):
+        # random connected subset via random walk
+        s = 1 << int(rng.integers(0, n))
+        for _ in range(int(rng.integers(1, n))):
+            nb = bs.np_neighbors(s, adj_np) & ~s
+            if not nb:
+                break
+            s |= 1 << list(bs.iter_bits(nb))[int(rng.integers(0, bin(nb).count('1')))]
+        if bin(s).count("1") < 2:
+            continue
+        cyc, brg = bl.find_blocks_batch(jnp.array([s], jnp.int32), adj, eu, ev,
+                                        live, NMAX)
+        got = sorted(int(x) for x in
+                     np.concatenate([np.asarray(cyc[0]), np.asarray(brg[0])])
+                     if x)
+        assert got == sorted(bl.np_find_blocks(s, g.edges, n))
+
+
+def test_paper_fig5_blocks():
+    edges9 = [(0, 1), (1, 2), (2, 3), (0, 3), (0, 2), (3, 4), (4, 8), (5, 6),
+              (6, 7), (7, 8), (5, 8)]
+    got = sorted(bl.np_find_blocks((1 << 9) - 1, edges9, 9))
+    assert got == [0b1111, 0b11000, 0b100010000, 0b111100000]

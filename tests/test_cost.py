@@ -1,0 +1,32 @@
+"""Cost model: jnp/numpy twins agree; basic sanity."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost as cm
+
+rows = st.floats(0.0, 90.0)
+
+
+@settings(max_examples=100, deadline=None)
+@given(rows, rows, rows)
+def test_join_cost_twins_agree(a, b, o):
+    j = float(cm.join_cost(jnp.float32(a), jnp.float32(b), jnp.float32(o)))
+    n = float(cm.np_join_cost(np.float32(a), np.float32(b), np.float32(o)))
+    assert np.isfinite(j)
+    assert abs(j - n) <= 1e-5 * max(1.0, abs(n))
+
+
+@settings(max_examples=50, deadline=None)
+@given(rows, rows, rows)
+def test_join_cost_positive_and_symmetric(a, b, o):
+    j1 = float(cm.np_join_cost(np.float32(a), np.float32(b), np.float32(o)))
+    j2 = float(cm.np_join_cost(np.float32(b), np.float32(a), np.float32(o)))
+    assert j1 > 0
+    assert abs(j1 - j2) <= 1e-5 * max(1.0, j1)
+
+
+def test_rows_log2_clamped():
+    got = float(cm.rows_from_log2(jnp.float32(500.0)))
+    exp = float(np.exp2(np.float32(cm.LOG2_CAP)))
+    assert abs(got - exp) < 1e-5 * exp  # XLA/numpy exp2 differ by ulps

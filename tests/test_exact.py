@@ -1,0 +1,67 @@
+"""Exact engines vs DPCCP oracle: optimal cost, CCP counts, theorems."""
+import numpy as np
+import pytest
+
+from repro.core import dpccp, engine
+from repro.core.plan import validate_plan
+from repro.workloads import generators as gen
+from tests.helpers import rand_graph
+
+CASES = [
+    ("star8", gen.star(8, 1)),
+    ("snow9", gen.snowflake(9, 2)),
+    ("chain8", gen.chain(8, 3)),
+    ("cycle7", gen.cycle(7, 4)),
+    ("clique6", gen.clique(6, 5)),
+    ("mb10", gen.musicbrainz_query(10, 6)),
+    ("rand9", rand_graph(9, 4, 7)),
+]
+
+
+@pytest.mark.parametrize("name,g", CASES, ids=[c[0] for c in CASES])
+@pytest.mark.parametrize("algo", ["mpdp", "dpsub", "dpsize"])
+def test_optimal_cost_matches_dpccp(name, g, algo):
+    oracle = dpccp.solve(g)
+    r = engine.optimize(g, algo)
+    assert abs(r.cost - oracle.cost) <= 1e-4 * max(1.0, abs(oracle.cost))
+    validate_plan(r.plan, g)
+    expect = oracle.counters.ccp
+    if r.algorithm == "mpdp_tree":
+        expect //= 2          # tree MPDP enumerates each unordered pair once
+    assert r.counters.ccp == expect
+
+
+def test_theorem3_tree_no_invalid_pairs():
+    g = gen.star(10, 2)
+    r = engine.optimize(g, "mpdp")
+    assert r.algorithm == "mpdp_tree"
+    assert r.counters.evaluated == r.counters.ccp
+
+
+def test_lemma9_clique_no_invalid_pairs():
+    g = gen.clique(7, 3)
+    r = engine.optimize(g, "mpdp")
+    assert r.algorithm == "mpdp_general"
+    assert r.counters.evaluated == r.counters.ccp
+
+
+def test_mpdp_general_prunes_vs_dpsub():
+    # pick a random-walk query that actually contains cycles
+    for seed in range(9, 40):
+        g = gen.musicbrainz_query(12, seed)
+        if g.m > g.n - 1:
+            break
+    assert g.m > g.n - 1, "no cyclic MusicBrainz query found"
+    rm = engine.optimize(g, "mpdp")
+    rs = engine.optimize(g, "dpsub")
+    assert rm.counters.evaluated < rs.counters.evaluated
+    assert rm.counters.ccp == rs.counters.ccp
+
+
+def test_dense_cutvertex_fallback():
+    # dense-but-not-clique with low cyc_cap exercises the host-oracle path
+    g = rand_graph(8, 12, 11)
+    oracle = dpccp.solve(g)
+    r = engine.optimize(g, "mpdp", cyc_cap=2)
+    assert abs(r.cost - oracle.cost) <= 1e-4 * max(1.0, abs(oracle.cost))
+    assert r.counters.ccp == oracle.counters.ccp

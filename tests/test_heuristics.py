@@ -1,0 +1,51 @@
+"""Heuristics: plan validity, bounded quality, structural invariants."""
+import pytest
+
+from repro.core import engine
+from repro.core.plan import validate_plan
+from repro.heuristics import geqo, goo, idp, ikkbz, lindp, uniondp
+from repro.heuristics.uniondp import _partition
+from repro.heuristics.common import UnitGraph
+from repro.workloads import generators as gen
+
+GRAPHS = [gen.star(10, 1), gen.snowflake(12, 2), gen.musicbrainz_query(11, 3),
+          gen.job_like(10, 4)]
+
+
+@pytest.mark.parametrize("g", GRAPHS, ids=["star10", "snow12", "mb11", "job10"])
+@pytest.mark.parametrize("solver", [
+    goo.solve, ikkbz.solve, lindp.solve,
+    lambda g: geqo.solve(g, budget_s=2),
+    lambda g: idp.solve(g, k=6),
+    lambda g: uniondp.solve(g, k=6)],
+    ids=["goo", "ikkbz", "lindp", "geqo", "idp2", "uniondp"])
+def test_heuristic_valid_and_at_least_optimal(g, solver):
+    opt = engine.optimize(g, "mpdp")
+    r = solver(g)
+    validate_plan(r.plan, g)
+    assert r.cost >= opt.cost * (1 - 1e-4)
+
+
+def test_uniondp_partition_sizes_bounded():
+    g = gen.snowflake(40, 7)
+    ug = UnitGraph(g)
+    for k in (5, 10, 15):
+        groups = _partition(ug, k)
+        assert all(len(gr) <= k for gr in groups)
+        assert sum(len(gr) for gr in groups) == g.n
+
+
+def test_idp2_bigger_k_not_worse_on_average():
+    costs = {k: 0.0 for k in (4, 8)}
+    for seed in range(3):
+        g = gen.snowflake(25, seed)
+        for k in costs:
+            costs[k] += idp.solve(g, k=k).cost
+    assert costs[8] <= costs[4] * 1.05
+
+
+def test_large_query_end_to_end():
+    g = gen.snowflake(120, 13)
+    for r in (idp.solve(g, k=8), uniondp.solve(g, k=8), goo.solve(g)):
+        validate_plan(r.plan, g)
+        assert r.cost > 0

@@ -1,0 +1,119 @@
+"""Per-arch smoke tests (reduced configs) + decode/forward consistency."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import api
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=32):
+    if cfg.family == "encdec":
+        return {"frames": jnp.zeros((B, 16, cfg.frame_dim), jnp.bfloat16),
+                "tokens": jnp.ones((B, S), jnp.int32),
+                "targets": jnp.ones((B, S), jnp.int32)}
+    if cfg.family == "vlm":
+        return {"patch_embeds": jnp.zeros((B, cfg.n_patches, cfg.patch_dim),
+                                          jnp.bfloat16),
+                "tokens": jnp.ones((B, S), jnp.int32),
+                "targets": jnp.ones((B, S), jnp.int32)}
+    return {"tokens": jnp.ones((B, S), jnp.int32),
+            "targets": jnp.ones((B, S), jnp.int32)}
+
+
+@pytest.mark.parametrize("arch", api.ARCH_IDS)
+def test_reduced_smoke_loss_and_decode(arch):
+    cfg = api.get_config(arch).reduced()
+    model = api.build_model(cfg)
+    params = model.init_params(RNG)
+    loss = jax.jit(model.loss)(params, _batch(cfg))
+    assert np.isfinite(float(loss))
+    cache = model.init_cache(2, 64)
+    logits, cache2 = jax.jit(model.decode_step)(
+        params, cache, jnp.ones((2, 1), jnp.int32), jnp.int32(3))
+    assert logits.shape == (2, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    # cache structure preserved
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", api.ARCH_IDS)
+def test_train_step_decreases_loss(arch):
+    from repro.train.optimizer import init_train_state
+    cfg = api.get_config(arch).reduced()
+    step = jax.jit(api.make_train_step(cfg), donate_argnums=(0,))
+    model = api.build_model(cfg)
+    state = init_train_state(model.init_params(RNG))
+    batch = _batch(cfg)
+    losses = []
+    for _ in range(8):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0], losses   # memorize a fixed batch
+
+
+@pytest.mark.parametrize("arch", ["starcoder2_3b", "mamba2_370m",
+                                  "recurrentgemma_9b", "deepseek_v2_lite"])
+def test_decode_matches_forward(arch):
+    """Stepwise decode logits == teacher-forced forward logits (bf16
+    accumulation orders differ; MoE uses a dropless capacity so the
+    stochastic capacity-drop semantics don't confound the comparison)."""
+    import dataclasses
+    cfg = api.get_config(arch).reduced()
+    if cfg.moe:
+        cfg = dataclasses.replace(cfg, moe_cap_factor=8.0)
+    model = api.build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(1))
+    B, T = 2, 10
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, T), 1, cfg.vocab)
+    if cfg.family in ("dense", "moe"):
+        full, _ = model.forward(params, toks)
+    else:
+        full = model.forward(params, toks)
+    cache = model.init_cache(B, 32)
+    step = jax.jit(model.decode_step)
+    outs = []
+    for t in range(T):
+        lg, cache = step(params, cache, toks[:, t: t + 1], jnp.int32(t))
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    f = np.asarray(full, np.float32)
+    d = np.asarray(dec, np.float32)
+    corr = np.corrcoef(f.ravel(), d.ravel())[0, 1]
+    agree = (f.argmax(-1) == d.argmax(-1)).mean()
+    rel = np.abs(f - d).mean() / max(np.abs(f).max(), 1.0)
+    # MLA decode runs absorbed contractions in f32 while prefill is bf16
+    # (decode is the *more* accurate side) => slightly looser corr bound
+    assert corr > 0.998, corr
+    assert agree > 0.85, agree
+    assert rel < 0.01, rel
+
+
+def test_local_window_ring_cache_consistency():
+    """gemma-style local attention: ring cache == recompute with window."""
+    cfg = api.get_config("gemma3_12b").reduced()
+    assert any(w for w in cfg.window_pattern)
+    model = api.build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(3))
+    B, T = 1, 12
+    toks = jax.random.randint(jax.random.PRNGKey(4), (B, T), 1, cfg.vocab)
+    full, _ = model.forward(params, toks)
+    cache = model.init_cache(B, 16)
+    step = jax.jit(model.decode_step)
+    for t in range(T):
+        lg, cache = step(params, cache, toks[:, t: t + 1], jnp.int32(t))
+    f = np.asarray(full, np.float32)[:, -1]
+    d = np.asarray(lg, np.float32)
+    assert np.corrcoef(f.ravel(), d.ravel())[0, 1] > 0.999
+    assert np.abs(f - d).mean() / max(np.abs(f).max(), 1.0) < 0.01
+
+
+def test_param_counts_sane():
+    approx = {"gemma3_12b": 12e9, "starcoder2_3b": 3e9, "granite_3_8b": 8e9,
+              "llava_next_34b": 34e9, "phi35_moe": 42e9,
+              "deepseek_v2_lite": 16e9}
+    for arch, target in approx.items():
+        n = api.get_config(arch).param_count()
+        assert 0.5 * target < n < 1.8 * target, (arch, n, target)
