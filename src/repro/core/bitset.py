@@ -121,6 +121,40 @@ def is_connected(s: jnp.ndarray, adj: jnp.ndarray) -> jnp.ndarray:
     return grow(lsb(s), s, adj) == s
 
 
+# -- batched-query variants: each lane carries its own adjacency row ---------
+# (``adjq`` is i32[..., nmax]: lane l of a batch chunk sees the adjacency of
+# the query it was decoded to, so one kernel serves B stacked queries.)
+
+def neighbors_rows(s: jnp.ndarray, adjq: jnp.ndarray) -> jnp.ndarray:
+    """Like neighbors(), but with per-lane adjacency rows adjq: (..., nmax)."""
+    nmax = adjq.shape[-1]
+    mem = member_matrix(s, nmax).astype(bool)
+    sel = jnp.where(mem, adjq, jnp.int32(0))
+    return jnp.bitwise_or.reduce(sel, axis=-1)
+
+
+def grow_rows(src: jnp.ndarray, restrict: jnp.ndarray,
+              adjq: jnp.ndarray) -> jnp.ndarray:
+    """grow() with per-lane adjacency rows (batched-query fixed point)."""
+    src = src & restrict
+
+    def cond(state):
+        return state[1]
+
+    def body(state):
+        cur, _ = state
+        nxt = (cur | neighbors_rows(cur, adjq)) & restrict
+        return nxt, jnp.any(nxt != cur)
+
+    out, _ = jax.lax.while_loop(cond, body, (src, jnp.bool_(True)))
+    return out
+
+
+def is_connected_rows(s: jnp.ndarray, adjq: jnp.ndarray) -> jnp.ndarray:
+    """is_connected() with per-lane adjacency rows."""
+    return grow_rows(lsb(s), s, adjq) == s
+
+
 def pdep(rank: jnp.ndarray, mask: jnp.ndarray, nmax: int) -> jnp.ndarray:
     """Parallel bit deposit: scatter the low ``popcount(mask)`` bits of rank
     onto the set bit positions of ``mask`` (paper §2.2.1, x86 PDEP analogue).

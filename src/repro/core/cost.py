@@ -83,6 +83,38 @@ def np_join_cost(rl2_l, rl2_r, rl2_out):
 
 # --------------------------------------------------- set-cardinality helper --
 
+def np_rows_for_sets(sets_np: np.ndarray, g) -> np.ndarray:
+    """log2 rows for a batch of relation sets of ``g`` — f32[len(sets_np)].
+
+    This is the *canonical* rows computation shared by ``ExactEngine`` and
+    ``BatchEngine``: it depends only on the query's true ``n``/``m`` (never on
+    NMAX/EMAX padding), so a query produces bit-identical memo rows — and
+    therefore bit-identical plan costs — whether it is optimized alone or
+    folded into a batch bucket.
+    """
+    sets_np = np.asarray(sets_np, np.int32)   # NMAX_HARD = 30: bitmaps fit
+    if not len(sets_np):
+        return np.zeros(0, np.float32)
+    eu = np.array([1 << u for (u, v) in g.edges], np.int32)
+    ev = np.array([1 << v for (u, v) in g.edges], np.int32)
+    shifts = np.arange(g.n, dtype=np.int32)
+    out = np.empty(len(sets_np), np.float32)
+    # slice the level: the (chunk, n)/(chunk, m) temporaries stay small even
+    # for dense n=25+ levels with millions of connected sets.  Per-set values
+    # are independent, so slicing never changes a result bit.
+    step = 1 << 15
+    for s0 in range(0, len(sets_np), step):
+        sl = sets_np[s0: s0 + step]
+        mem = (sl[:, None] >> shifts) & 1
+        rows = mem.astype(np.float32) @ g.log2_card
+        if g.m:
+            inside = ((sl[:, None] & eu) != 0) & ((sl[:, None] & ev) != 0)
+            rows = rows + np.where(inside, g.log2_sel, np.float32(0.0)).sum(
+                axis=1, dtype=np.float32)
+        out[s0: s0 + step] = np.maximum(rows, np.float32(0.0))
+    return out
+
+
 def np_rows_log2(s: int, g) -> np.float32:
     """log2 rows of the join over relation set ``s`` (host; JoinGraph g)."""
     out = np.float32(0.0)

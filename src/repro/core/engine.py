@@ -58,10 +58,10 @@ def _cap(n: int, lo: int = 1024) -> int:
 
 # =========================================================== jitted kernels ==
 
-@partial(jax.jit, static_argnames=("nmax", "emax", "chunk"))
-def _filter_chunk(rank0, total, k, binom, adj, card_l2, emask_u, emask_v,
-                  esel_l2, *, nmax: int, emax: int, chunk: int):
-    """unrank + connectivity filter + per-set log2 rows."""
+@partial(jax.jit, static_argnames=("nmax", "chunk"))
+def _filter_chunk(rank0, total, k, binom, adj, *, nmax: int, chunk: int):
+    """unrank + connectivity filter (rows are costed on the host afterwards,
+    via the canonical ``cost.np_rows_for_sets`` shared with BatchEngine)."""
     t = jnp.arange(chunk, dtype=jnp.int32)
     ranks = rank0 + t
     mask = ranks < total
@@ -71,21 +71,13 @@ def _filter_chunk(rank0, total, k, binom, adj, card_l2, emask_u, emask_v,
         conn = (_ko.connectivity(S, adj, nmax) != 0) & mask
     else:
         conn = bs.is_connected(S, adj) & mask
-    mem = bs.member_matrix(S, nmax).astype(jnp.float32)
-    rows = mem @ card_l2
-    inside = ((S[:, None] & emask_u[None, :]) != 0) & ((S[:, None] & emask_v[None, :]) != 0)
-    rows = rows + jnp.where(inside, esel_l2[None, :], 0.0).sum(axis=1)
-    rows = jnp.maximum(rows, 0.0)
-    return S, conn, rows
+    return S, conn
 
 
-@partial(jax.jit, static_argnames=("nmax", "emax", "cap"))
-def _expand_chunk(sets_pad, n_valid, adj, card_l2, emask_u, emask_v, esel_l2,
-                  *, nmax: int, emax: int, cap: int):
+@partial(jax.jit, static_argnames=("nmax", "cap"))
+def _expand_chunk(sets_pad, n_valid, adj, *, nmax: int, cap: int):
     """Beyond-paper enumeration: grow level-(i-1) connected sets by one
-    neighbour each (host dedups) — skips unranking the full C(n,i) space.
-    Also returns rows for the PARENT sets' candidates lazily (rows are
-    recomputed for the deduped sets by _rows_chunk)."""
+    neighbour each (host dedups) — skips unranking the full C(n,i) space."""
     S = sets_pad
     nbr = bs.neighbors(S, adj) & ~S                    # (cap,)
     shifts = jnp.arange(nmax, dtype=jnp.int32)
@@ -93,17 +85,6 @@ def _expand_chunk(sets_pad, n_valid, adj, card_l2, emask_u, emask_v, esel_l2,
     cand = jnp.where(has, S[:, None] | (jnp.int32(1) << shifts), 0)
     live = (jnp.arange(cap) < n_valid)[:, None]
     return jnp.where(live, cand, 0)
-
-
-@partial(jax.jit, static_argnames=("nmax", "emax", "cap"))
-def _rows_chunk(sets_pad, adj, card_l2, emask_u, emask_v, esel_l2,
-                *, nmax: int, emax: int, cap: int):
-    S = sets_pad
-    mem = bs.member_matrix(S, nmax).astype(jnp.float32)
-    rows = mem @ card_l2
-    inside = ((S[:, None] & emask_u[None, :]) != 0) & ((S[:, None] & emask_v[None, :]) != 0)
-    rows = rows + jnp.where(inside, esel_l2[None, :], 0.0).sum(axis=1)
-    return jnp.maximum(rows, 0.0)
 
 
 @partial(jax.jit, static_argnames=("size", "cap"), donate_argnums=(0,))
@@ -121,6 +102,23 @@ def _lane_cost(S_left, S_right, S_rows, memo_cost, memo_rows):
     cr = memo_cost[S_right]
     jc = cm.join_cost(memo_rows[S_left], memo_rows[S_right], S_rows)
     return cl + cr + jc
+
+
+def _merge_best(best_cost, best_left, base, seg_cost, seg_left):
+    """Fold a chunk's per-segment minima into the level's host-side best
+    arrays (min cost, ties broken by max left bitmap).  Shared by ExactEngine
+    and BatchEngine — the tie-break must stay identical to keep batched and
+    sequential plans in lockstep."""
+    nseg = len(seg_cost)
+    idx = base + np.arange(nseg)
+    ok = (idx >= 0) & (idx < len(best_cost))
+    idx = idx[ok]
+    sc = seg_cost[ok]
+    sl = seg_left[ok]
+    better = (sc < best_cost[idx]) | ((sc == best_cost[idx]) & (sl > best_left[idx]))
+    upd = idx[better]
+    best_cost[upd] = sc[better]
+    best_left[upd] = sl[better]
 
 
 def _prune(seg, cand_cost, cand_left, nseg: int):
@@ -359,9 +357,10 @@ class ExactEngine:
         """Connected sets of level i (unrank+filter, or frontier expansion)."""
         t0 = time.perf_counter()
         if self.enum == "expand":
-            sets_np, rows_np = self._level_sets_expand(i)
+            sets_np = self._level_sets_expand(i)
         else:
-            sets_np, rows_np = self._level_sets_unrank(i)
+            sets_np = self._level_sets_unrank(i)
+        rows_np = cm.np_rows_for_sets(sets_np, self.g)
         self._prev_level = sets_np
         # scatter rows for this level; register in the packed level buffer
         if len(sets_np):
@@ -382,19 +381,17 @@ class ExactEngine:
     def _level_sets_unrank(self, i: int):
         """Paper Alg.5: unrank the full C(n, i) space, mask connectivity."""
         total = comb(self.n, i)
-        sets_l, rows_l = [], []
+        sets_l = []
         for rank0 in range(0, total, self.chunk):
-            S, conn, rows = _filter_chunk(
+            S, conn = _filter_chunk(
                 jnp.int32(rank0), jnp.int32(total), jnp.int32(i), self.binom,
-                self.dg.adj, self.dg.card_l2, self.dg.emask_u, self.dg.emask_v,
-                self.dg.esel_l2, nmax=self.nmax, emax=self.emax, chunk=self.chunk)
+                self.dg.adj, nmax=self.nmax, chunk=self.chunk)
             c = np.asarray(conn)
             if c.any():
                 sets_l.append(np.asarray(S)[c])
-                rows_l.append(np.asarray(rows)[c])
         if sets_l:
-            return np.concatenate(sets_l), np.concatenate(rows_l)
-        return np.zeros(0, np.int32), np.zeros(0, np.float32)
+            return np.concatenate(sets_l)
+        return np.zeros(0, np.int32)
 
     def _level_sets_expand(self, i: int):
         """Beyond-paper: expand level i-1 connected sets by one neighbour and
@@ -405,7 +402,7 @@ class ExactEngine:
         else:
             prev = self._prev_level
         if not len(prev):
-            return np.zeros(0, np.int32), np.zeros(0, np.float32)
+            return np.zeros(0, np.int32)
         cand_l = []
         for s0 in range(0, len(prev), self.chunk):
             sl = prev[s0: s0 + self.chunk]
@@ -413,39 +410,12 @@ class ExactEngine:
             pad = np.zeros(cap, np.int32)
             pad[: len(sl)] = sl
             cand = _expand_chunk(jnp.asarray(pad), jnp.int32(len(sl)),
-                                 self.dg.adj, self.dg.card_l2, self.dg.emask_u,
-                                 self.dg.emask_v, self.dg.esel_l2,
-                                 nmax=self.nmax, emax=self.emax, cap=cap)
+                                 self.dg.adj, nmax=self.nmax, cap=cap)
             c = np.asarray(cand).ravel()
             cand_l.append(c[c != 0])
-        sets_np = np.unique(np.concatenate(cand_l)) if cand_l else np.zeros(0, np.int32)
-        rows_l = []
-        for s0 in range(0, len(sets_np), self.chunk):
-            sl = sets_np[s0: s0 + self.chunk]
-            cap = _cap(len(sl))
-            pad = np.zeros(cap, np.int32)
-            pad[: len(sl)] = sl
-            rows = _rows_chunk(jnp.asarray(pad), self.dg.adj, self.dg.card_l2,
-                               self.dg.emask_u, self.dg.emask_v,
-                               self.dg.esel_l2, nmax=self.nmax,
-                               emax=self.emax, cap=cap)
-            rows_l.append(np.asarray(rows)[: len(sl)])
-        rows_np = np.concatenate(rows_l) if rows_l else np.zeros(0, np.float32)
-        return sets_np, rows_np
+        return np.unique(np.concatenate(cand_l)) if cand_l else np.zeros(0, np.int32)
 
     # ----------------------------------------------------------- merging ---
-    def _merge_chunk(self, best_cost, best_left, base_set, seg_cost, seg_left):
-        nseg = len(seg_cost)
-        idx = base_set + np.arange(nseg)
-        ok = idx < len(best_cost)
-        idx = idx[ok]
-        sc = seg_cost[ok]
-        sl = seg_left[ok]
-        better = (sc < best_cost[idx]) | ((sc == best_cost[idx]) & (sl > best_left[idx]))
-        upd = idx[better]
-        best_cost[upd] = sc[better]
-        best_left[upd] = sl[better]
-
     def _commit_level(self, sets_np, best_cost, best_left):
         fin = np.isfinite(best_cost)
         self._scatter(sets_np[fin], cost=best_cost[fin], left=best_left[fin])
@@ -471,8 +441,8 @@ class ExactEngine:
                     nmax=self.nmax, chunk=self.chunk, nseg=self.chunk + 1)
                 self.counters.evaluated += int(ev)
                 self.counters.ccp += int(cc)
-                self._merge_chunk(best_cost, best_left, lane0 >> i,
-                                  np.asarray(sc), np.asarray(sl))
+                _merge_best(best_cost, best_left, lane0 >> i,
+                            np.asarray(sc), np.asarray(sl))
             self._commit_level(sets_np, best_cost, best_left)
             self.timings["evaluate"] = self.timings.get("evaluate", 0.0) + time.perf_counter() - t0
 
@@ -499,8 +469,8 @@ class ExactEngine:
                     nmax=self.nmax, chunk=self.chunk, nseg=self.chunk + 1)
                 self.counters.evaluated += int(ev)
                 self.counters.ccp += int(cc)
-                self._merge_chunk(best_cost, best_left, lane0 // m,
-                                  np.asarray(sc), np.asarray(sl))
+                _merge_best(best_cost, best_left, lane0 // m,
+                            np.asarray(sc), np.asarray(sl))
             self._commit_level(sets_np, best_cost, best_left)
             self.timings["evaluate"] = self.timings.get("evaluate", 0.0) + time.perf_counter() - t0
 
@@ -701,3 +671,21 @@ def optimize(g: JoinGraph, algorithm: str = "auto", chunk: int = CHUNK,
     res = eng.result(algo, t0)
     res.timings = dict(eng.timings)
     return res
+
+
+def optimize_many(graphs, algorithm: str = "auto", chunk: int = CHUNK,
+                  cache=None, max_batch: int | None = None):
+    """Batched multi-query optimization — see ``batch.optimize_many``.
+
+    Pads compatible queries into one (NMAX, EMAX, CHUNK) bucket and runs the
+    level-synchronous DP with the batch folded into the lane dimension;
+    returns one ``OptimizeResult`` per input graph.  Freshly-computed results
+    have costs bit-identical to per-query ``optimize``; plan-cache hits are
+    instead re-costed canonically on the probing graph's exact stats (the
+    cache key quantizes stats at 1/4096 log2, so a hit's cost can differ at
+    that epsilon).
+    """
+    from . import batch as _batch
+    kw = {} if max_batch is None else {"max_batch": max_batch}
+    return _batch.optimize_many(graphs, algorithm=algorithm, chunk=chunk,
+                                cache=cache, **kw)

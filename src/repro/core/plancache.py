@@ -1,0 +1,149 @@
+"""Plan cache keyed by a canonical join-graph signature.
+
+A query stream (the ``query_service`` workload, or the per-round subproblems
+of IDP2/UnionDP) repeats structurally identical queries: the same template
+with the relations listed in a different order, or re-planned verbatim.  The
+cache canonicalizes a ``JoinGraph`` — relabel the vertices by an iterated
+WL-style refinement over (quantized stats, neighbourhood structure), then
+rewrite the edge list in canonical labels — and memoizes the optimized plan
+under that signature.
+
+Safety: the signature embeds the *complete* relabeled edge list plus the
+quantized per-vertex/per-edge statistics, so two graphs share a key only if
+they are the same query up to vertex relabeling (and stat quantization).  A
+hit therefore always yields a structurally valid plan for the probing graph;
+costs are re-derived canonically on the probing graph's exact stats via
+``cost_plan`` (quantization never leaks into reported costs).
+
+Ties in the refinement are broken by original index, which is not
+relabel-invariant — automorphic-modulo-stats vertices may canonicalize
+differently under different input labelings.  That only manifests as a cache
+*miss* (two keys for one isomorphism class), never as a wrong hit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+
+from .plan import OptimizeResult, Plan, cost_plan
+
+_QUANT = 4096.0          # log2-stat quantization: 1/4096 of a doubling
+_REFINE_ROUNDS = 3
+
+
+def _quantize(x: float) -> int:
+    return int(round(float(x) * _QUANT))
+
+
+def canonical_signature(g) -> tuple[tuple, list[int]]:
+    """Return ``(key, perm)`` where ``perm[orig_vertex] = canonical_vertex``.
+
+    The key is a hashable tuple fully describing the query up to relabeling:
+    ``(n, canonical edges, quantized cards in canonical order, quantized sels
+    in canonical edge order)``.
+    """
+    n = g.n
+    qcard = [_quantize(g.log2_card[v]) for v in range(n)]
+    qsel = [_quantize(s) for s in g.log2_sel]
+    nbrs: list[list[tuple[int, int]]] = [[] for _ in range(n)]
+    for ei, (u, v) in enumerate(g.edges):
+        nbrs[u].append((qsel[ei], v))
+        nbrs[v].append((qsel[ei], u))
+
+    # WL refinement: vertex invariant <- hash(own stats, sorted multiset of
+    # (edge stat, neighbour invariant)).  Stats-seeded, so generic queries
+    # separate in one or two rounds.
+    inv = [hash(("card", c)) for c in qcard]
+    for _ in range(_REFINE_ROUNDS):
+        inv = [hash((inv[v], tuple(sorted((s, inv[u]) for s, u in nbrs[v]))))
+               for v in range(n)]
+
+    order = sorted(range(n), key=lambda v: (inv[v], v))
+    perm = [0] * n
+    for canon, orig in enumerate(order):
+        perm[orig] = canon
+
+    edge_rows = sorted(
+        ((min(perm[u], perm[v]), max(perm[u], perm[v])), qsel[ei])
+        for ei, (u, v) in enumerate(g.edges))
+    key = (n,
+           tuple(e for e, _ in edge_rows),
+           tuple(qcard[orig] for orig in order),
+           tuple(s for _, s in edge_rows))
+    return key, perm
+
+
+def _relabel_plan(p: Plan, vmap: dict[int, int]) -> Plan:
+    """Structure-only relabeling; costs are re-derived by the caller."""
+    if p.is_leaf:
+        v = vmap[p.relations()[0]]
+        return Plan(rel_set=1 << v, cost=0.0, rows_log2=0.0)
+    l = _relabel_plan(p.left, vmap)
+    r = _relabel_plan(p.right, vmap)
+    return Plan(rel_set=l.rel_set | r.rel_set, cost=0.0, rows_log2=0.0,
+                left=l, right=r)
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    inserts: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class PlanCache:
+    """LRU cache: canonical signature -> plan shape in canonical labels."""
+
+    def __init__(self, max_entries: int = 4096):
+        self.max_entries = max_entries
+        self.stats = CacheStats()
+        self._d: OrderedDict[tuple, tuple[Plan, str]] = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    @property
+    def hits(self) -> int:
+        return self.stats.hits
+
+    @property
+    def misses(self) -> int:
+        return self.stats.misses
+
+    def get(self, g) -> OptimizeResult | None:
+        """Plan for ``g`` if a canonically-equal query was optimized before.
+
+        The cached canonical plan shape is mapped back through ``g``'s own
+        canonical permutation and re-costed on ``g``'s exact stats.
+        """
+        key, perm = canonical_signature(g)
+        entry = self._d.get(key)
+        if entry is None:
+            self.stats.misses += 1
+            return None
+        self._d.move_to_end(key)
+        self.stats.hits += 1
+        canon_plan, algo = entry
+        inv = {c: o for o, c in enumerate(perm)}
+        p = cost_plan(_relabel_plan(canon_plan, inv), g)
+        from .plan import Counters
+        return OptimizeResult(plan=p, cost=p.cost, counters=Counters(),
+                              algorithm=f"cache[{algo}]", levels=g.n)
+
+    def put(self, g, result: OptimizeResult) -> None:
+        key, perm = canonical_signature(g)
+        if key in self._d:
+            self._d.move_to_end(key)
+            return
+        canon_plan = _relabel_plan(result.plan, {v: perm[v] for v in range(g.n)})
+        self._d[key] = (canon_plan, result.algorithm)
+        self.stats.inserts += 1
+        while len(self._d) > self.max_entries:
+            self._d.popitem(last=False)
+            self.stats.evictions += 1

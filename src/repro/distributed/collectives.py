@@ -18,6 +18,26 @@ from jax.sharding import PartitionSpec as P
 BLOCK = 256
 
 
+def shard_map_compat(f, mesh, in_specs, out_specs, check=False):
+    """shard_map across JAX versions: top-level ``jax.shard_map`` with
+    ``check_vma`` (new) vs ``jax.experimental.shard_map`` with ``check_rep``
+    (<= 0.4.x).  The kwarg is picked by signature inspection so genuine
+    construction errors propagate instead of being retried away."""
+    import inspect
+    try:
+        from jax import shard_map as sm
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as sm
+    params = inspect.signature(sm).parameters
+    if "check_vma" in params:
+        kw = {"check_vma": check}
+    elif "check_rep" in params:
+        kw = {"check_rep": check}
+    else:
+        kw = {}
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+
+
 def _quant(x):
     flat = x.reshape(-1)
     n = flat.shape[0]
@@ -51,11 +71,10 @@ def int8_psum(x, axis_name: str):
 
 def compressed_grad_reduce(grads, mesh, axis: str = "pod"):
     """Tree-wide compressed all-reduce over one mesh axis (cross-pod DP)."""
-    from jax import shard_map
 
     def red(g):
-        f = shard_map(lambda t: int8_psum(t, axis), mesh=mesh,
-                      in_specs=P(), out_specs=P(), check_vma=False)
+        f = shard_map_compat(lambda t: int8_psum(t, axis), mesh=mesh,
+                             in_specs=P(), out_specs=P())
         return f(g)
 
     return jax.tree.map(red, grads)

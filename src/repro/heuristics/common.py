@@ -64,6 +64,13 @@ class UnitGraph:
     def n(self) -> int:
         return len(self.units)
 
+    def index_of(self, unit: Unit) -> int:
+        """Current slot of ``unit`` (by identity — merges reindex units)."""
+        for j, u in enumerate(self.units):
+            if u is unit:
+                return j
+        raise ValueError("unit is not in this UnitGraph")
+
     def neighbors(self, i: int) -> list[int]:
         out = []
         for (a, b) in self.edges:

@@ -8,6 +8,12 @@ Two components, exactly as in the paper:
     replace it by a single temp-table unit, and continue until one unit
     remains.  Composite cardinalities stay exact (log2 bookkeeping), so the
     search is over materialization boundaries only.
+
+Beyond the paper, each round selects up to ``batch`` *disjoint* costly
+subtrees instead of one: their unit sets don't overlap, so the exact
+subproblems are independent and ship to the device as a single
+``optimize_many`` batch (the batched lane-parallel DP), cutting both the
+number of rounds and the per-subproblem dispatch overhead.
 """
 from __future__ import annotations
 
@@ -125,6 +131,39 @@ def _most_costly_subtree(root: _TNode, k: int) -> _TNode:
     return best
 
 
+def _costly_disjoint_subtrees(root: _TNode, k: int, batch: int) -> list[_TNode]:
+    """Up to ``batch`` unit-disjoint internal nodes with <= k leaves, most
+    costly first.  The primary target keeps `_most_costly_subtree`'s fallback
+    semantics (always returns something merge-able); extras are best-effort.
+    """
+    cands: list[_TNode] = []
+
+    def rec(n: _TNode):
+        if n.is_leaf:
+            return
+        if 2 <= len(n.uids) <= k:
+            cands.append(n)
+        rec(n.left)
+        rec(n.right)
+
+    rec(root)
+    if not cands:
+        return [_most_costly_subtree(root, k)]     # walk-down fallback only
+    # stable descending sort of the DFS preorder: ordered[0] is the first of
+    # equal maxima, matching _most_costly_subtree's strict-> update rule
+    ordered = sorted(cands, key=lambda t: -t.cost)
+    chosen = [ordered[0]]
+    taken = set(ordered[0].uids)
+    for n in ordered[1:]:
+        if len(chosen) >= batch:
+            break
+        if n.uids & taken:
+            continue
+        chosen.append(n)
+        taken |= n.uids
+    return chosen
+
+
 def _replace(root: _TNode, target: _TNode, leaf: _TNode) -> _TNode:
     if root is target:
         return leaf
@@ -137,33 +176,34 @@ def _replace(root: _TNode, target: _TNode, leaf: _TNode) -> _TNode:
 
 
 def solve(g: JoinGraph, k: int = 15, subsolver: str = "mpdp",
-          max_rounds: Optional[int] = None) -> OptimizeResult:
+          max_rounds: Optional[int] = None, batch: int = 4) -> OptimizeResult:
     t0 = time.perf_counter()
     counters = Counters()
     if subsolver == "lindp":
         from . import lindp as _l
 
-        def sub(jg):
-            order = _l.ikkbz.best_order(jg)
-            p, _ = _l.dp_over_order(jg, order)
-            return p
+        def batch_sub(jgs):
+            out = []
+            for jg in jgs:
+                order = _l.ikkbz.best_order(jg)
+                p, _ = _l.dp_over_order(jg, order)
+                out.append(p)
+            return out
     else:
         from ..core import engine as _e
 
-        def sub(jg):
-            if jg.n == 1:
-                from ..core.plan import leaf_plan
-                return leaf_plan(0, jg)
-            r = _e.optimize(jg, subsolver)
-            counters.evaluated += r.counters.evaluated
-            counters.ccp += r.counters.ccp
-            return r.plan
+        def batch_sub(jgs):
+            rs = _e.optimize_many(jgs, algorithm=subsolver)
+            for r in rs:
+                counters.evaluated += r.counters.evaluated
+                counters.ccp += r.counters.ccp
+            return [r.plan for r in rs]
 
     ug = UnitGraph(g)
     if ug.n <= k:
         jg, idxs = ug.as_joingraph()
         from .common import expand_unit_plan
-        p = expand_unit_plan(sub(jg), [ug.units[i] for i in idxs], g)
+        p = expand_unit_plan(batch_sub([jg])[0], [ug.units[i] for i in idxs], g)
         return OptimizeResult(plan=p, cost=p.cost, counters=counters,
                               algorithm=f"idp2_{subsolver}",
                               wall_s=time.perf_counter() - t0)
@@ -176,38 +216,48 @@ def solve(g: JoinGraph, k: int = 15, subsolver: str = "mpdp",
         _recost(tree, ug)
         if ug.n == 1:
             break
-        target = _most_costly_subtree(tree, k)
-        ids = sorted(target.uids)
-        if len(ids) == len(tree.uids) and len(ids) <= k:
-            target = tree
-        jg, idxs = ug.as_joingraph(ids)
+        targets = _costly_disjoint_subtrees(tree, k, batch)
+        if (len(targets[0].uids) == len(tree.uids)
+                and len(tree.uids) <= k):
+            targets = [tree]
         from .common import expand_unit_plan
-        base_plan = expand_unit_plan(sub(jg), [ug.units[i] for i in idxs], g)
-        ug.merge(ids, base_plan)
-        # ug.units reindexed: composite appended at end, others shift.
-        old2new = {}
-        j = 0
-        dropped = set(ids)
-        for old in range(len(ug.units) + len(ids) - 1):
-            if old in dropped:
-                continue
-            old2new[old] = j
-            j += 1
-        new_leaf = _TNode(frozenset([len(ug.units) - 1]),
-                          unit=ug.units[-1])
-        tree = _replace(tree, target, new_leaf)
+        # disjoint targets: every subgraph extracts from the same pre-merge
+        # snapshot and the whole round runs as ONE batched device pass
+        jobs = []
+        for target in targets:
+            jg, idxs = ug.as_joingraph(sorted(target.uids))
+            jobs.append((jg, [ug.units[i] for i in idxs]))
+        plans = batch_sub([jg for jg, _ in jobs])
+        for target, (jg, ulist), plan in zip(targets, jobs, plans):
+            # recompute current indices by unit identity: earlier merges in
+            # this round reindexed ug.units
+            ids = sorted(ug.index_of(t) for t in ulist)
+            base_plan = expand_unit_plan(plan, ulist, g)
+            ug.merge(ids, base_plan)
+            # ug.units reindexed: composite appended at end, others shift.
+            old2new = {}
+            j = 0
+            dropped = set(ids)
+            for old in range(len(ug.units) + len(ids) - 1):
+                if old in dropped:
+                    continue
+                old2new[old] = j
+                j += 1
+            new_leaf = _TNode(frozenset([len(ug.units) - 1]),
+                              unit=ug.units[-1])
+            tree = _replace(tree, target, new_leaf)
 
-        def remap(n: _TNode):
-            if n is new_leaf:
-                return
-            if n.is_leaf:
-                n.uids = frozenset(old2new[u] for u in n.uids)
-                return
-            remap(n.left)
-            remap(n.right)
-            n.uids = n.left.uids | n.right.uids
+            def remap(n: _TNode, new_leaf=new_leaf, old2new=old2new):
+                if n is new_leaf:
+                    return
+                if n.is_leaf:
+                    n.uids = frozenset(old2new[u] for u in n.uids)
+                    return
+                remap(n.left)
+                remap(n.right)
+                n.uids = n.left.uids | n.right.uids
 
-        remap(tree)
+            remap(tree)
         rounds += 1
         if max_rounds and rounds >= max_rounds:
             break

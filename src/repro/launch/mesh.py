@@ -14,20 +14,25 @@ import numpy as np
 import jax
 
 
+def _make_mesh(shape, axes):
+    n = int(np.prod(shape))
+    devices = jax.devices()[:n]
+    at = getattr(jax.sharding, "AxisType", None)
+    if at is not None:                 # jax >= 0.5: explicit axis types
+        return jax.make_mesh(shape, axes, devices=devices,
+                             axis_types=(at.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    n = int(np.prod(shape))
-    return jax.make_mesh(
-        shape, axes, devices=jax.devices()[:n],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(shape=(1, 1), axes=("data", "model")):
     """Tiny mesh for CPU smoke tests (1 real device)."""
-    n = int(np.prod(shape))
-    return jax.make_mesh(shape, axes, devices=jax.devices()[:n],
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def dp_axes(mesh) -> tuple:

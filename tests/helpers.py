@@ -1,6 +1,70 @@
-"""Shared test graph builders."""
-import itertools, random
+"""Shared test graph builders + an optional-``hypothesis`` shim.
+
+Property tests import ``given``/``settings``/``st`` from here instead of from
+``hypothesis`` directly.  With hypothesis installed they get the real thing;
+without it they get a tiny deterministic fallback that replays a fixed,
+seeded example set through the same test bodies — the suite stays green (and
+still meaningful) on bare containers, and gains full shrinking/coverage when
+``pip install -r requirements-dev.txt`` has run.
+"""
+import functools
+import itertools
+import random
+
 from repro.core.joingraph import JoinGraph
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Minimal sampled strategy: ``sample(rng)`` draws one value."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def sample(self, rng):
+            return self._draw(rng)
+
+    class st:  # noqa: N801 — mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def tuples(*strats):
+            return _Strategy(lambda r: tuple(s.sample(r) for s in strats))
+
+        @staticmethod
+        def lists(strat, min_size=0, max_size=10):
+            return _Strategy(
+                lambda r: [strat.sample(r)
+                           for _ in range(r.randint(min_size, max_size))])
+
+    _FALLBACK_EXAMPLES = 25
+
+    def given(*strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = random.Random(f"repro:{fn.__module__}.{fn.__name__}")
+                for _ in range(_FALLBACK_EXAMPLES):
+                    drawn = tuple(s.sample(rng) for s in strats)
+                    fn(*args, *drawn, **kwargs)
+            # pytest must see the zero-arg wrapper signature, not the
+            # wrapped property-test params (it would hunt for fixtures)
+            del wrapper.__wrapped__
+            return wrapper
+        return deco
+
+    def settings(**kwargs):
+        return lambda fn: fn
 
 
 def rand_graph(n, extra=0, seed=0):

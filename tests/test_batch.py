@@ -1,0 +1,165 @@
+"""Batched multi-query optimization: bit-identical to sequential, oracle-
+backed for small n, plan cache hit semantics."""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import dpccp, engine
+from repro.core.batch import BatchEngine, optimize_many
+from repro.core.joingraph import JoinGraph
+from repro.core.plan import validate_plan
+from repro.core.plancache import PlanCache, canonical_signature
+from repro.workloads import generators as gen
+from tests.helpers import rand_graph
+
+
+def mixed_batch():
+    """Mixed sizes AND mixed nmax buckets (8 and 16), all topology classes."""
+    return [
+        gen.chain(6, 1), gen.star(7, 2), gen.cycle(8, 3), gen.clique(5, 4),
+        rand_graph(9, 3, 5), rand_graph(12, 4, 6),
+        gen.musicbrainz_query(10, 7), rand_graph(4, 0, 8),
+        gen.snowflake(11, 9), rand_graph(10, 6, 10),
+    ]
+
+
+def plan_shape(p):
+    if p.is_leaf:
+        return p.rel_set
+    return (p.rel_set, plan_shape(p.left), plan_shape(p.right))
+
+
+def relabeled(g, seed):
+    """Isomorphic copy of ``g`` under a random vertex permutation."""
+    perm = list(range(g.n))
+    random.Random(seed).shuffle(perm)
+    inv = [0] * g.n
+    for old, new in enumerate(perm):
+        inv[new] = old
+    return JoinGraph.make(
+        g.n,
+        [(perm[u], perm[v]) for (u, v) in g.edges],
+        [float(2.0 ** g.log2_card[inv[v]]) for v in range(g.n)],
+        [float(2.0 ** s) for s in g.log2_sel]), perm
+
+
+# ------------------------------------------------------- batch == sequential
+
+def test_costs_bit_identical_to_sequential():
+    graphs = mixed_batch()
+    many = optimize_many(graphs)
+    for g, r in zip(graphs, many):
+        seq = engine.optimize(g, "auto")
+        assert r.cost == seq.cost          # bit-identical, not approximately
+        validate_plan(r.plan, g)
+        assert r.algorithm == "batch_dpsub"
+
+
+def test_costs_match_dpccp_oracle_small():
+    graphs = [g for g in mixed_batch() if g.n <= 10]
+    assert len(graphs) >= 6
+    many = optimize_many(graphs)
+    for g, r in zip(graphs, many):
+        oracle = dpccp.solve(g)
+        assert abs(r.cost - oracle.cost) <= 1e-4 * max(1.0, abs(oracle.cost))
+
+
+def test_single_query_batch_and_leaf():
+    g = rand_graph(8, 2, 17)
+    [r] = optimize_many([g])
+    assert r.cost == engine.optimize(g, "auto").cost
+    leaf = JoinGraph.make(1, [], [1000.0], [])
+    [rl] = optimize_many([leaf])
+    assert rl.plan.is_leaf and rl.levels == 1
+
+
+def test_sub_batch_splitting_matches():
+    graphs = [rand_graph(7 + (i % 4), i % 3, 20 + i) for i in range(9)]
+    split = optimize_many(graphs, max_batch=3)
+    whole = optimize_many(graphs)
+    assert [r.cost for r in split] == [r.cost for r in whole]
+
+
+def test_batch_counters_match_sequential_dpsub():
+    graphs = [gen.chain(7, 1), gen.cycle(7, 2)]
+    many = optimize_many(graphs, algorithm="dpsub")
+    for g, r in zip(graphs, many):
+        seq = engine.optimize(g, "dpsub")
+        assert r.counters.evaluated == seq.counters.evaluated
+        assert r.counters.ccp == seq.counters.ccp
+
+
+def test_unsupported_algorithm_falls_back_sequential():
+    graphs = [gen.chain(6, 3), gen.star(6, 4)]
+    many = optimize_many(graphs, algorithm="dpsize")
+    for g, r in zip(graphs, many):
+        assert r.algorithm == "dpsize"
+        assert abs(r.cost - dpccp.solve(g).cost) <= 1e-4 * max(1.0, r.cost)
+
+
+def test_batch_engine_rejects_disconnected():
+    g = JoinGraph.make(3, [(0, 1)], [10.0, 10.0, 10.0], [0.1])
+    with pytest.raises(ValueError):
+        BatchEngine([g])
+
+
+# ------------------------------------------------------------- plan cache --
+
+def test_cache_repeat_hit_identical_plan():
+    g = rand_graph(9, 3, 42)
+    cache = PlanCache()
+    r1 = optimize_many([g], cache=cache)[0]
+    assert (cache.hits, cache.misses) == (0, 1)
+    r2 = optimize_many([g], cache=cache)[0]
+    assert (cache.hits, cache.misses) == (1, 1)
+    assert plan_shape(r1.plan) == plan_shape(r2.plan)
+    assert r2.algorithm.startswith("cache[")
+    validate_plan(r2.plan, g)
+
+
+def test_cache_isomorphic_relabel_hit():
+    g = rand_graph(10, 4, 43)
+    g2, _ = relabeled(g, seed=7)
+    k1, _ = canonical_signature(g)
+    k2, _ = canonical_signature(g2)
+    assert k1 == k2
+    cache = PlanCache()
+    optimize_many([g], cache=cache)
+    r = optimize_many([g2], cache=cache)[0]
+    assert cache.hits == 1
+    validate_plan(r.plan, g2)
+    fresh = engine.optimize(g2, "auto")
+    assert abs(r.cost - fresh.cost) <= 1e-4 * max(1.0, abs(fresh.cost))
+
+
+def test_cache_distinct_stats_miss():
+    g = rand_graph(8, 2, 44)
+    bumped = JoinGraph.make(
+        g.n, list(g.edges),
+        [float(2.0 ** c) * 3.0 for c in g.log2_card],
+        [float(2.0 ** s) for s in g.log2_sel])
+    cache = PlanCache()
+    optimize_many([g], cache=cache)
+    optimize_many([bumped], cache=cache)
+    assert cache.hits == 0 and cache.misses == 2
+
+
+def test_cache_lru_eviction():
+    cache = PlanCache(max_entries=2)
+    graphs = [rand_graph(6, 1, 50 + i) for i in range(3)]
+    optimize_many(graphs, cache=cache)
+    assert len(cache) == 2
+    assert cache.stats.evictions == 1
+
+
+def test_cache_hits_inside_one_stream():
+    g = rand_graph(9, 3, 60)
+    g2, _ = relabeled(g, seed=3)
+    cache = PlanCache()
+    rs = optimize_many([g, g2, g], cache=cache)
+    # one canonical representative computed; the two duplicates resolve as
+    # hits (the upfront probe counts each stream entry as a miss first)
+    assert cache.stats.inserts == 1 and cache.hits == 2
+    for gx, r in zip([g, g2, g], rs):
+        validate_plan(r.plan, gx)

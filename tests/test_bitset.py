@@ -1,8 +1,9 @@
-"""bitset primitives: jnp vs numpy mirrors (hypothesis property tests)."""
+"""bitset primitives: jnp vs numpy mirrors (property tests; hypothesis
+optional — see tests.helpers for the fixed-example fallback)."""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
 
+from tests.helpers import given, settings, st
 from repro.core import bitset as bs
 
 NMAX = 16

@@ -1,10 +1,10 @@
-"""Biconnected components: vectorized vs Hopcroft-Tarjan oracle."""
+"""Biconnected components: vectorized vs Hopcroft-Tarjan oracle (hypothesis
+optional — see tests.helpers for the fixed-example fallback)."""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
 
+from tests.helpers import given, rand_graph, settings, st
 from repro.core import blocks as bl, bitset as bs
-from tests.helpers import rand_graph
 
 NMAX = 16
 

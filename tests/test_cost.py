@@ -1,8 +1,9 @@
-"""Cost model: jnp/numpy twins agree; basic sanity."""
+"""Cost model: jnp/numpy twins agree; basic sanity (hypothesis optional —
+see tests.helpers for the fixed-example fallback)."""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
 
+from tests.helpers import given, settings, st
 from repro.core import cost as cm
 
 rows = st.floats(0.0, 90.0)

@@ -49,3 +49,36 @@ def test_large_query_end_to_end():
     for r in (idp.solve(g, k=8), uniondp.solve(g, k=8), goo.solve(g)):
         validate_plan(r.plan, g)
         assert r.cost > 0
+
+
+@pytest.mark.parametrize("n", [30, 60, 80])
+def test_heuristics_at_scale_beat_goo(n):
+    """IDP2 and UnionDP on 30-80-relation graphs: validate_plan-clean plans
+    with cost <= GOO, driving the batched exact-subproblem path (every
+    IDP2/UnionDP round ships its disjoint subproblems as one device batch).
+
+    For UnionDP the <= GOO guarantee comes from its quality floor, so the
+    *raw* partitioned plan (floor off) is checked separately against a
+    bounded regression factor — that part would catch partitioning bugs.
+    """
+    g = gen.snowflake(n, seed=n)
+    goo_cost = goo.solve(g).cost
+    for r in (idp.solve(g, k=8), uniondp.solve(g, k=8)):
+        validate_plan(r.plan, g)
+        assert r.counters.evaluated > 0          # exact core actually ran
+        assert r.cost <= goo_cost * (1 + 1e-4)
+    raw = uniondp.solve(g, k=8, goo_floor=False)
+    validate_plan(raw.plan, g)
+    assert raw.cost <= goo_cost * 4.0            # observed <= 2.4x; headroom
+
+
+def test_idp2_batched_rounds_match_single_target():
+    """batch=1 reproduces the paper's one-subtree-per-round IDP2; batched
+    rounds must stay validate_plan-clean and not regress plan quality."""
+    for seed in (3, 4):
+        g = gen.musicbrainz_query(30, seed=seed)
+        r1 = idp.solve(g, k=6, batch=1)
+        rb = idp.solve(g, k=6, batch=4)
+        validate_plan(r1.plan, g)
+        validate_plan(rb.plan, g)
+        assert rb.cost <= r1.cost * 1.05

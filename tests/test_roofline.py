@@ -57,14 +57,13 @@ def test_model_flops_moe_uses_active():
 def test_int8_compressed_psum_accuracy():
     """Compressed all-reduce ~= exact psum within quantization error."""
     import numpy as np
-    from jax import shard_map
     from repro.launch.mesh import make_host_mesh
-    from repro.distributed.collectives import int8_psum
+    from repro.distributed.collectives import int8_psum, shard_map_compat
 
     mesh = make_host_mesh((1,), ("pod",))
     x = np.random.default_rng(0).normal(size=(1000,)).astype(np.float32)
-    f = shard_map(lambda t: int8_psum(t, "pod"), mesh=mesh,
-                  in_specs=P(), out_specs=P(), check_vma=False)
+    f = shard_map_compat(lambda t: int8_psum(t, "pod"), mesh=mesh,
+                         in_specs=P(), out_specs=P())
     got = np.asarray(f(jnp.asarray(x)))
     rel = np.abs(got - x).max() / np.abs(x).max()
     assert rel < 1.5 / 127.0, rel

@@ -60,6 +60,9 @@ def test_crash_and_resume_matches_uninterrupted(tmp_path):
     """Kill training mid-run, resume from checkpoint, final loss must match
     the uninterrupted run (deterministic data + optimizer)."""
     env = dict(os.environ, PYTHONPATH=SRC)
+    # earlier tests may import repro.launch.dryrun, which pins XLA_FLAGS to a
+    # 512-device host platform; the training subprocess must not inherit it
+    env.pop("XLA_FLAGS", None)
     base = [sys.executable, "-m", "repro.launch.train", "--arch",
             "mamba2_370m", "--reduced", "--steps", "12", "--batch", "2",
             "--seq", "32", "--ckpt-every", "4", "--log-every", "50"]
