@@ -1,0 +1,92 @@
+"""CI gate: compare a fresh ``bench_batch --json`` report to the committed
+baseline and fail on throughput or lane-space regressions.
+
+Two checks per batched algorithm:
+
+  * **lane counts** (deterministic): ``evaluated_lanes`` must not grow over
+    the baseline — a growth means an enumeration-space regression (e.g. a
+    bucket silently falling back from the MPDP spaces to DPSUB).
+  * **throughput** (noisy): the batched *speedup over the same run's
+    sequential baseline* must not regress more than ``--tolerance`` (default
+    25%).  Speedup is self-normalizing — absolute queries/sec depends on the
+    CI machine, the within-run ratio does not — so the 25% gate tracks real
+    pipeline regressions instead of runner lottery.  Because the ratio still
+    shifts with core count (the general lanes' phase A is host-serialized),
+    a baseline entry may carry an explicit ``speedup_floor`` that replaces
+    the computed ``speedup * (1 - tolerance)`` floor with a conservative
+    hand-picked cross-machine bound.
+
+Also re-asserts the structural invariant that the MPDP lane spaces evaluate
+fewer lanes than batched DPSUB on the (tree-heavy) benchmark stream.
+
+    python benchmarks/check_regression.py BENCH_batch.json \
+        benchmarks/BENCH_baseline.json [--tolerance 0.25]
+
+Exit code 0 = no regression; 1 = regression (message on stdout).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check(current: dict, baseline: dict, tolerance: float = 0.25) -> list[str]:
+    errors: list[str] = []
+    for algo, base in baseline["algorithms"].items():
+        cur = current["algorithms"].get(algo)
+        if cur is None:
+            errors.append(f"[{algo}] missing from current report")
+            continue
+        if cur["evaluated_lanes"] > base["evaluated_lanes"]:
+            errors.append(
+                f"[{algo}] evaluated lanes grew: {cur['evaluated_lanes']} > "
+                f"baseline {base['evaluated_lanes']}")
+        floor = base.get("speedup_floor", base["speedup"] * (1.0 - tolerance))
+        if cur["speedup"] < floor:
+            errors.append(
+                f"[{algo}] queries/sec regressed >{tolerance:.0%}: speedup "
+                f"{cur['speedup']:.2f}x < {floor:.2f}x "
+                f"(baseline {base['speedup']:.2f}x)")
+    algos = current["algorithms"]
+    if ("mpdp" in algos and "dpsub" in algos
+            and algos["mpdp"]["evaluated_lanes"] >= algos["dpsub"]["evaluated_lanes"]):
+        errors.append(
+            "mpdp lane spaces no longer prune vs dpsub: "
+            f"{algos['mpdp']['evaluated_lanes']} >= "
+            f"{algos['dpsub']['evaluated_lanes']}")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="fresh bench_batch --json report")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed fractional speedup regression (default .25)")
+    args = ap.parse_args()
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    if current.get("queries") != baseline.get("queries") or \
+            current.get("seed") != baseline.get("seed"):
+        print("note: stream shape differs from baseline "
+              f"(current {current.get('queries')}q/seed {current.get('seed')} "
+              f"vs baseline {baseline.get('queries')}q/seed "
+              f"{baseline.get('seed')}); lane comparison may be vacuous")
+    errors = check(current, baseline, args.tolerance)
+    for algo, a in sorted(current["algorithms"].items()):
+        print(f"[{algo}] qps {a['qps']:.2f} speedup {a['speedup']:.2f}x "
+              f"lanes {a['evaluated_lanes']}")
+    if errors:
+        print("\nBENCHMARK REGRESSION:")
+        for e in errors:
+            print("  " + e)
+        return 1
+    print("\nno regression vs baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

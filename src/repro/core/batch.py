@@ -24,10 +24,23 @@ buckets), leaf costs from the same ``np_scan_cost``, per-lane candidate costs
 from the same elementwise f32 kernel ops over identically-shaped chunks, and
 the per-set reduction is an exact f32 min over the same CCP candidate set.
 
-The batched evaluate enumerates the DPSUB lane space (``sets x 2^i`` with
-connectivity masking) rather than the per-topology MPDP spaces: with the
-batch folded into lanes the chunk is already dense, so the simpler decode
-wins; the enumerated candidate *minima* are identical either way.
+The batched evaluate supports the same per-topology *lane spaces* as the
+single-query ``ExactEngine``: DPSUB (``sets x 2^i``), MPDP:Tree
+(``sets x m`` — per-lane (query, set, edge) decode), and MPDP-general
+(block prefix-sum — phase A reuses the shared host driver
+``blocks.np_pairs_for_sets`` per query, phase B fuses every query's
+(set, block) pairs into one lane space).  ``optimize_many``'s dispatcher
+picks the space per (NMAX, topology) bucket: all-acyclic buckets run the
+tree lanes, everything else the general lanes — cutting evaluated lanes on
+sparse batches the way MPDP does for single queries, with candidate minima
+(and therefore costs/plans) bit-identical across spaces.
+
+``REPRO_PALLAS=1`` routes the per-lane bit-twiddling of every batched
+evaluator through the Pallas TPU kernels (``kernels.ccp_eval`` batched
+variants: the (bcap, NMAX) adjacency table is scalar-prefetched to SMEM and
+a static select loop materializes each lane's own adjacency row); the
+pure-XLA vector path below stays the ``REPRO_PALLAS=0`` fallback.  The flag
+is threaded as a *static* jit arg so both traces coexist in one process.
 
 ``optimize_many`` is the public entry point; it also consults an optional
 ``PlanCache`` (canonical-signature keyed) before touching the device.
@@ -43,10 +56,12 @@ import jax
 import jax.numpy as jnp
 
 from . import bitset as bs
+from . import blocks as bl
 from . import cost as cm
 from . import unrank as ur
-from .engine import (CHUNK, INF, _cap, _merge_best, _prune, _scatter_f32,
-                     _scatter_i32)
+from .engine import (CHUNK, CYC_CAP_DEFAULT, INF, _cap, _merge_best,
+                     _merge_scattered, _prune, _scatter_f32, _scatter_i32,
+                     _use_pallas)
 from .joingraph import JoinGraph
 from .plan import Counters, OptimizeResult, extract_plan, leaf_plan
 
@@ -61,8 +76,9 @@ def _bcap(b: int) -> int:
 
 # =========================================================== jitted kernels ==
 
-@partial(jax.jit, static_argnames=("nmax", "chunk", "bcap"))
-def _bfilter_chunk(foff, k, binom, adj_b, *, nmax: int, chunk: int, bcap: int):
+@partial(jax.jit, static_argnames=("nmax", "chunk", "bcap", "pallas"))
+def _bfilter_chunk(foff, k, binom, adj_b, *, nmax: int, chunk: int, bcap: int,
+                   pallas: bool = False):
     """Batched unrank + connectivity filter.
 
     foff: i32[bcap+1] chunk-local per-query rank offsets (prefix sums of
@@ -75,15 +91,20 @@ def _bfilter_chunk(foff, k, binom, adj_b, *, nmax: int, chunk: int, bcap: int):
     rank = t - foff[qid]
     live = t < foff[bcap]
     S = ur.unrank_ksubset(jnp.maximum(rank, 0), k, binom, nmax)
-    adjq = adj_b[qid]                                  # (chunk, nmax)
-    conn = bs.is_connected_rows(S, adjq) & live
+    if pallas:
+        from ..kernels import ops as _ko
+        conn = (_ko.bconnectivity(S, qid, adj_b, nmax, bcap) != 0) & live
+    else:
+        adjq = adj_b[qid]                              # (chunk, nmax)
+        conn = bs.is_connected_rows(S, adjq) & live
     return S, conn, qid
 
 
-@partial(jax.jit, static_argnames=("nmax", "chunk", "nseg", "bcap"))
+@partial(jax.jit, static_argnames=("nmax", "chunk", "nseg", "bcap", "pallas"))
 def _beval_dpsub_chunk(all_sets, eoff, loff, soff, seg0, i,
                        adj_b, memo_cost, memo_rows,
-                       *, nmax: int, chunk: int, nseg: int, bcap: int):
+                       *, nmax: int, chunk: int, nseg: int, bcap: int,
+                       pallas: bool = False):
     """Batched DPSUB evaluate: lane -> (query, set, subset) decode.
 
     eoff: i32[bcap+1] chunk-local per-query lane offsets (prefix of ns_q<<i).
@@ -98,14 +119,19 @@ def _beval_dpsub_chunk(all_sets, eoff, loff, soff, seg0, i,
     set_idx = local >> i
     sub = local & ((jnp.int32(1) << i) - 1)
     S = all_sets[loff[qid] + set_idx]
-    adjq = adj_b[qid]
-    lb = bs.pdep(sub, S, nmax)
-    rb = S & ~lb
-    nonempty = (lb != 0) & (rb != 0)
-    conn_l = bs.is_connected_rows(lb, adjq)
-    conn_r = bs.is_connected_rows(rb, adjq)
-    cross = (bs.neighbors_rows(lb, adjq) & rb) != 0
-    ccp = live & nonempty & conn_l & conn_r & cross
+    if pallas:
+        from ..kernels import ops as _ko
+        lb, rb, ccp_i = _ko.bccp_eval(S, sub, qid, adj_b, nmax, bcap)
+        ccp = live & (ccp_i != 0)
+    else:
+        adjq = adj_b[qid]
+        lb = bs.pdep(sub, S, nmax)
+        rb = S & ~lb
+        nonempty = (lb != 0) & (rb != 0)
+        conn_l = bs.is_connected_rows(lb, adjq)
+        conn_r = bs.is_connected_rows(rb, adjq)
+        cross = (bs.neighbors_rows(lb, adjq) & rb) != 0
+        ccp = live & nonempty & conn_l & conn_r & cross
     mbase = qid << nmax                                # per-query memo region
     rows_S = memo_rows[mbase | S]
     cl = memo_cost[mbase | lb]
@@ -119,21 +145,139 @@ def _beval_dpsub_chunk(all_sets, eoff, loff, soff, seg0, i,
     return seg_cost, seg_left, ev_q, ccp_q
 
 
+@partial(jax.jit, static_argnames=("nmax", "chunk", "nseg", "bcap", "pallas"))
+def _beval_tree_chunk(all_sets, eoff, loff, soff, seg0, m_b,
+                      adj_b, emu_b, emv_b, memo_cost, memo_rows,
+                      *, nmax: int, chunk: int, nseg: int, bcap: int,
+                      pallas: bool = False):
+    """Batched MPDP:Tree evaluate: lane -> (query, set, edge) decode.
+
+    eoff: i32[bcap+1] chunk-local per-query lane offsets (prefix of ns_q*m_q).
+    m_b:  i32[bcap]   per-query edge count (lane-minor dimension).
+    emu_b/emv_b: i32[bcap, emax] per-query edge endpoint bitmaps (0 pad).
+    Every enumerated in-set edge IS a CCP pair (Theorem 3): the tree lane
+    space is ``sets x m`` instead of DPSUB's ``sets x 2^i``.
+    """
+    t = jnp.arange(chunk, dtype=jnp.int32)
+    qid = jnp.clip(jnp.searchsorted(eoff, t, side="right").astype(jnp.int32) - 1,
+                   0, bcap - 1)
+    local = t - eoff[qid]
+    live = t < eoff[bcap]
+    mq = jnp.maximum(m_b[qid], 1)
+    set_idx = local // mq
+    e = local % mq
+    S = all_sets[loff[qid] + set_idx]
+    ub = emu_b[qid, e]
+    vb = emv_b[qid, e]
+    if pallas:
+        from ..kernels import ops as _ko
+        S_left, in_i = _ko.btree_eval(S, ub, vb, qid, adj_b, nmax, bcap)
+        edge_in = live & (in_i != 0)
+    else:
+        adjq = adj_b[qid]
+        edge_in = live & ((S & ub) != 0) & ((S & vb) != 0)
+        S_left = bs.grow_excl_edge_rows(ub, S, adjq, ub, vb)
+    S_right = S & ~S_left
+    evaluated = edge_in                                # Theorem 3: all CCP
+    ccp = edge_in
+    mbase = qid << nmax
+    rows_S = memo_rows[mbase | S]
+    cl = memo_cost[mbase | S_left]
+    cr = memo_cost[mbase | S_right]
+    jc = cm.join_cost(memo_rows[mbase | S_left], memo_rows[mbase | S_right],
+                      rows_S)
+    cand = jnp.where(ccp, cl + cr + jc, INF)
+    seg = jnp.clip(soff[qid] + set_idx - seg0, 0, nseg - 1)
+    seg_cost, seg_left = _prune(seg, cand, S_left, nseg)
+    ev_q = jax.ops.segment_sum(evaluated.astype(jnp.int32), qid,
+                               num_segments=bcap)
+    ccp_q = jax.ops.segment_sum(ccp.astype(jnp.int32), qid, num_segments=bcap)
+    return seg_cost, seg_left, ev_q, ccp_q
+
+
+@partial(jax.jit, static_argnames=("nmax", "chunk", "pcap", "bcap", "pallas"))
+def _beval_general_chunk(pair_set, pair_block, pair_qid, off_local, n_pairs,
+                         lane_count, adj_b, memo_cost, memo_rows,
+                         *, nmax: int, chunk: int, pcap: int, bcap: int,
+                         pallas: bool = False):
+    """Batched MPDP-general evaluate: lane -> (query, set, block, rank).
+
+    Phase A (host, per query) compacted every set's blocks into sorted
+    (set, block) pairs; the fused lane space is the block prefix-sum over
+    *all* queries' pairs.  Lane -> pair via searchsorted on ``off_local``;
+    the pair carries its query id for the memo-region / adjacency decode.
+    """
+    t = jnp.arange(chunk, dtype=jnp.int32)
+    live = t < lane_count
+    p = jnp.clip(jnp.searchsorted(off_local, t, side="right").astype(jnp.int32) - 1,
+                 0, n_pairs - 1)
+    r = t - off_local[p]
+    S = pair_set[p]
+    block = pair_block[p]
+    qid = pair_qid[p]
+    if pallas:
+        from ..kernels import ops as _ko
+        lb, S_left, ccp_i = _ko.bgeneral_eval(S, block, r, qid, adj_b, nmax,
+                                              bcap)
+        rb = block & ~lb
+        enum_ok = live & (lb != 0) & (rb != 0)             # Alg.3 line 6/7
+        ccp_blk = enum_ok & (ccp_i != 0)
+    else:
+        adjq = adj_b[qid]
+        lb = bs.pdep(r, block, nmax)
+        rb = block & ~lb
+        enum_ok = live & (lb != 0) & (rb != 0)             # Alg.3 line 6/7
+        conn_l = bs.is_connected_rows(lb, adjq)
+        conn_r = bs.is_connected_rows(rb, adjq)
+        cross = (bs.neighbors_rows(lb, adjq) & rb) != 0
+        ccp_blk = enum_ok & conn_l & conn_r & cross
+        S_left = bs.grow_rows(lb, S & ~rb, adjq)           # Alg.3 line 17
+    S_right = S & ~S_left
+    mbase = qid << nmax
+    rows_S = memo_rows[mbase | S]
+    cl = memo_cost[mbase | S_left]
+    cr = memo_cost[mbase | S_right]
+    jc = cm.join_cost(memo_rows[mbase | S_left], memo_rows[mbase | S_right],
+                      rows_S)
+    cand = jnp.where(ccp_blk, cl + cr + jc, INF)
+    seg_cost, seg_left = _prune(p, cand, S_left, pcap)
+    ev_q = jax.ops.segment_sum(enum_ok.astype(jnp.int32), qid,
+                               num_segments=bcap)
+    ccp_q = jax.ops.segment_sum(ccp_blk.astype(jnp.int32), qid,
+                                num_segments=bcap)
+    return seg_cost, seg_left, ev_q, ccp_q
+
+
 # ============================================================== host driver ==
 
 class BatchEngine:
-    """Level-synchronous DP over a batch of queries in one device pipeline."""
+    """Level-synchronous DP over a batch of queries in one device pipeline.
 
-    def __init__(self, graphs: list[JoinGraph], chunk: int = CHUNK):
+    ``algorithm`` selects the evaluate lane space: ``dpsub`` (``sets x 2^i``),
+    ``mpdp_tree`` (``sets x m``; requires every query to be acyclic) or
+    ``mpdp_general`` (block prefix-sum).  All three enumerate the same CCP
+    candidate minima, so costs/plans are identical — only the evaluated-lane
+    counts differ.
+    """
+
+    def __init__(self, graphs: list[JoinGraph], chunk: int = CHUNK,
+                 algorithm: str = "dpsub", cyc_cap: int = CYC_CAP_DEFAULT):
         if not graphs:
             raise ValueError("empty batch")
+        if algorithm not in ("dpsub", "mpdp_tree", "mpdp_general"):
+            raise ValueError(f"unknown batched lane space {algorithm!r}")
         for g in graphs:
             if g.n < 2:
                 raise ValueError("BatchEngine needs n >= 2 (leaf queries are "
                                  "handled by optimize_many)")
             if not g.is_connected():
                 raise ValueError("query graph must be connected (no cross products)")
+            if algorithm == "mpdp_tree" and not g.is_tree():
+                raise ValueError("mpdp_tree lane space needs acyclic queries")
         self.graphs = graphs
+        self.algorithm = algorithm
+        self.cyc_cap = cyc_cap
+        self.pallas = _use_pallas()        # read per engine; static jit arg
         self.B = len(graphs)
         self.bcap = _bcap(self.B)
         self.nmax = max(bs.nmax_bucket(g.n) for g in graphs)
@@ -149,6 +293,28 @@ class BatchEngine:
                 adj[q, u] |= 1 << v
                 adj[q, v] |= 1 << u
         self.adj_b = jnp.asarray(adj)
+        # per-query edge arrays: endpoint bitmaps (tree lane decode) and
+        # endpoint indices (general phase A), stacked on a shared EMAX bucket
+        max_m = max(g.m for g in graphs)
+        self.emax = max(8, int(np.ceil(max(max_m, 1) / 8.0)) * 8)
+        emu = np.zeros((self.bcap, self.emax), np.int32)
+        emv = np.zeros((self.bcap, self.emax), np.int32)
+        eui = np.full((self.bcap, self.emax), -1, np.int32)
+        evi = np.full((self.bcap, self.emax), -1, np.int32)
+        eliv = np.zeros((self.bcap, self.emax), bool)
+        for q, g in enumerate(graphs):
+            for i, (u, v) in enumerate(g.edges):
+                emu[q, i] = 1 << u
+                emv[q, i] = 1 << v
+                eui[q, i], evi[q, i], eliv[q, i] = u, v, True
+        self.emu_b = jnp.asarray(emu)
+        self.emv_b = jnp.asarray(emv)
+        self.eu_idx_b = jnp.asarray(eui)
+        self.ev_idx_b = jnp.asarray(evi)
+        self.edge_live_b = jnp.asarray(eliv)
+        self.m_b = jnp.asarray(
+            np.array([g.m for g in graphs] + [0] * (self.bcap - self.B),
+                     np.int32))
         self.counters = [Counters() for _ in graphs]
         self.timings: dict[str, float] = {}
         self._init_memo()
@@ -225,7 +391,8 @@ class BatchEngine:
             fpad[: self.B + 1] = fl
             S, conn, qid = _bfilter_chunk(
                 jnp.asarray(fpad), jnp.int32(i), self.binom, self.adj_b,
-                nmax=self.nmax, chunk=self.chunk, bcap=self.bcap)
+                nmax=self.nmax, chunk=self.chunk, bcap=self.bcap,
+                pallas=self.pallas)
             c = np.asarray(conn)
             if c.any():
                 Sc = np.asarray(S)[c]
@@ -261,9 +428,33 @@ class BatchEngine:
                                   + time.perf_counter() - t0)
 
     # ---------------------------------------------------------- evaluate ---
+    def _commit_best(self, sets_by_q, best_cost, best_left) -> None:
+        """Commit a level: per-query slices of the fused best arrays."""
+        idx_l, cost_l, left_l = [], [], []
+        off = 0
+        for q, sets_q in enumerate(sets_by_q):
+            nsq = len(sets_q)
+            bc = best_cost[off: off + nsq]
+            blft = best_left[off: off + nsq]
+            off += nsq
+            fin = np.isfinite(bc)
+            if fin.any():
+                idx_l.append((q << self.nmax) + sets_q[fin].astype(np.int64))
+                cost_l.append(bc[fin])
+                left_l.append(blft[fin])
+        if idx_l:
+            self._scatter(np.concatenate(idx_l), cost=np.concatenate(cost_l),
+                          left=np.concatenate(left_l))
+
     def _eval_level(self, i: int, sets_by_q: list[np.ndarray]) -> None:
+        """Segmented lane spaces (DPSUB ``sets x 2^i``, tree ``sets x m``):
+        lanes of query q are contiguous, ``ns_q * mult_q`` long."""
         ns = np.array([len(s) for s in sets_by_q], np.int64)
-        lanes = ns << i
+        if self.algorithm == "mpdp_tree":
+            mult = np.array([g.m for g in self.graphs], np.int64)
+        else:
+            mult = np.full(self.B, np.int64(1) << i, np.int64)
+        lanes = ns * mult
         eoff = np.zeros(self.B + 1, np.int64)
         np.cumsum(lanes, out=eoff[1:])
         total = int(eoff[-1])
@@ -291,12 +482,21 @@ class BatchEngine:
             epad[: self.B + 1] = el
             p0 = int(np.searchsorted(eoff, lane0, side="right")) - 1
             p0 = min(max(p0, 0), self.B - 1)
-            seg0 = int(soff[p0] + ((lane0 - eoff[p0]) >> i))
-            sc, sl, ev_q, ccp_q = _beval_dpsub_chunk(
-                self.all_sets, jnp.asarray(epad), loff_d, soff_d,
-                jnp.int32(seg0), jnp.int32(i), self.adj_b,
-                self.memo_cost, self.memo_rows,
-                nmax=self.nmax, chunk=self.chunk, nseg=nseg, bcap=self.bcap)
+            seg0 = int(soff[p0] + (lane0 - eoff[p0]) // mult[p0])
+            if self.algorithm == "mpdp_tree":
+                sc, sl, ev_q, ccp_q = _beval_tree_chunk(
+                    self.all_sets, jnp.asarray(epad), loff_d, soff_d,
+                    jnp.int32(seg0), self.m_b, self.adj_b,
+                    self.emu_b, self.emv_b, self.memo_cost, self.memo_rows,
+                    nmax=self.nmax, chunk=self.chunk, nseg=nseg,
+                    bcap=self.bcap, pallas=self.pallas)
+            else:
+                sc, sl, ev_q, ccp_q = _beval_dpsub_chunk(
+                    self.all_sets, jnp.asarray(epad), loff_d, soff_d,
+                    jnp.int32(seg0), jnp.int32(i), self.adj_b,
+                    self.memo_cost, self.memo_rows,
+                    nmax=self.nmax, chunk=self.chunk, nseg=nseg,
+                    bcap=self.bcap, pallas=self.pallas)
             ev_acc += np.asarray(ev_q)[: self.B]
             ccp_acc += np.asarray(ccp_q)[: self.B]
             _merge_best(best_cost, best_left, seg0,
@@ -304,22 +504,89 @@ class BatchEngine:
         for q in range(self.B):
             self.counters[q].evaluated += int(ev_acc[q])
             self.counters[q].ccp += int(ccp_acc[q])
-        # commit the level: per-query slices of the global best arrays
-        idx_l, cost_l, left_l = [], [], []
-        off = 0
+        self._commit_best(sets_by_q, best_cost, best_left)
+        self.timings["evaluate"] = (self.timings.get("evaluate", 0.0)
+                                    + time.perf_counter() - t0)
+
+    # ------------------------------------------------- MPDP-general phase --
+    def _pairs_level(self, sets_by_q: list[np.ndarray]):
+        """Phase A per query (shared ``blocks.np_pairs_for_sets`` driver),
+        fused into global (set, block, qid, segment) pair arrays."""
+        t0 = time.perf_counter()
+        soff = 0
+        ps_l, pb_l, pq_l, pk_l = [], [], [], []
         for q, sets_q in enumerate(sets_by_q):
-            nsq = len(sets_q)
-            bc = best_cost[off: off + nsq]
-            bl = best_left[off: off + nsq]
-            off += nsq
-            fin = np.isfinite(bc)
-            if fin.any():
-                idx_l.append((q << self.nmax) + sets_q[fin].astype(np.int64))
-                cost_l.append(bc[fin])
-                left_l.append(bl[fin])
-        if idx_l:
-            self._scatter(np.concatenate(idx_l), cost=np.concatenate(cost_l),
-                          left=np.concatenate(left_l))
+            if not len(sets_q):
+                continue
+            ps_q, pb_q = bl.np_pairs_for_sets(
+                sets_q, self.graphs[q], self.adj_b[q], self.eu_idx_b[q],
+                self.ev_idx_b[q], self.edge_live_b[q],
+                nmax=self.nmax, emax=self.emax, cyc_cap=self.cyc_cap)
+            ps_l.append(ps_q)
+            pb_l.append(pb_q)
+            pq_l.append(np.full(len(ps_q), q, np.int32))
+            # sets_q is ascending (colex rank order == ascending bitmap)
+            pk_l.append(soff + np.searchsorted(sets_q, ps_q).astype(np.int64))
+            soff += len(sets_q)
+        self.timings["blocks"] = (self.timings.get("blocks", 0.0)
+                                  + time.perf_counter() - t0)
+        if not ps_l:
+            z = np.zeros(0, np.int32)
+            return z, z, z, np.zeros(0, np.int64)
+        return (np.concatenate(ps_l), np.concatenate(pb_l),
+                np.concatenate(pq_l), np.concatenate(pk_l))
+
+    def _eval_level_general(self, i: int, sets_by_q: list[np.ndarray]) -> None:
+        ps, pb, pq, pk = self._pairs_level(sets_by_q)
+        if not len(ps):
+            return
+        t0 = time.perf_counter()
+        sizes = bs.np_popcount(pb).astype(np.int64)
+        lane_sz = (np.int64(1) << sizes).astype(np.int64)
+        offs = np.zeros(len(ps) + 1, np.int64)
+        np.cumsum(lane_sz, out=offs[1:])
+        total = int(offs[-1])
+        total_sets = sum(len(s) for s in sets_by_q)
+        best_cost = np.full(total_sets, INF, np.float32)
+        best_left = np.zeros(total_sets, np.int32)
+        ev_acc = np.zeros(self.B, np.int64)
+        ccp_acc = np.zeros(self.B, np.int64)
+        k_all, c_all, l_all = [], [], []
+        for lane0 in range(0, total, self.chunk):
+            lane1 = min(lane0 + self.chunk, total)
+            p0 = int(np.searchsorted(offs, lane0, side="right")) - 1
+            p1 = int(np.searchsorted(offs, lane1, side="left"))
+            npair = p1 - p0
+            pcap = _cap(npair, 256)
+            psl = np.zeros(pcap, np.int32)
+            pbl = np.zeros(pcap, np.int32)
+            pql = np.zeros(pcap, np.int32)
+            ofl = np.full(pcap, np.int64(1 << 40), np.int64)
+            psl[:npair] = ps[p0:p1]
+            pbl[:npair] = pb[p0:p1]
+            pql[:npair] = pq[p0:p1]
+            ofl[:npair] = offs[p0:p1] - lane0
+            ofl = np.clip(ofl, -_CLIP, _CLIP).astype(np.int32)
+            sc, sl, ev_q, ccp_q = _beval_general_chunk(
+                jnp.asarray(psl), jnp.asarray(pbl), jnp.asarray(pql),
+                jnp.asarray(ofl), jnp.int32(npair), jnp.int32(lane1 - lane0),
+                self.adj_b, self.memo_cost, self.memo_rows,
+                nmax=self.nmax, chunk=self.chunk, pcap=pcap, bcap=self.bcap,
+                pallas=self.pallas)
+            ev_acc += np.asarray(ev_q)[: self.B]
+            ccp_acc += np.asarray(ccp_q)[: self.B]
+            scn = np.asarray(sc)[:npair]
+            fin = np.isfinite(scn)
+            k_all.append(pk[p0:p1][fin])
+            c_all.append(scn[fin])
+            l_all.append(np.asarray(sl)[:npair][fin])
+        for q in range(self.B):
+            self.counters[q].evaluated += int(ev_acc[q])
+            self.counters[q].ccp += int(ccp_acc[q])
+        if k_all:
+            _merge_scattered(best_cost, best_left, np.concatenate(k_all),
+                             np.concatenate(c_all), np.concatenate(l_all))
+        self._commit_best(sets_by_q, best_cost, best_left)
         self.timings["evaluate"] = (self.timings.get("evaluate", 0.0)
                                     + time.perf_counter() - t0)
 
@@ -330,7 +597,10 @@ class BatchEngine:
         for i in range(2, max_n + 1):
             sets_by_q = self._filter_level(i)
             self._register_level(i, sets_by_q)
-            self._eval_level(i, sets_by_q)
+            if self.algorithm == "mpdp_general":
+                self._eval_level_general(i, sets_by_q)
+            else:
+                self._eval_level(i, sets_by_q)
         wall = time.perf_counter() - t0
         cost_all = np.asarray(self.memo_cost)
         left_all = np.asarray(self.memo_left)
@@ -342,14 +612,36 @@ class BatchEngine:
                 raise RuntimeError(f"no plan found for batch query {q}")
             p = extract_plan(g.full_set, left_all[base: base + self.size], g)
             r = OptimizeResult(plan=p, cost=cost, counters=self.counters[q],
-                               algorithm="batch_dpsub", wall_s=wall / self.B,
-                               levels=g.n)
+                               algorithm=f"batch_{self.algorithm}",
+                               wall_s=wall / self.B, levels=g.n)
             r.timings = dict(self.timings)
             out.append(r)
         return out
 
 
 # ============================================================ public entry ==
+
+def _lane_space(g: JoinGraph, algorithm: str) -> str | None:
+    """Batched lane space for one query under the requested algorithm, or
+    ``None`` when the query must fall back to per-query ``optimize``.
+
+    ``auto``/``mpdp`` pick the cheap MPDP space from the query's topology
+    (acyclic -> tree lanes, else general), so a bucket fuses only queries
+    sharing one lane-space decode; ``dpsub`` keeps the full ``sets x 2^i``
+    space; explicit ``mpdp_general`` forces the block prefix-sum lanes (it
+    is valid for trees too); explicit ``mpdp_tree`` batches only acyclic
+    queries (cyclic ones keep sequential ``mpdp_tree`` semantics per query).
+    """
+    if algorithm in ("auto", "mpdp"):
+        return "mpdp_tree" if g.is_tree() else "mpdp_general"
+    if algorithm == "dpsub":
+        return "dpsub"
+    if algorithm == "mpdp_general":
+        return "mpdp_general"
+    if algorithm == "mpdp_tree":
+        return "mpdp_tree" if g.is_tree() else None
+    return None
+
 
 def optimize_many(graphs: list[JoinGraph], algorithm: str = "auto",
                   chunk: int = CHUNK, cache=None,
@@ -358,9 +650,12 @@ def optimize_many(graphs: list[JoinGraph], algorithm: str = "auto",
 
     * ``cache``: optional ``plancache.PlanCache`` consulted first; computed
       plans are inserted back.
-    * ``algorithm``: {auto, mpdp, dpsub} run the batched engine (same CCP
-      candidate space -> identical optimal costs); anything else falls back
-      to per-query ``engine.optimize`` with that algorithm.
+    * ``algorithm``: {auto, mpdp, dpsub, mpdp_tree, mpdp_general} run the
+      batched engine; ``auto``/``mpdp`` dispatch each (NMAX, topology) bucket
+      to the cheapest lane space (all-acyclic -> MPDP:Tree ``sets x m``, else
+      MPDP-general block prefix-sum; see ``_lane_space``).  All lane spaces
+      enumerate the same CCP candidate minima -> identical optimal costs;
+      anything else falls back to per-query ``engine.optimize``.
     * queries with ``nmax_bucket(n) > NMAX_BATCH`` (memo would not fit the
       stacked layout) and single-relation queries are handled per query.
 
@@ -401,20 +696,21 @@ def optimize_many(graphs: list[JoinGraph], algorithm: str = "auto",
                 kept.append(qi)
         pending = kept
 
-    batchable = algorithm in ("auto", "mpdp", "dpsub")
-    buckets: dict[int, list[int]] = {}
+    buckets: dict[tuple[int, str], list[int]] = {}
     solo: list[int] = []
     for qi in pending:
         b = bs.nmax_bucket(graphs[qi].n)
-        if batchable and b <= NMAX_BATCH:
-            buckets.setdefault(b, []).append(qi)
+        space = _lane_space(graphs[qi], algorithm)
+        if space is not None and b <= NMAX_BATCH:
+            buckets.setdefault((b, space), []).append(qi)
         else:
             solo.append(qi)
 
-    for b, idxs in sorted(buckets.items()):
+    for (b, space), idxs in sorted(buckets.items()):
         for s0 in range(0, len(idxs), max_batch):
             group = idxs[s0: s0 + max_batch]
-            eng = BatchEngine([graphs[qi] for qi in group], chunk=chunk)
+            eng = BatchEngine([graphs[qi] for qi in group], chunk=chunk,
+                              algorithm=space)
             for qi, r in zip(group, eng.run()):
                 results[qi] = r
                 if cache is not None:

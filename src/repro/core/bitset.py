@@ -89,8 +89,10 @@ def grow_excl_edge(src, restrict, adj, ubit, vbit):
     """grow() on the graph with one edge (u, v) removed — per-lane ubit/vbit.
 
     Used by MPDP:Tree: deleting tree edge e splits S into the two CCP sides.
+    ``adj`` may be the shared ``(nmax,)`` table or per-lane ``(..., nmax)``
+    rows — the broadcasting body serves both.
     """
-    nmax = adj.shape[0]
+    nmax = adj.shape[-1]
     shifts = jnp.arange(nmax, dtype=jnp.int32)
 
     def nbr(cur):
@@ -153,6 +155,15 @@ def grow_rows(src: jnp.ndarray, restrict: jnp.ndarray,
 def is_connected_rows(s: jnp.ndarray, adjq: jnp.ndarray) -> jnp.ndarray:
     """is_connected() with per-lane adjacency rows."""
     return grow_rows(lsb(s), s, adjq) == s
+
+
+def grow_excl_edge_rows(src, restrict, adjq, ubit, vbit):
+    """grow_excl_edge() with per-lane adjacency rows adjq: (..., nmax) — the
+    batched MPDP:Tree evaluate, where each lane deletes its own query's tree
+    edge.  Same body (one traversal to keep batched and sequential plans in
+    lockstep); this alias just mirrors the ``*_rows`` naming of the other
+    batched-query variants."""
+    return grow_excl_edge(src, restrict, adjq, ubit, vbit)
 
 
 def pdep(rank: jnp.ndarray, mask: jnp.ndarray, nmax: int) -> jnp.ndarray:

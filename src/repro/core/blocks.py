@@ -17,6 +17,8 @@ Two implementations:
 """
 from __future__ import annotations
 
+from functools import partial
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -223,3 +225,104 @@ def has_cut_vertex_batch(S, adj, nmax: int):
     reach = bs.grow(bs.lsb(rest), rest, adj)
     cut = in_s & (reach != rest) & (rest != 0)
     return jnp.any(cut, axis=1)
+
+
+# --------------------------------------------- phase A (MPDP-general) host --
+# Shared by ExactEngine.run_mpdp_general and BatchEngine's general lane
+# space: chunked device block finding + host compaction into sorted
+# (set, block) pair arrays.
+
+@partial(jax.jit, static_argnames=("nmax", "emax", "cyc_cap", "scap"))
+def blocks_chunk(sets_pad, n_valid, adj, eu_idx, ev_idx, edge_live,
+                 *, nmax: int, emax: int, cyc_cap: int, scap: int):
+    """Phase A of MPDP-general: blocks of every set in the chunk."""
+    S = sets_pad
+
+    def per_set(s):
+        parent, depth = _bfs_tree(s[None], adj, nmax)
+        parent, depth = parent[0], depth[0]
+        ubit = jnp.where(eu_idx >= 0, jnp.int32(1) << jnp.maximum(eu_idx, 0), 0)
+        vbit = jnp.where(ev_idx >= 0, jnp.int32(1) << jnp.maximum(ev_idx, 0), 0)
+        in_s = edge_live & ((ubit & s) != 0) & ((vbit & s) != 0)
+        pu = parent[jnp.maximum(eu_idx, 0)]
+        pv = parent[jnp.maximum(ev_idx, 0)]
+        non_tree = in_s & ~((pu == ev_idx) | (pv == eu_idx))
+        # compact non-tree edge endpoints into cyc_cap slots
+        pos = jnp.cumsum(non_tree.astype(jnp.int32)) - 1
+        slot = jnp.where(non_tree, pos, cyc_cap)
+        cu = jnp.full(cyc_cap, -1, jnp.int32).at[slot].set(eu_idx, mode="drop")
+        cv = jnp.full(cyc_cap, -1, jnp.int32).at[slot].set(ev_idx, mode="drop")
+        act = jnp.zeros(cyc_cap, bool).at[slot].set(non_tree, mode="drop")
+        cycles = _fundamental_cycles(s, parent, depth, cu, cv, act, nmax)
+        merged = _merge_cycles(cycles, cyc_cap)
+        shifts = jnp.arange(nmax, dtype=jnp.int32)
+        vbits = jnp.int32(1) << shifts
+        has_parent = (parent >= 0) & ((s & vbits) != 0)
+        pbits = jnp.where(has_parent, jnp.int32(1) << jnp.maximum(parent, 0), 0)
+        pair = vbits | pbits
+        cov = ((cycles[None, :] & pair[:, None]) == pair[:, None]) & (cycles[None, :] != 0)
+        bridge = jnp.where(has_parent & ~jnp.any(cov, axis=1), pair, 0)
+        return merged, bridge
+
+    merged, bridge = jax.vmap(per_set)(S)
+    idx = jnp.arange(scap)
+    merged = jnp.where((idx < n_valid)[:, None], merged, 0)
+    bridge = jnp.where((idx < n_valid)[:, None], bridge, 0)
+    return merged, bridge
+
+
+def np_pairs_for_sets(sets_np, g, adj, eu_idx, ev_idx, edge_live,
+                      *, nmax: int, emax: int, cyc_cap: int):
+    """Phase A host driver: compacted (set, block) pair arrays for a level.
+
+    ``adj``/``eu_idx``/``ev_idx``/``edge_live`` are the device-side arrays of
+    the query (one query at a time — BatchEngine loops its sub-batch here,
+    the lane fusion happens in phase B).  Pairs come back sorted by set so
+    downstream lane segments stay contiguous.
+    """
+    mu = g.m - g.n + 1
+    pair_set, pair_block = [], []
+    if mu <= cyc_cap:
+        scap = 4096
+        # cyclomatic number of any induced subgraph <= mu(G): size the
+        # static fundamental-cycle slots to the query, not the ceiling
+        # (perf log: 24 -> mu slots cut phase A ~4x on near-tree graphs)
+        eff_cap = max(1, min(cyc_cap, mu))
+        for s0 in range(0, len(sets_np), scap):
+            sl = sets_np[s0: s0 + scap]
+            pad = np.zeros(scap, np.int32)
+            pad[: len(sl)] = sl
+            merged, bridge = blocks_chunk(
+                jnp.asarray(pad), jnp.int32(len(sl)), adj,
+                eu_idx, ev_idx, edge_live,
+                nmax=nmax, emax=emax, cyc_cap=eff_cap, scap=scap)
+            mg = np.asarray(merged)[: len(sl)]
+            br = np.asarray(bridge)[: len(sl)]
+            both = np.concatenate([mg, br], axis=1)
+            snp = np.repeat(sl[:, None], both.shape[1], axis=1)
+            nz = both != 0
+            pair_set.append(snp[nz])
+            pair_block.append(both[nz])
+    else:
+        # dense path: no-cut-vertex sets are single blocks (cliques);
+        # rare cut-vertex sets fall back to the host oracle
+        scap = 4096
+        flags = np.zeros(len(sets_np), bool)
+        for s0 in range(0, len(sets_np), scap):
+            sl = sets_np[s0: s0 + scap]
+            pad = np.zeros(scap, np.int32)
+            pad[: len(sl)] = sl
+            hc = has_cut_vertex_batch(jnp.asarray(pad), adj, nmax)
+            flags[s0: s0 + len(sl)] = np.asarray(hc)[: len(sl)]
+        easy = sets_np[~flags]
+        pair_set.append(easy)
+        pair_block.append(easy)
+        for s in sets_np[flags]:
+            for b in np_find_blocks(int(s), g.edges, g.n):
+                pair_set.append(np.array([s], np.int32))
+                pair_block.append(np.array([b], np.int32))
+    ps = np.concatenate(pair_set) if pair_set else np.zeros(0, np.int32)
+    pb = np.concatenate(pair_block) if pair_block else np.zeros(0, np.int32)
+    # order pairs by set (stable) so lane segments stay contiguous
+    order = np.argsort(ps, kind="stable")
+    return ps[order], pb[order]

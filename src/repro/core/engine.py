@@ -121,6 +121,17 @@ def _merge_best(best_cost, best_left, base, seg_cost, seg_left):
     best_left[upd] = sl[better]
 
 
+def _merge_scattered(best_cost, best_left, ks, cs, ls):
+    """Fold scattered per-key candidate (cost, left) pairs into host-side
+    best arrays: min cost per key, ties broken by max left bitmap.  Shared
+    by MPDP-general (sequential and batched) and DPSIZE — like
+    ``_merge_best``, the tie-break must stay identical everywhere to keep
+    batched and sequential plans in lockstep."""
+    np.minimum.at(best_cost, ks, cs)
+    tie = cs == best_cost[ks]
+    np.maximum.at(best_left, ks[tie], ls[tie])
+
+
 def _prune(seg, cand_cost, cand_left, nseg: int):
     """Two-pass in-chunk prune: segment-min cost then max-left among ties."""
     seg_cost = jax.ops.segment_min(cand_cost, seg, num_segments=nseg,
@@ -185,45 +196,6 @@ def _eval_tree_chunk(all_sets, level_off, base_set, base_e, m, lane_count,
     seg = set_idx - base_set
     seg_cost, seg_left = _prune(seg, cand, S_left, nseg)
     return seg_cost, seg_left, evaluated.sum(), ccp.sum()
-
-
-@partial(jax.jit, static_argnames=("nmax", "emax", "cyc_cap", "scap"))
-def _blocks_chunk(sets_pad, n_valid, adj, eu_idx, ev_idx, edge_live,
-                  *, nmax: int, emax: int, cyc_cap: int, scap: int):
-    """Phase A of MPDP-general: blocks of every set in the chunk."""
-    S = sets_pad
-
-    def per_set(s):
-        parent, depth = bl._bfs_tree(s[None], adj, nmax)
-        parent, depth = parent[0], depth[0]
-        ubit = jnp.where(eu_idx >= 0, jnp.int32(1) << jnp.maximum(eu_idx, 0), 0)
-        vbit = jnp.where(ev_idx >= 0, jnp.int32(1) << jnp.maximum(ev_idx, 0), 0)
-        in_s = edge_live & ((ubit & s) != 0) & ((vbit & s) != 0)
-        pu = parent[jnp.maximum(eu_idx, 0)]
-        pv = parent[jnp.maximum(ev_idx, 0)]
-        non_tree = in_s & ~((pu == ev_idx) | (pv == eu_idx))
-        # compact non-tree edge endpoints into cyc_cap slots
-        pos = jnp.cumsum(non_tree.astype(jnp.int32)) - 1
-        slot = jnp.where(non_tree, pos, cyc_cap)
-        cu = jnp.full(cyc_cap, -1, jnp.int32).at[slot].set(eu_idx, mode="drop")
-        cv = jnp.full(cyc_cap, -1, jnp.int32).at[slot].set(ev_idx, mode="drop")
-        act = jnp.zeros(cyc_cap, bool).at[slot].set(non_tree, mode="drop")
-        cycles = bl._fundamental_cycles(s, parent, depth, cu, cv, act, nmax)
-        merged = bl._merge_cycles(cycles, cyc_cap)
-        shifts = jnp.arange(nmax, dtype=jnp.int32)
-        vbits = jnp.int32(1) << shifts
-        has_parent = (parent >= 0) & ((s & vbits) != 0)
-        pbits = jnp.where(has_parent, jnp.int32(1) << jnp.maximum(parent, 0), 0)
-        pair = vbits | pbits
-        cov = ((cycles[None, :] & pair[:, None]) == pair[:, None]) & (cycles[None, :] != 0)
-        bridge = jnp.where(has_parent & ~jnp.any(cov, axis=1), pair, 0)
-        return merged, bridge
-
-    merged, bridge = jax.vmap(per_set)(S)
-    idx = jnp.arange(scap)
-    merged = jnp.where((idx < n_valid)[:, None], merged, 0)
-    bridge = jnp.where((idx < n_valid)[:, None], bridge, 0)
-    return merged, bridge
 
 
 @partial(jax.jit, static_argnames=("nmax", "chunk", "pcap"))
@@ -476,56 +448,15 @@ class ExactEngine:
 
     # ------------------------------------------------------- MPDP general --
     def _find_blocks_host(self, sets_np):
-        """Phase A: per-set blocks -> compacted (set, block) pair arrays."""
+        """Phase A: per-set blocks -> compacted (set, block) pair arrays
+        (shared host driver in ``blocks.np_pairs_for_sets``)."""
         t0 = time.perf_counter()
-        mu = self.g.m - self.g.n + 1
-        pair_set, pair_block = [], []
-        if mu <= self.cyc_cap:
-            scap = 4096
-            # cyclomatic number of any induced subgraph <= mu(G): size the
-            # static fundamental-cycle slots to the query, not the ceiling
-            # (perf log: 24 -> mu slots cut phase A ~4x on near-tree graphs)
-            cyc_cap = max(1, min(self.cyc_cap, mu))
-            for s0 in range(0, len(sets_np), scap):
-                sl = sets_np[s0: s0 + scap]
-                pad = np.zeros(scap, np.int32)
-                pad[: len(sl)] = sl
-                merged, bridge = _blocks_chunk(
-                    jnp.asarray(pad), jnp.int32(len(sl)), self.dg.adj,
-                    self.eu_idx, self.ev_idx, self.edge_live,
-                    nmax=self.nmax, emax=self.emax, cyc_cap=cyc_cap,
-                    scap=scap)
-                mg = np.asarray(merged)[: len(sl)]
-                br = np.asarray(bridge)[: len(sl)]
-                both = np.concatenate([mg, br], axis=1)
-                snp = np.repeat(sl[:, None], both.shape[1], axis=1)
-                nz = both != 0
-                pair_set.append(snp[nz])
-                pair_block.append(both[nz])
-        else:
-            # dense path: no-cut-vertex sets are single blocks (cliques);
-            # rare cut-vertex sets fall back to the host oracle
-            scap = 4096
-            flags = np.zeros(len(sets_np), bool)
-            for s0 in range(0, len(sets_np), scap):
-                sl = sets_np[s0: s0 + scap]
-                pad = np.zeros(scap, np.int32)
-                pad[: len(sl)] = sl
-                hc = bl.has_cut_vertex_batch(jnp.asarray(pad), self.dg.adj, self.nmax)
-                flags[s0: s0 + len(sl)] = np.asarray(hc)[: len(sl)]
-            easy = sets_np[~flags]
-            pair_set.append(easy)
-            pair_block.append(easy)
-            for s in sets_np[flags]:
-                for b in bl.np_find_blocks(int(s), self.g.edges, self.n):
-                    pair_set.append(np.array([s], np.int32))
-                    pair_block.append(np.array([b], np.int32))
-        ps = np.concatenate(pair_set) if pair_set else np.zeros(0, np.int32)
-        pb = np.concatenate(pair_block) if pair_block else np.zeros(0, np.int32)
-        # order pairs by set (stable) so lane segments stay contiguous
-        order = np.argsort(ps, kind="stable")
+        ps, pb = bl.np_pairs_for_sets(
+            sets_np, self.g, self.dg.adj, self.eu_idx, self.ev_idx,
+            self.edge_live, nmax=self.nmax, emax=self.emax,
+            cyc_cap=self.cyc_cap)
         self.timings["blocks"] = self.timings.get("blocks", 0.0) + time.perf_counter() - t0
-        return ps[order], pb[order]
+        return ps, pb
 
     def run_mpdp_general(self) -> None:
         for i in range(2, self.n + 1):
@@ -573,12 +504,8 @@ class ExactEngine:
                 c_all.append(scn[fin])
                 l_all.append(np.asarray(sl)[:npair][fin])
             if k_all:
-                ks = np.concatenate(k_all)
-                cs = np.concatenate(c_all)
-                ls = np.concatenate(l_all)
-                np.minimum.at(best_cost, ks, cs)
-                tie = cs == best_cost[ks]
-                np.maximum.at(best_left, ks[tie], ls[tie])
+                _merge_scattered(best_cost, best_left, np.concatenate(k_all),
+                                 np.concatenate(c_all), np.concatenate(l_all))
             self._commit_level(sets_np, best_cost, best_left)
             self.timings["evaluate"] = self.timings.get("evaluate", 0.0) + time.perf_counter() - t0
 
@@ -615,13 +542,10 @@ class ExactEngine:
                     l_all.append(np.asarray(A)[fin])
             if s_all:
                 ss = np.concatenate(s_all).astype(np.int64)
-                cs = np.concatenate(c_all)
-                ls = np.concatenate(l_all)
                 scratch_c = np.full(1 << self.n, INF, np.float32)
                 scratch_l = np.zeros(1 << self.n, np.int32)
-                np.minimum.at(scratch_c, ss, cs)
-                tie = cs == scratch_c[ss]
-                np.maximum.at(scratch_l, ss[tie], ls[tie])
+                _merge_scattered(scratch_c, scratch_l, ss,
+                                 np.concatenate(c_all), np.concatenate(l_all))
                 ks = np.flatnonzero(np.isfinite(scratch_c)).astype(np.int32)
                 self._scatter(ks, cost=scratch_c[ks], left=scratch_l[ks])
             self.timings["evaluate"] = self.timings.get("evaluate", 0.0) + time.perf_counter() - t0
@@ -679,11 +603,14 @@ def optimize_many(graphs, algorithm: str = "auto", chunk: int = CHUNK,
 
     Pads compatible queries into one (NMAX, EMAX, CHUNK) bucket and runs the
     level-synchronous DP with the batch folded into the lane dimension;
-    returns one ``OptimizeResult`` per input graph.  Freshly-computed results
-    have costs bit-identical to per-query ``optimize``; plan-cache hits are
-    instead re-costed canonically on the probing graph's exact stats (the
-    cache key quantizes stats at 1/4096 log2, so a hit's cost can differ at
-    that epsilon).
+    returns one ``OptimizeResult`` per input graph.  ``auto``/``mpdp``
+    dispatch each bucket to the cheapest MPDP lane space by topology
+    (all-acyclic -> MPDP:Tree ``sets x m``, else MPDP-general block
+    prefix-sum), mirroring the single-query ``optimize`` selection.
+    Freshly-computed results have costs bit-identical to per-query
+    ``optimize``; plan-cache hits are instead re-costed canonically on the
+    probing graph's exact stats (the cache key quantizes stats at 1/4096
+    log2, so a hit's cost can differ at that epsilon).
     """
     from . import batch as _batch
     kw = {} if max_batch is None else {"max_batch": max_batch}

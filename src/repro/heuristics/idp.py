@@ -13,7 +13,11 @@ Beyond the paper, each round selects up to ``batch`` *disjoint* costly
 subtrees instead of one: their unit sets don't overlap, so the exact
 subproblems are independent and ship to the device as a single
 ``optimize_many`` batch (the batched lane-parallel DP), cutting both the
-number of rounds and the per-subproblem dispatch overhead.
+number of rounds and the per-subproblem dispatch overhead.  With the
+``mpdp`` subsolver the batch dispatcher picks the cheap lane space per
+(NMAX, topology) bucket — unit subgraphs are usually near-trees, so the
+rounds run in the MPDP:Tree/general spaces rather than DPSUB's
+``sets x 2^i`` blow-up.
 """
 from __future__ import annotations
 
@@ -193,6 +197,9 @@ def solve(g: JoinGraph, k: int = 15, subsolver: str = "mpdp",
         from ..core import engine as _e
 
         def batch_sub(jgs):
+            # "mpdp" routes through the per-bucket topology dispatcher:
+            # acyclic subproblems get the sets x m tree lanes, cyclic ones
+            # the block prefix-sum lanes (cheap spaces, identical costs)
             rs = _e.optimize_many(jgs, algorithm=subsolver)
             for r in rs:
                 counters.evaluated += r.counters.evaluated

@@ -10,7 +10,9 @@ recurses on the composite graph until it fits a single MPDP call.
 A round's partitions are vertex-disjoint, so their induced subproblems are
 *independent*: they ship to the device as one ``optimize_many`` batch (batch
 folded into the lane dimension) instead of sequential per-partition engine
-runs — the same plans, one pipeline.  Results carry a GOO quality floor:
+runs — the same plans, one pipeline.  The ``mpdp`` subsolver requests the
+cheap lane space per bucket (acyclic partitions -> MPDP:Tree ``sets x m``,
+cyclic -> MPDP-general block prefix-sum) instead of the DPSUB blow-up.  Results carry a GOO quality floor:
 when the partitioned plan loses to the greedy baseline the baseline is
 returned (tagged ``+goo_floor``).
 """
@@ -73,7 +75,8 @@ def solve(g: JoinGraph, k: int = 15, subsolver: str = "mpdp",
     from ..core import engine as _e
 
     def batch_solve(jgs):
-        """Disjoint subproblems -> one batched device pass."""
+        """Disjoint subproblems -> one batched device pass ("mpdp" lands in
+        the per-bucket tree/general lane spaces, not DPSUB)."""
         rs = _e.optimize_many(jgs, algorithm=subsolver)
         for r in rs:
             counters.evaluated += r.counters.evaluated

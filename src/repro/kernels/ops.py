@@ -31,3 +31,25 @@ def connectivity(S, adj, nmax: int):
 
 def grow_pair(S, lb, rb, adj, nmax: int):
     return _k.grow_pair(S, lb, rb, adj, nmax=nmax, interpret=interpret_mode())
+
+
+# -- batched-query variants (BatchEngine: per-lane adjacency rows) ------------
+
+def bconnectivity(S, qid, adj_b, nmax: int, nb: int):
+    return _k.bconnectivity(S, qid, adj_b, nmax=nmax, nb=nb,
+                            interpret=interpret_mode())
+
+
+def bccp_eval(S, sub, qid, adj_b, nmax: int, nb: int):
+    return _k.bccp_eval(S, sub, qid, adj_b, nmax=nmax, nb=nb,
+                        interpret=interpret_mode())
+
+
+def btree_eval(S, ub, vb, qid, adj_b, nmax: int, nb: int):
+    return _k.btree_eval(S, ub, vb, qid, adj_b, nmax=nmax, nb=nb,
+                         interpret=interpret_mode())
+
+
+def bgeneral_eval(S, block, r, qid, adj_b, nmax: int, nb: int):
+    return _k.bgeneral_eval(S, block, r, qid, adj_b, nmax=nmax, nb=nb,
+                            interpret=interpret_mode())

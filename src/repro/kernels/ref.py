@@ -23,3 +23,39 @@ def connectivity_ref(S, adj, nmax: int):
 def grow_pair_ref(S, lb, rb, adj, nmax: int):
     sl = bs.grow(lb, S & ~rb, adj)
     return sl, S & ~sl
+
+
+# -- batched-query variants (per-lane adjacency rows adjq = adj_b[qid]) -------
+
+def bconnectivity_ref(S, qid, adj_b, nmax: int):
+    return bs.is_connected_rows(S, adj_b[qid]).astype(jnp.int32)
+
+
+def bccp_eval_ref(S, sub, qid, adj_b, nmax: int):
+    adjq = adj_b[qid]
+    lb = bs.pdep(sub, S, nmax)
+    rb = S & ~lb
+    conn_l = bs.is_connected_rows(lb, adjq)
+    conn_r = bs.is_connected_rows(rb, adjq)
+    cross = (bs.neighbors_rows(lb, adjq) & rb) != 0
+    ccp = (lb != 0) & (rb != 0) & conn_l & conn_r & cross
+    return lb, rb, ccp.astype(jnp.int32)
+
+
+def btree_eval_ref(S, ub, vb, qid, adj_b, nmax: int):
+    adjq = adj_b[qid]
+    edge_in = ((S & ub) != 0) & ((S & vb) != 0)
+    sl = bs.grow_excl_edge_rows(ub, S, adjq, ub, vb)
+    return sl, edge_in.astype(jnp.int32)
+
+
+def bgeneral_eval_ref(S, block, r, qid, adj_b, nmax: int):
+    adjq = adj_b[qid]
+    lb = bs.pdep(r, block, nmax)
+    rb = block & ~lb
+    conn_l = bs.is_connected_rows(lb, adjq)
+    conn_r = bs.is_connected_rows(rb, adjq)
+    cross = (bs.neighbors_rows(lb, adjq) & rb) != 0
+    ccp = (lb != 0) & (rb != 0) & conn_l & conn_r & cross
+    sl = bs.grow_rows(lb, S & ~rb, adjq)
+    return lb, sl, ccp.astype(jnp.int32)

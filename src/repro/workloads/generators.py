@@ -160,6 +160,10 @@ _MB_FKS = [
     ("edit", "editor"), ("vote", "edit"), ("vote", "editor"),
     ("series", "area"), ("cdtoc", "medium"), ("instrument", "area"),
     ("event", "area"),
+    # bridge edges (modeled on MusicBrainz's edit_artist / l_artist_url link
+    # tables): without them `url` and the edit subsystem are separate
+    # components and the random walk can never span the full 56-table schema
+    ("edit", "artist"), ("url", "artist"),
 ]
 
 
@@ -180,23 +184,30 @@ def musicbrainz_query(n_rels: int, seed: int = 0, pk_fk: bool = True) -> JoinGra
     for (a, b) in fks:
         nbr.setdefault(a, []).append(b)
         nbr.setdefault(b, []).append(a)
-    for _ in range(200):
-        start = r.choice(list(nbr.keys()))
-        picked = [start]
-        pset = {start}
-        cur = start
-        stall = 0
-        while len(picked) < n_rels and stall < 400:
-            nxt = r.choice(nbr[cur])
-            if nxt not in pset:
-                picked.append(nxt)
-                pset.add(nxt)
-            cur = nxt
-            stall += 1
-        if len(picked) == n_rels:
-            break
-    else:
-        raise RuntimeError("random walk failed to reach size")
+    start = r.choice(list(nbr.keys()))
+    picked = [start]
+    pset = {start}
+    cur = start
+    stall = 0
+    while len(picked) < n_rels:
+        nxt = r.choice(nbr[cur])
+        if nxt not in pset:
+            picked.append(nxt)
+            pset.add(nxt)
+        cur = nxt
+        stall += 1
+        if stall >= 400:
+            # trapped in a fully-picked region: restart the walk from a
+            # picked vertex that still has unpicked neighbours instead of
+            # giving up, so every size up to the schema is reachable
+            frontier = [v for v in picked
+                        if any(w not in pset for w in nbr[v])]
+            if not frontier:
+                raise RuntimeError(
+                    f"schema component exhausted at {len(picked)} < {n_rels} "
+                    "relations")
+            cur = r.choice(frontier)
+            stall = 0
     lmap = {g: l for l, g in enumerate(picked)}
     edges, sels = [], []
     for (a, b) in fks:

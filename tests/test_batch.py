@@ -53,7 +53,9 @@ def test_costs_bit_identical_to_sequential():
         seq = engine.optimize(g, "auto")
         assert r.cost == seq.cost          # bit-identical, not approximately
         validate_plan(r.plan, g)
-        assert r.algorithm == "batch_dpsub"
+        # auto dispatch picks the MPDP lane space per (nmax, topology) bucket
+        want = "batch_mpdp_tree" if g.is_tree() else "batch_mpdp_general"
+        assert r.algorithm == want
 
 
 def test_costs_match_dpccp_oracle_small():

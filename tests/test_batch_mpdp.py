@@ -1,0 +1,165 @@
+"""Batched MPDP lane spaces (tree + general): oracle-backed parity with the
+sequential ``ExactEngine`` spaces, lane-count pruning vs batched DPSUB, the
+per-bucket topology dispatcher, and the Pallas interpret-mode variants."""
+import numpy as np
+import pytest
+
+from repro.core import dpccp, engine
+from repro.core.batch import BatchEngine, optimize_many
+from repro.core.plan import validate_plan
+from repro.workloads import generators as gen
+from tests.helpers import rand_graph
+
+
+def mixed_topology_batch():
+    """Chains, stars, cycles, cliques, snowflakes, walks — 4-14 relations,
+    both nmax buckets (8 and 16), acyclic and cyclic."""
+    return [
+        gen.chain(4, 11), gen.chain(9, 12), gen.star(7, 13), gen.star(12, 14),
+        gen.cycle(6, 15), gen.cycle(9, 16), gen.clique(5, 17),
+        gen.snowflake(11, 18), gen.musicbrainz_query(10, 19),
+        rand_graph(14, 3, 20), rand_graph(8, 0, 21),
+    ]
+
+
+def small_batch():
+    """Tiny mixed batch for the (slow) Pallas interpret-mode runs."""
+    return [gen.chain(5, 1), gen.star(6, 2), gen.cycle(5, 3),
+            gen.clique(4, 4)]
+
+
+# ----------------------------------------------- lane-space parity (vector) --
+
+def test_mpdp_costs_bit_identical_and_topology_dispatch():
+    graphs = mixed_topology_batch()
+    many = optimize_many(graphs, algorithm="mpdp")
+    for g, r in zip(graphs, many):
+        seq = engine.optimize(g, "mpdp")
+        assert r.cost == seq.cost           # bit-identical, not approximately
+        validate_plan(r.plan, g)
+        want = "batch_mpdp_tree" if g.is_tree() else "batch_mpdp_general"
+        assert r.algorithm == want
+        assert seq.algorithm == want.removeprefix("batch_")
+
+
+def test_mpdp_counters_match_sequential():
+    """The batched tree/general lanes enumerate exactly the sequential
+    MPDP spaces: EvaluatedCounter and CCP-Counter agree per query."""
+    graphs = mixed_topology_batch()
+    many = optimize_many(graphs, algorithm="mpdp")
+    for g, r in zip(graphs, many):
+        seq = engine.optimize(g, "mpdp")
+        assert r.counters.evaluated == seq.counters.evaluated
+        assert r.counters.ccp == seq.counters.ccp
+
+
+def test_mpdp_costs_match_dpccp_oracle_small():
+    graphs = [g for g in mixed_topology_batch() if g.n <= 10]
+    assert len(graphs) >= 6
+    many = optimize_many(graphs, algorithm="mpdp")
+    for g, r in zip(graphs, many):
+        oracle = dpccp.solve(g)
+        assert abs(r.cost - oracle.cost) <= 1e-4 * max(1.0, abs(oracle.cost))
+
+
+def test_tree_lanes_prune_vs_batched_dpsub_acyclic():
+    """On an all-acyclic batch the ``sets x m`` tree lanes must evaluate
+    strictly fewer lanes than DPSUB's ``sets x 2^i`` — per query."""
+    graphs = [g for g in mixed_topology_batch() if g.is_tree()]
+    assert len(graphs) >= 5
+    tree = optimize_many(graphs, algorithm="mpdp")
+    dpsub = optimize_many(graphs, algorithm="dpsub")
+    for g, rt, rd in zip(graphs, tree, dpsub):
+        assert rt.algorithm == "batch_mpdp_tree"
+        assert rt.cost == rd.cost
+        assert rt.counters.evaluated < rd.counters.evaluated
+        # Theorem 3: every enumerated tree lane in S is a CCP pair
+        assert rt.counters.evaluated == rt.counters.ccp
+
+
+def test_general_lanes_prune_vs_batched_dpsub_cyclic():
+    graphs = [g for g in mixed_topology_batch()
+              if not g.is_tree() and g.n >= 6]
+    assert len(graphs) >= 3
+    genl = optimize_many(graphs, algorithm="mpdp_general")
+    dpsub = optimize_many(graphs, algorithm="dpsub")
+    for g, rg, rd in zip(graphs, genl, dpsub):
+        assert rg.algorithm == "batch_mpdp_general"
+        assert rg.cost == rd.cost
+        assert rg.counters.evaluated < rd.counters.evaluated
+        assert rg.counters.ccp == rd.counters.ccp   # same CCP candidate set
+
+
+def test_explicit_general_space_on_trees_matches():
+    graphs = [g for g in mixed_topology_batch() if g.is_tree()][:3]
+    genl = optimize_many(graphs, algorithm="mpdp_general")
+    for g, r in zip(graphs, genl):
+        assert r.algorithm == "batch_mpdp_general"
+        assert r.cost == engine.optimize(g, "mpdp").cost
+
+
+def test_explicit_tree_space_batches_only_acyclic():
+    graphs = [gen.chain(6, 30), gen.star(7, 31)]
+    many = optimize_many(graphs, algorithm="mpdp_tree")
+    for g, r in zip(graphs, many):
+        assert r.algorithm == "batch_mpdp_tree"
+        assert r.cost == engine.optimize(g, "mpdp_tree").cost
+
+
+def test_explicit_tree_space_cyclic_falls_back_sequential():
+    """algorithm='mpdp_tree' with a cyclic query: the dispatcher must NOT
+    bucket it into the tree lanes (BatchEngine would reject the batch); it
+    keeps the sequential mpdp_tree semantics — which cannot split a cycle
+    and raises — exactly like per-query ``optimize``."""
+    cyc = gen.cycle(5, 36)
+    with pytest.raises(RuntimeError):
+        engine.optimize(cyc, "mpdp_tree")
+    with pytest.raises(RuntimeError):
+        optimize_many([gen.chain(6, 30), cyc], algorithm="mpdp_tree")
+
+
+def test_single_query_tree_batch():
+    g = gen.chain(8, 33)
+    [r] = optimize_many([g], algorithm="mpdp")
+    assert r.algorithm == "batch_mpdp_tree"
+    assert r.cost == engine.optimize(g, "mpdp").cost
+
+
+def test_batch_engine_rejects_cyclic_for_tree_space():
+    with pytest.raises(ValueError):
+        BatchEngine([gen.cycle(5, 34)], algorithm="mpdp_tree")
+    with pytest.raises(ValueError):
+        BatchEngine([gen.chain(5, 35)], algorithm="nope")
+
+
+# ------------------------------------------------- Pallas interpret parity --
+
+@pytest.mark.parametrize("algo", ["mpdp", "dpsub"])
+def test_pallas_interpret_bit_identical(algo, monkeypatch):
+    """The batched Pallas kernel variants (interpret mode on CPU) must agree
+    bit-for-bit with the REPRO_PALLAS=0 vector path.  The flag is a static
+    jit arg read per engine, so both traces coexist in one process."""
+    graphs = small_batch()
+    monkeypatch.setenv("REPRO_PALLAS", "0")
+    vec = optimize_many(graphs, algorithm=algo)
+    monkeypatch.setenv("REPRO_PALLAS", "1")
+    pal = optimize_many(graphs, algorithm=algo)
+    for g, rv, rp in zip(graphs, vec, pal):
+        assert rv.cost == rp.cost
+        assert rv.counters.evaluated == rp.counters.evaluated
+        assert rv.counters.ccp == rp.counters.ccp
+        assert rv.algorithm == rp.algorithm
+        validate_plan(rp.plan, g)
+
+
+# --------------------------------------------------- generator reachability --
+
+def test_musicbrainz_full_schema_reachable():
+    """The stall-restarting walk reaches every size up to the 56-table
+    schema (the old walk gave up past ~50)."""
+    g = gen.musicbrainz_query(56, seed=0)
+    assert g.n == 56 and g.is_connected()
+    g = gen.musicbrainz_query(52, seed=5)
+    assert g.n == 52 and g.is_connected()
+    with pytest.raises(RuntimeError):
+        gen.musicbrainz_query(57, seed=0)

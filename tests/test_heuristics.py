@@ -51,6 +51,7 @@ def test_large_query_end_to_end():
         assert r.cost > 0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("n", [30, 60, 80])
 def test_heuristics_at_scale_beat_goo(n):
     """IDP2 and UnionDP on 30-80-relation graphs: validate_plan-clean plans
