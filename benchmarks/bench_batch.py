@@ -14,11 +14,20 @@ as queries/sec and enumeration effort as evaluated-lane counts (the paper's
 EvaluatedCounter) — on sparse streams the MPDP spaces must evaluate strictly
 fewer lanes than batched DPSUB.
 
+``--devices N`` additionally times every batched algorithm sharded over an
+N-device ``batch`` mesh *and* over the degenerate 1-device mesh, reporting
+aggregate and per-device queries/sec plus the N-vs-1 scaling ratio.  On CPU
+the devices are emulated (the flag is parsed before jax initializes, so
+``--xla_force_host_platform_device_count`` can be injected); per-query lane
+counts are asserted identical to the unsharded batched run — sharding must
+change *where* lanes run, never how many.
+
     PYTHONPATH=src python -m benchmarks.bench_batch [--queries 32]
-        [--repeat 3] [--smoke] [--json BENCH_batch.json]
+        [--repeat 3] [--smoke] [--devices 4] [--json BENCH_batch.json]
 
 ``--json`` writes the machine-readable report consumed by
-``benchmarks/check_regression.py`` (the CI bench-regression gate);
+``benchmarks/check_regression.py`` (the CI bench-regression gate; the
+``devices-4`` CI job adds the sharded section to the gated report);
 ``--smoke`` is the trimmed per-PR CI mode.
 """
 from __future__ import annotations
@@ -27,13 +36,11 @@ import argparse
 import json
 import time
 
-from repro.core import engine
-from repro.workloads import generators as gen
-
 BATCH_ALGOS = ("dpsub", "mpdp")
 
 
 def make_stream(nq: int, seed: int = 0):
+    from repro.workloads import generators as gen
     sizes = [8, 9, 10, 11, 12, 13, 14]
     graphs = []
     s = seed
@@ -49,7 +56,9 @@ def _lanes(results):
             sum(r.counters.ccp for r in results))
 
 
-def bench(nq: int = 32, repeat: int = 3, seed: int = 0) -> dict:
+def bench(nq: int = 32, repeat: int = 3, seed: int = 0,
+          devices: int | None = None) -> dict:
+    from repro.core import engine
     graphs = make_stream(nq, seed)
 
     # warm-up: compile every path on the FULL stream.  Batched compile keys
@@ -103,7 +112,51 @@ def bench(nq: int = 32, repeat: int = 3, seed: int = 0) -> dict:
     assert (out["algorithms"]["mpdp"]["evaluated_lanes"]
             < out["algorithms"]["dpsub"]["evaluated_lanes"]), \
         "MPDP lane spaces did not prune vs batched DPSUB"
+
+    if devices and devices > 1:
+        out["sharded"] = bench_sharded(graphs, seq_costs, best_seq, repeat,
+                                       devices, out["algorithms"])
     return out
+
+
+def bench_sharded(graphs, seq_costs, best_seq, repeat, devices,
+                  unsharded) -> dict:
+    """Time each batched algorithm over a D-device mesh and the degenerate
+    1-device mesh (same shard_map machinery, so the N-vs-1 ratio isolates
+    actual device parallelism from wrapper overhead)."""
+    from repro.core import engine
+    nq = len(graphs)
+    sh: dict = {"devices": devices, "algorithms": {}}
+    for algo in BATCH_ALGOS:
+        per_mesh, lanes_at = {}, {}
+        for d in (1, devices):
+            engine.optimize_many(graphs, algorithm=algo, devices=d)  # warm
+            t_bat, bat = [], None
+            for _ in range(repeat):
+                t0 = time.perf_counter()
+                bat = engine.optimize_many(graphs, algorithm=algo, devices=d)
+                t_bat.append(time.perf_counter() - t0)
+            assert seq_costs == [r.cost for r in bat], \
+                f"sharded {algo} (devices={d}) costs diverged from sequential"
+            lanes_at[d], _ = _lanes(bat)
+            assert lanes_at[d] == unsharded[algo]["evaluated_lanes"], \
+                (f"sharded {algo} (devices={d}) lane count changed: "
+                 f"{lanes_at[d]} != {unsharded[algo]['evaluated_lanes']}")
+            per_mesh[d] = min(t_bat)
+        best = per_mesh[devices]
+        sh["algorithms"][algo] = {
+            "batch_s": best,
+            "batch_s_1dev": per_mesh[1],
+            "qps": nq / best,
+            "qps_per_device": nq / best / devices,
+            "speedup": best_seq / best,
+            "scaling_vs_1dev": per_mesh[1] / best,
+            # the *measured* sharded count, NOT a copy of the unsharded
+            # figure: check_regression's lane-equality gate compares the two
+            # report fields, so copying would make that gate vacuous
+            "evaluated_lanes": lanes_at[devices],
+        }
+    return sh
 
 
 def main() -> None:
@@ -111,27 +164,45 @@ def main() -> None:
     ap.add_argument("--queries", type=int, default=32)
     ap.add_argument("--repeat", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--devices", type=int, default=None,
+                    help="also bench optimize_many sharded over N devices "
+                         "(emulated on CPU when fewer exist)")
     ap.add_argument("--smoke", action="store_true",
                     help="trimmed CI mode (16 queries, min-of-2 repeats)")
     ap.add_argument("--json", type=str, default=None,
                     help="write the machine-readable report here")
     args = ap.parse_args()
+    # must land before the first jax import: backends read XLA_FLAGS once
+    from repro.hostdev import ensure_host_devices
+    ensure_host_devices(args.devices)
     nq, repeat = args.queries, args.repeat
     if args.smoke:
         # min-of-2: a single repeat makes the regression gate hostage to
         # one noisy-neighbor blip on a shared CI runner
         nq, repeat = min(nq, 16), 2
-    r = bench(nq, repeat, args.seed)
+    r = bench(nq, repeat, args.seed, devices=args.devices)
     print("mode,queries,wall_s,queries_per_s,evaluated_lanes")
     print(f"sequential,{r['queries']},{r['seq_s']:.3f},{r['seq_qps']:.2f},-")
     for algo, a in r["algorithms"].items():
         print(f"batched[{algo}],{r['queries']},{a['batch_s']:.3f},"
               f"{a['qps']:.2f},{a['evaluated_lanes']}")
+    if "sharded" in r:
+        d = r["sharded"]["devices"]
+        for algo, a in r["sharded"]["algorithms"].items():
+            print(f"sharded[{algo}]@{d}dev,{r['queries']},{a['batch_s']:.3f},"
+                  f"{a['qps']:.2f},{a['evaluated_lanes']}")
     m = r["algorithms"]["mpdp"]
-    d = r["algorithms"]["dpsub"]
+    dp = r["algorithms"]["dpsub"]
     print(f"# mpdp speedup {m['speedup']:.2f}x (costs bit-identical); "
-          f"lanes {m['evaluated_lanes']} vs dpsub {d['evaluated_lanes']} "
-          f"({d['evaluated_lanes'] / max(m['evaluated_lanes'], 1):.1f}x fewer)")
+          f"lanes {m['evaluated_lanes']} vs dpsub {dp['evaluated_lanes']} "
+          f"({dp['evaluated_lanes'] / max(m['evaluated_lanes'], 1):.1f}x fewer)")
+    if "sharded" in r:
+        d = r["sharded"]["devices"]
+        for algo, a in r["sharded"]["algorithms"].items():
+            print(f"# sharded[{algo}] {d} devices: {a['qps']:.2f} q/s "
+                  f"aggregate ({a['qps_per_device']:.2f} q/s/device), "
+                  f"{a['scaling_vs_1dev']:.2f}x vs 1-device mesh "
+                  f"(costs bit-identical, lane counts unchanged)")
     if args.json:
         with open(args.json, "w") as f:
             json.dump(r, f, indent=2, sort_keys=True)

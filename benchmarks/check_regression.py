@@ -19,6 +19,17 @@ Two checks per batched algorithm:
 Also re-asserts the structural invariant that the MPDP lane spaces evaluate
 fewer lanes than batched DPSUB on the (tree-heavy) benchmark stream.
 
+When the baseline carries a ``sharded`` section (from ``bench_batch
+--devices N``) and the current report was produced with ``--devices``, the
+device path is gated too: per-query lane counts must **equal** the
+unsharded run's (sharding moves lanes across devices, it never changes how
+many there are — any drift means the shard decode broke) and the sharded
+speedup over the same run's sequential baseline must clear its floor.  The
+``scaling_vs_1dev`` ratio is reported but never gated — it measures the
+runner's core count, not the code.  A current report without a ``sharded``
+section skips these checks with a note (the single-device CI jobs bench
+without ``--devices``; the ``devices-4`` job provides the gating run).
+
     python benchmarks/check_regression.py BENCH_batch.json \
         benchmarks/BENCH_baseline.json [--tolerance 0.25]
 
@@ -55,6 +66,42 @@ def check(current: dict, baseline: dict, tolerance: float = 0.25) -> list[str]:
             "mpdp lane spaces no longer prune vs dpsub: "
             f"{algos['mpdp']['evaluated_lanes']} >= "
             f"{algos['dpsub']['evaluated_lanes']}")
+    errors += check_sharded(current, baseline, tolerance)
+    return errors
+
+
+def check_sharded(current: dict, baseline: dict, tolerance: float) -> list[str]:
+    base_sh = baseline.get("sharded")
+    cur_sh = current.get("sharded")
+    if base_sh is None:
+        if cur_sh is not None:
+            print("note: current report has a sharded section but the "
+                  "baseline does not — device-path gates are vacuous until "
+                  "the baseline is refreshed with bench_batch --devices")
+        return []
+    if cur_sh is None:
+        print("note: baseline has a sharded section but the current report "
+              "was benched without --devices; device-path checks skipped "
+              "(the devices-4 CI job runs the gating configuration)")
+        return []
+    errors: list[str] = []
+    for algo, base in base_sh["algorithms"].items():
+        cur = cur_sh["algorithms"].get(algo)
+        if cur is None:
+            errors.append(f"[sharded:{algo}] missing from current report")
+            continue
+        uns = current["algorithms"].get(algo)
+        if uns is not None and cur["evaluated_lanes"] != uns["evaluated_lanes"]:
+            errors.append(
+                f"[sharded:{algo}] lane count diverged from unsharded: "
+                f"{cur['evaluated_lanes']} != {uns['evaluated_lanes']} "
+                "(sharding must relocate lanes, never change their number)")
+        floor = base.get("speedup_floor", base["speedup"] * (1.0 - tolerance))
+        if cur["speedup"] < floor:
+            errors.append(
+                f"[sharded:{algo}] queries/sec regressed >{tolerance:.0%}: "
+                f"speedup {cur['speedup']:.2f}x < {floor:.2f}x "
+                f"(baseline {base['speedup']:.2f}x)")
     return errors
 
 
@@ -79,6 +126,13 @@ def main() -> int:
     for algo, a in sorted(current["algorithms"].items()):
         print(f"[{algo}] qps {a['qps']:.2f} speedup {a['speedup']:.2f}x "
               f"lanes {a['evaluated_lanes']}")
+    if "sharded" in current:
+        d = current["sharded"]["devices"]
+        for algo, a in sorted(current["sharded"]["algorithms"].items()):
+            print(f"[sharded:{algo}@{d}dev] qps {a['qps']:.2f} "
+                  f"({a['qps_per_device']:.2f}/device) speedup "
+                  f"{a['speedup']:.2f}x scaling {a['scaling_vs_1dev']:.2f}x "
+                  f"lanes {a['evaluated_lanes']}")
     if errors:
         print("\nBENCHMARK REGRESSION:")
         for e in errors:

@@ -11,44 +11,57 @@ the PostgreSQL-style policy the paper enables:
     n >  EXACT_LIMIT   -> UnionDP(MPDP, k)      (paper §4.2; its per-round
                           partitions batch internally too)
 
+``--devices N`` shards every batched pass (the exact tier AND UnionDP's
+per-round partitions) over an N-device ``batch`` mesh — on CPU the devices
+are emulated, so the flag must be parsed before jax initializes.
+
 Each optimized plan is executed on synthetic data by the numpy hash-join
 engine; results are cross-checked against a GOO plan for semantic equality.
 
-    PYTHONPATH=src python examples/query_service.py [--queries 8]
+    PYTHONPATH=src python examples/query_service.py [--queries 8] [--devices 4]
 """
 import argparse
 import time
 
-from repro.core import engine
-from repro.core.plan import validate_plan
-from repro.core.plancache import PlanCache
-from repro.execution import executor as ex
-from repro.heuristics import goo, uniondp
-from repro.workloads import generators as gen
-
 EXACT_LIMIT = 14      # CPU-container budget; 25 on the paper's GPU
 
 
-def optimize_stream(graphs, cache):
+def optimize_stream(graphs, cache, devices=None):
     """Optimize the whole stream: exact-tier queries as one batch, large
-    queries through UnionDP.  Returns results in stream order."""
+    queries through UnionDP; ``devices`` shards both batched tiers.
+    Returns results in stream order."""
+    from repro.core import engine
+    from repro.heuristics import uniondp
     results = [None] * len(graphs)
     exact_idx = [i for i, g in enumerate(graphs) if g.n <= EXACT_LIMIT]
     if exact_idx:
         batch = engine.optimize_many([graphs[i] for i in exact_idx],
-                                     algorithm="auto", cache=cache)
+                                     algorithm="auto", cache=cache,
+                                     devices=devices)
         for i, r in zip(exact_idx, batch):
             results[i] = r
     for i, g in enumerate(graphs):
         if results[i] is None:
-            results[i] = uniondp.solve(g, k=10)
+            results[i] = uniondp.solve(g, k=10, devices=devices)
     return results
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--queries", type=int, default=6)
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard batched passes over N devices (CPU devices "
+                         "are emulated when needed)")
     args = ap.parse_args()
+    # before the first jax import: backends read XLA_FLAGS exactly once
+    from repro.hostdev import ensure_host_devices
+    ensure_host_devices(args.devices)
+
+    from repro.core.plan import validate_plan
+    from repro.core.plancache import PlanCache
+    from repro.execution import executor as ex
+    from repro.heuristics import goo
+    from repro.workloads import generators as gen
 
     sizes = [10, 12, 16, 24, 40, 56][: args.queries] + \
             [12] * max(0, args.queries - 6)
@@ -59,7 +72,7 @@ def main():
     cache = PlanCache()
 
     t0 = time.perf_counter()
-    stream = optimize_stream(graphs, cache)
+    stream = optimize_stream(graphs, cache, devices=args.devices)
     total_opt = time.perf_counter() - t0
 
     total_exec = 0.0

@@ -645,7 +645,8 @@ def _lane_space(g: JoinGraph, algorithm: str) -> str | None:
 
 def optimize_many(graphs: list[JoinGraph], algorithm: str = "auto",
                   chunk: int = CHUNK, cache=None,
-                  max_batch: int = MAX_BATCH) -> list[OptimizeResult]:
+                  max_batch: int = MAX_BATCH, devices=None,
+                  mesh=None) -> list[OptimizeResult]:
     """Optimize a stream of queries, batching compatible ones per device pass.
 
     * ``cache``: optional ``plancache.PlanCache`` consulted first; computed
@@ -656,12 +657,22 @@ def optimize_many(graphs: list[JoinGraph], algorithm: str = "auto",
       MPDP-general block prefix-sum; see ``_lane_space``).  All lane spaces
       enumerate the same CCP candidate minima -> identical optimal costs;
       anything else falls back to per-query ``engine.optimize``.
+    * ``devices`` / ``mesh``: shard each bucket's batch dimension across a
+      1-D device mesh (``shard.ShardedBatchEngine``): ``devices=N`` builds a
+      mesh over the first N devices (raising, never truncating, when fewer
+      exist), ``mesh=`` supplies one.  Both default to the single-device
+      in-process ``BatchEngine``; costs/plans are bit-identical either way,
+      a 1-device mesh being the degenerate case.
     * queries with ``nmax_bucket(n) > NMAX_BATCH`` (memo would not fit the
       stacked layout) and single-relation queries are handled per query.
 
     Results are returned in input order.
     """
     from . import engine as _eng
+    shard_mesh = None
+    if mesh is not None or devices is not None:
+        from . import shard as _shard
+        shard_mesh = _shard.batch_mesh(mesh if mesh is not None else devices)
     results: list[OptimizeResult | None] = [None] * len(graphs)
     pending: list[int] = []
     for qi, g in enumerate(graphs):
@@ -706,11 +717,19 @@ def optimize_many(graphs: list[JoinGraph], algorithm: str = "auto",
         else:
             solo.append(qi)
 
+    # sub-batch step: per-shard sub-batches stay capped at max_batch
+    step = max_batch if shard_mesh is None else \
+        max_batch * _shard.mesh_size(shard_mesh)
     for (b, space), idxs in sorted(buckets.items()):
-        for s0 in range(0, len(idxs), max_batch):
-            group = idxs[s0: s0 + max_batch]
-            eng = BatchEngine([graphs[qi] for qi in group], chunk=chunk,
-                              algorithm=space)
+        for s0 in range(0, len(idxs), step):
+            group = idxs[s0: s0 + step]
+            if shard_mesh is None:
+                eng = BatchEngine([graphs[qi] for qi in group], chunk=chunk,
+                                  algorithm=space)
+            else:
+                eng = _shard.ShardedBatchEngine(
+                    [graphs[qi] for qi in group], shard_mesh, chunk=chunk,
+                    algorithm=space)
             for qi, r in zip(group, eng.run()):
                 results[qi] = r
                 if cache is not None:

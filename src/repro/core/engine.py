@@ -598,7 +598,8 @@ def optimize(g: JoinGraph, algorithm: str = "auto", chunk: int = CHUNK,
 
 
 def optimize_many(graphs, algorithm: str = "auto", chunk: int = CHUNK,
-                  cache=None, max_batch: int | None = None):
+                  cache=None, max_batch: int | None = None, devices=None,
+                  mesh=None):
     """Batched multi-query optimization — see ``batch.optimize_many``.
 
     Pads compatible queries into one (NMAX, EMAX, CHUNK) bucket and runs the
@@ -607,6 +608,9 @@ def optimize_many(graphs, algorithm: str = "auto", chunk: int = CHUNK,
     dispatch each bucket to the cheapest MPDP lane space by topology
     (all-acyclic -> MPDP:Tree ``sets x m``, else MPDP-general block
     prefix-sum), mirroring the single-query ``optimize`` selection.
+    ``devices=N`` (or ``mesh=``) additionally shards each bucket's batch
+    dimension across a 1-D device mesh (``core.shard``); results stay
+    bit-identical at any device count.
     Freshly-computed results have costs bit-identical to per-query
     ``optimize``; plan-cache hits are instead re-costed canonically on the
     probing graph's exact stats (the cache key quantizes stats at 1/4096
@@ -615,4 +619,4 @@ def optimize_many(graphs, algorithm: str = "auto", chunk: int = CHUNK,
     from . import batch as _batch
     kw = {} if max_batch is None else {"max_batch": max_batch}
     return _batch.optimize_many(graphs, algorithm=algorithm, chunk=chunk,
-                                cache=cache, **kw)
+                                cache=cache, devices=devices, mesh=mesh, **kw)

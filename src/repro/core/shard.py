@@ -1,0 +1,622 @@
+"""Multi-device sharded BatchEngine: shard_map over the batch dimension.
+
+``BatchEngine`` folds B queries into the *lane* dimension of one device
+pipeline; this module folds a 1-D **device mesh** over the *batch* dimension
+on top of it.  Every per-query stacked structure — the ``(bcap, NMAX)``
+adjacency rows, the flat ``(bcap << NMAX)`` memo tables (logically
+``(B, 1 << NMAX)``), the per-level lane offsets — gains a leading device
+axis sharded with ``NamedSharding``/``shard_map`` over ``batch``:
+
+  * the B queries of a (NMAX, topology) bucket are padded up to a device
+    multiple with *inert* 2-relation queries (their lanes run, their results
+    are discarded) and dealt round-robin, so every shard holds exactly
+    ``ceil(B / D)`` queries and all shards share one set of static shapes;
+  * each device runs the level-synchronous unrank -> filter -> evaluate ->
+    prune pipeline on its own slice: the ``shard_map`` body strips the
+    leading device axis and calls the *single-shard* batched kernels of
+    ``core.batch`` unchanged, so the DPSUB, MPDP:Tree and MPDP-general lane
+    spaces — vector and Pallas variants alike — run per device exactly as
+    they do on one device;
+  * host-side compaction (connected-set dedup, per-level ``_merge_best`` /
+    ``_merge_scattered``, MPDP-general phase A) stays **per shard**: one
+    fused device step per chunk, then a cheap numpy loop over shards.  There
+    are no cross-device collectives on the hot path — shards never
+    communicate (Trummer & Koch's shared-nothing partitioning, arXiv
+    1511.01768, applied to the batch axis).
+
+Costs/plans are **bit-identical** to sequential ``engine.optimize`` at any
+device count: each shard's chunk grid enumerates exactly the candidate set a
+standalone ``BatchEngine`` over the same queries would, and the per-set
+reductions (exact f32 ``segment_min`` + max-left tie-break) are associative,
+so neither the round-robin partition nor the inert padding can perturb a
+real query's result.  The 1-device mesh is the degenerate case.
+
+CPU has one device by default; multi-device runs are emulated with
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4
+
+set **before the first jax import** (``tests/conftest.py`` does this for the
+test session; ``benchmarks/bench_batch.py --devices N`` does it for itself).
+"""
+from __future__ import annotations
+
+import time
+from math import comb
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import bitset as bs
+from . import blocks as bl
+from . import cost as cm
+from . import unrank as ur
+from .batch import (NMAX_BATCH, _CLIP, _bcap, _beval_dpsub_chunk,
+                    _beval_general_chunk, _beval_tree_chunk, _bfilter_chunk)
+from .engine import (CHUNK, CYC_CAP_DEFAULT, INF, _cap, _merge_best,
+                     _merge_scattered, _use_pallas)
+from .joingraph import JoinGraph
+from .plan import Counters, OptimizeResult, extract_plan
+
+BATCH_AXIS = "batch"
+
+
+# ============================================================ mesh helpers ==
+
+def take_devices(n: int | None = None, *, backend: str | None = None) -> list:
+    """First ``n`` available devices, or all of them when ``n`` is None.
+
+    Unlike the old ``jax.devices()[:n]`` idiom this never silently truncates:
+    asking for more devices than exist raises with the actual count (and the
+    CPU-emulation recipe), so a mesh built for N workers cannot quietly
+    degrade into an (N-k)-way one.
+    """
+    devs = list(jax.devices(backend) if backend else jax.devices())
+    if n is None:
+        return devs
+    if n < 1:
+        raise ValueError(f"need at least 1 device, requested {n}")
+    if n > len(devs):
+        plat = devs[0].platform if devs else "cpu"
+        raise ValueError(
+            f"requested {n} devices but only {len(devs)} {plat} device(s) "
+            f"exist; on CPU, emulate more with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n} set before the "
+            f"first jax import")
+    return devs[:n]
+
+
+def batch_mesh(devices=None) -> Mesh:
+    """1-D mesh over the ``batch`` axis.
+
+    ``devices`` may be an existing ``Mesh`` (returned as-is), an int (first
+    N devices via ``take_devices``; CPU emulation counts included), an
+    explicit device list, or None (all devices).
+    """
+    if isinstance(devices, Mesh):
+        return devices
+    if devices is None or isinstance(devices, int):
+        devs = take_devices(devices)
+    else:
+        devs = list(devices)
+    return Mesh(np.asarray(devs), (BATCH_AXIS,))
+
+
+def mesh_size(mesh: Mesh) -> int:
+    return int(np.prod(mesh.devices.shape))
+
+
+# ====================================================== shard_map wrappers ==
+
+_WRAP_CACHE: dict = {}
+
+
+def _set_drop(buf, idx, val):
+    """Single-shard scatter body (OOB pad indices are dropped)."""
+    return buf.at[idx].set(val, mode="drop")
+
+
+def _sharded(fn, mesh: Mesh, donate: tuple = (), **statics):
+    """shard_map a single-shard kernel over the ``batch`` mesh axis.
+
+    Every array argument and output carries a leading device axis sharded
+    ``P(batch)``; the body strips it (each device's block has leading dim 1)
+    and calls ``fn`` — one of the jitted ``core.batch`` chunk kernels or the
+    scatter body — unchanged, so per-device numerics are exactly the
+    single-device ones and no collectives can appear.  Wrappers are cached
+    per (fn, mesh, statics) so each bucket shape compiles once.
+    """
+    key = (fn, mesh, donate, tuple(sorted(statics.items())))
+    wrapped = _WRAP_CACHE.get(key)
+    if wrapped is None:
+        from ..distributed.collectives import shard_map_compat
+
+        def inner(*args):
+            out = fn(*[a[0] for a in args], **statics)
+            if isinstance(out, tuple):
+                return tuple(y[None] for y in out)
+            return out[None]
+
+        sm = shard_map_compat(inner, mesh, in_specs=P(BATCH_AXIS),
+                              out_specs=P(BATCH_AXIS))
+        wrapped = jax.jit(sm, donate_argnums=donate)
+        _WRAP_CACHE[key] = wrapped
+    return wrapped
+
+
+def _pad_graph() -> JoinGraph:
+    """Inert batch-padding query: a trivial 2-relation join whose lanes run
+    on the device but whose result is discarded.  A tree, so it is valid in
+    every lane space and never widens the bucket's NMAX/EMAX."""
+    return JoinGraph.make(2, [(0, 1)], [2.0, 2.0], [0.5])
+
+
+# ============================================================== host driver ==
+
+class ShardedBatchEngine:
+    """Level-synchronous DP over a batch of queries, sharded across devices.
+
+    Mirrors ``BatchEngine`` (same lane spaces, same kernels, same host
+    merges) with a leading device axis on every stacked array; see the
+    module docstring for the layout.  ``mesh`` is a 1-D ``batch`` mesh from
+    ``batch_mesh`` (default: all devices).
+    """
+
+    def __init__(self, graphs: list[JoinGraph], mesh: Mesh | None = None,
+                 chunk: int = CHUNK, algorithm: str = "dpsub",
+                 cyc_cap: int = CYC_CAP_DEFAULT):
+        if not graphs:
+            raise ValueError("empty batch")
+        if algorithm not in ("dpsub", "mpdp_tree", "mpdp_general"):
+            raise ValueError(f"unknown batched lane space {algorithm!r}")
+        for g in graphs:
+            if g.n < 2:
+                raise ValueError("ShardedBatchEngine needs n >= 2 (leaf "
+                                 "queries are handled by optimize_many)")
+            if not g.is_connected():
+                raise ValueError("query graph must be connected (no cross products)")
+            if algorithm == "mpdp_tree" and not g.is_tree():
+                raise ValueError("mpdp_tree lane space needs acyclic queries")
+        self.mesh = batch_mesh(mesh)
+        self.D = mesh_size(self.mesh)
+        self.graphs = list(graphs)
+        self.algorithm = algorithm
+        self.cyc_cap = cyc_cap
+        self.pallas = _use_pallas()        # read per engine; static jit arg
+        self.B = len(graphs)
+        npad = (-self.B) % self.D
+        padded = self.graphs + [_pad_graph() for _ in range(npad)]
+        # round-robin deal: stream entry j -> (shard j % D, slot j // D)
+        self.Bs = len(padded) // self.D
+        self.shard_graphs = [[padded[s * self.D + d] for s in range(self.Bs)]
+                             for d in range(self.D)]
+        self.bcap = _bcap(self.Bs)
+        self.nmax = max(bs.nmax_bucket(g.n) for g in self.graphs)
+        if self.nmax > NMAX_BATCH:
+            raise ValueError(f"batched path supports nmax <= {NMAX_BATCH}")
+        self.chunk = chunk
+        self.size = 1 << self.nmax
+        self.flat = self.bcap << self.nmax
+        self._shard1 = NamedSharding(self.mesh, P(BATCH_AXIS))
+        D, bcap, nmax = self.D, self.bcap, self.nmax
+        bt = np.asarray(ur.binom_table(nmax))
+        self.binom_b = self._put(np.broadcast_to(bt, (D,) + bt.shape))
+        adj = np.zeros((D, bcap, nmax), np.int32)
+        max_m = 1
+        for d, sh in enumerate(self.shard_graphs):
+            for q, g in enumerate(sh):
+                max_m = max(max_m, g.m)
+                for (u, v) in g.edges:
+                    adj[d, q, u] |= 1 << v
+                    adj[d, q, v] |= 1 << u
+        self.adj_b = self._put(adj)
+        self.emax = max(8, int(np.ceil(max_m / 8.0)) * 8)
+        emu = np.zeros((D, bcap, self.emax), np.int32)
+        emv = np.zeros((D, bcap, self.emax), np.int32)
+        eui = np.full((D, bcap, self.emax), -1, np.int32)
+        evi = np.full((D, bcap, self.emax), -1, np.int32)
+        eliv = np.zeros((D, bcap, self.emax), bool)
+        m_np = np.zeros((D, bcap), np.int32)
+        for d, sh in enumerate(self.shard_graphs):
+            for q, g in enumerate(sh):
+                m_np[d, q] = g.m
+                for ei, (u, v) in enumerate(g.edges):
+                    emu[d, q, ei] = 1 << u
+                    emv[d, q, ei] = 1 << v
+                    eui[d, q, ei], evi[d, q, ei], eliv[d, q, ei] = u, v, True
+        self.emu_b = self._put(emu)
+        self.emv_b = self._put(emv)
+        self.m_b = self._put(m_np)
+        if algorithm == "mpdp_general":
+            # phase A runs per (shard, query) on the host driver every
+            # level — build its per-query device rows once, not per level
+            self._phase_a_rows = [
+                [(jnp.asarray(adj[d, q]), jnp.asarray(eui[d, q]),
+                  jnp.asarray(evi[d, q]), jnp.asarray(eliv[d, q]))
+                 for q in range(self.Bs)] for d in range(D)]
+        self.counters = [Counters() for _ in self.graphs]
+        self.timings: dict[str, float] = {}
+        self._init_memo()
+
+    def _put(self, x):
+        """Commit a stacked host array to the mesh, sharded over ``batch``."""
+        return jax.device_put(jnp.asarray(x), self._shard1)
+
+    # ------------------------------------------------------------- memo ----
+    def _init_memo(self):
+        D = self.D
+        self.memo_cost = self._put(np.full((D, self.flat), INF, np.float32))
+        self.memo_rows = self._put(np.zeros((D, self.flat), np.float32))
+        self.memo_left = self._put(np.zeros((D, self.flat), np.int32))
+        self.all_sets = self._put(np.zeros((D, self.flat), np.int32))
+        self._next_off = [[g.n for g in sh] for sh in self.shard_graphs]
+        self._level_off = [[{1: 0} for _ in sh] for sh in self.shard_graphs]
+        idx_d, cost_d, rows_d, pos_d, set_d = [], [], [], [], []
+        for sh in self.shard_graphs:
+            idx_l, cost_l, rows_l, pos_l, set_l = [], [], [], [], []
+            for q, g in enumerate(sh):
+                leaves = np.array([1 << v for v in range(g.n)], np.int32)
+                lrows = g.log2_card.astype(np.float32)
+                lcost = cm.np_scan_cost(lrows).astype(np.float32)
+                base = q << self.nmax
+                idx_l.append(base + leaves.astype(np.int64))
+                cost_l.append(lcost)
+                rows_l.append(lrows)
+                pos_l.append(base + np.arange(g.n, dtype=np.int64))
+                set_l.append(leaves)
+            idx_d.append(np.concatenate(idx_l))
+            cost_d.append(np.concatenate(cost_l))
+            rows_d.append(np.concatenate(rows_l))
+            pos_d.append(np.concatenate(pos_l))
+            set_d.append(np.concatenate(set_l))
+        self._scatter(idx_d, cost=cost_d, rows=rows_d)
+        self._set_all_sets(pos_d, set_d)
+
+    def _stack(self, cols, cap, dt, fill=0):
+        buf = np.full((self.D, cap), fill, dt)
+        for d, x in enumerate(cols):
+            buf[d, : len(x)] = x
+        return jnp.asarray(buf)
+
+    def _scatter(self, idx_by_d, cost=None, rows=None, left=None):
+        """Stacked memo scatter: per-shard index lists, OOB-padded to a
+        common cap (pad index ``flat`` -> dropped inside the shard body)."""
+        cap = _cap(max(len(x) for x in idx_by_d))
+        idx = self._stack([x.astype(np.int64) for x in idx_by_d], cap,
+                          np.int64, fill=self.flat).astype(jnp.int32)
+        scatter = _sharded(_set_drop, self.mesh, donate=(0,))
+        if cost is not None:
+            self.memo_cost = scatter(self.memo_cost, idx,
+                                     self._stack(cost, cap, np.float32))
+        if rows is not None:
+            self.memo_rows = scatter(self.memo_rows, idx,
+                                     self._stack(rows, cap, np.float32))
+        if left is not None:
+            self.memo_left = scatter(self.memo_left, idx,
+                                     self._stack(left, cap, np.int32))
+
+    def _set_all_sets(self, pos_by_d, sets_by_d):
+        cap = _cap(max(len(x) for x in pos_by_d))
+        pos = self._stack([x.astype(np.int64) for x in pos_by_d], cap,
+                          np.int64, fill=self.flat).astype(jnp.int32)
+        scatter = _sharded(_set_drop, self.mesh, donate=(0,))
+        self.all_sets = scatter(self.all_sets,
+                                pos, self._stack(sets_by_d, cap, np.int32))
+
+    # ------------------------------------------------------------ filter ---
+    def _filter_level(self, i: int) -> list[list[np.ndarray]]:
+        """Connected level-i sets, per shard per query: one fused device
+        step per chunk, host compaction per shard."""
+        t0 = time.perf_counter()
+        D, Bs, bcap = self.D, self.Bs, self.bcap
+        totals = np.array([[comb(g.n, i) if g.n >= i else 0 for g in sh]
+                           for sh in self.shard_graphs], np.int64)
+        foff = np.zeros((D, Bs + 1), np.int64)
+        np.cumsum(totals, axis=1, out=foff[:, 1:])
+        total_max = int(foff[:, -1].max())
+        per_q = [[[] for _ in range(Bs)] for _ in range(D)]
+        kf = _sharded(_bfilter_chunk, self.mesh, nmax=self.nmax,
+                      chunk=self.chunk, bcap=bcap, pallas=self.pallas)
+        k_arr = jnp.asarray(np.full(D, i, np.int32))
+        for lane0 in range(0, total_max, self.chunk):
+            fl = np.clip(foff - lane0, -_CLIP, _CLIP)
+            fpad = np.broadcast_to(fl[:, -1:], (D, bcap + 1)).astype(np.int32).copy()
+            fpad[:, : Bs + 1] = fl
+            # one fused fetch: D shards' chunks land in a single host sync
+            Sn, c, qn = jax.device_get(
+                kf(jnp.asarray(fpad), k_arr, self.binom_b, self.adj_b))
+            for d in range(D):
+                if c[d].any():
+                    Sc = Sn[d][c[d]]
+                    qc = qn[d][c[d]]
+                    for q in np.unique(qc):
+                        per_q[d][q].append(Sc[qc == q])
+        sets = [[np.concatenate(l) if l else np.zeros(0, np.int32)
+                 for l in per_q[d]] for d in range(D)]
+        self.timings["filter"] = (self.timings.get("filter", 0.0)
+                                  + time.perf_counter() - t0)
+        return sets
+
+    def _register_level(self, i: int, sets) -> None:
+        """Host rows (shared ``cost.np_rows_for_sets``) + registration, per
+        shard per query — identical to ``BatchEngine._register_level``."""
+        t0 = time.perf_counter()
+        idx_d, rows_d, pos_d, set_d = [], [], [], []
+        z64, z32 = np.zeros(0, np.int64), np.zeros(0, np.int32)
+        zf = np.zeros(0, np.float32)
+        for d in range(self.D):
+            idx_l, rows_l, pos_l, set_l = [], [], [], []
+            for q, sets_q in enumerate(sets[d]):
+                self._level_off[d][q][i] = self._next_off[d][q]
+                if not len(sets_q):
+                    continue
+                base = q << self.nmax
+                rows_q = cm.np_rows_for_sets(sets_q, self.shard_graphs[d][q])
+                idx_l.append(base + sets_q.astype(np.int64))
+                rows_l.append(rows_q)
+                pos_l.append(base + self._next_off[d][q]
+                             + np.arange(len(sets_q), dtype=np.int64))
+                set_l.append(sets_q)
+                self._next_off[d][q] += len(sets_q)
+            idx_d.append(np.concatenate(idx_l) if idx_l else z64)
+            rows_d.append(np.concatenate(rows_l) if rows_l else zf)
+            pos_d.append(np.concatenate(pos_l) if pos_l else z64)
+            set_d.append(np.concatenate(set_l) if set_l else z32)
+        if any(len(x) for x in idx_d):
+            self._scatter(idx_d, rows=rows_d)
+            self._set_all_sets(pos_d, set_d)
+        self.timings["filter"] = (self.timings.get("filter", 0.0)
+                                  + time.perf_counter() - t0)
+
+    # ---------------------------------------------------------- evaluate ---
+    def _bump_counters(self, ev_acc, ccp_acc) -> None:
+        """Fold per-(shard, slot) lane counts back onto the real queries
+        (inert padding slots are simply never read)."""
+        for qi in range(self.B):
+            d, s = qi % self.D, qi // self.D
+            self.counters[qi].evaluated += int(ev_acc[d, s])
+            self.counters[qi].ccp += int(ccp_acc[d, s])
+
+    def _commit_best(self, sets, best_cost, best_left) -> None:
+        """Commit a level: per-(shard, query) slices of the per-shard best
+        arrays, one stacked scatter."""
+        idx_d, cost_d, left_d = [], [], []
+        z64, z32 = np.zeros(0, np.int64), np.zeros(0, np.int32)
+        zf = np.zeros(0, np.float32)
+        for d in range(self.D):
+            idx_l, cost_l, left_l = [], [], []
+            off = 0
+            for q, sets_q in enumerate(sets[d]):
+                nsq = len(sets_q)
+                bc = best_cost[d][off: off + nsq]
+                blft = best_left[d][off: off + nsq]
+                off += nsq
+                fin = np.isfinite(bc)
+                if fin.any():
+                    idx_l.append((q << self.nmax) + sets_q[fin].astype(np.int64))
+                    cost_l.append(bc[fin])
+                    left_l.append(blft[fin])
+            idx_d.append(np.concatenate(idx_l) if idx_l else z64)
+            cost_d.append(np.concatenate(cost_l) if cost_l else zf)
+            left_d.append(np.concatenate(left_l) if left_l else z32)
+        if any(len(x) for x in idx_d):
+            self._scatter(idx_d, cost=cost_d, left=left_d)
+
+    def _eval_level(self, i: int, sets) -> None:
+        """Segmented lane spaces (DPSUB ``sets x 2^i``, tree ``sets x m``):
+        each shard's lane space is chunked on the same grid a standalone
+        ``BatchEngine`` would use; shorter shards run dead (all-masked)
+        chunks at the tail, whose all-INF segments merge as no-ops."""
+        D, Bs, bcap = self.D, self.Bs, self.bcap
+        ns = np.array([[len(s) for s in sets[d]] for d in range(D)], np.int64)
+        if self.algorithm == "mpdp_tree":
+            mult = np.array([[g.m for g in sh] for sh in self.shard_graphs],
+                            np.int64)
+        else:
+            mult = np.full((D, Bs), np.int64(1) << i, np.int64)
+        lanes = ns * mult
+        eoff = np.zeros((D, Bs + 1), np.int64)
+        np.cumsum(lanes, axis=1, out=eoff[:, 1:])
+        totals = eoff[:, -1]
+        total_max = int(totals.max())
+        if total_max == 0:
+            return
+        t0 = time.perf_counter()
+        soff = np.zeros((D, Bs + 1), np.int64)
+        np.cumsum(ns, axis=1, out=soff[:, 1:])
+        best_cost = [np.full(int(soff[d, -1]), INF, np.float32) for d in range(D)]
+        best_left = [np.zeros(int(soff[d, -1]), np.int32) for d in range(D)]
+        loff = np.zeros((D, bcap), np.int64)
+        for d in range(D):
+            for q in range(Bs):
+                loff[d, q] = (q << self.nmax) + self._level_off[d][q][i]
+        loff_d = jnp.asarray(loff.astype(np.int32))
+        spad = np.broadcast_to(soff[:, -1:], (D, bcap)).copy()
+        spad[:, :Bs] = soff[:, :Bs]
+        soff_d = jnp.asarray(spad.astype(np.int32))
+        nseg = self.chunk + 2
+        ev_acc = np.zeros((D, Bs), np.int64)
+        ccp_acc = np.zeros((D, Bs), np.int64)
+        if self.algorithm == "mpdp_tree":
+            kernel = _sharded(_beval_tree_chunk, self.mesh, nmax=self.nmax,
+                              chunk=self.chunk, nseg=nseg, bcap=bcap,
+                              pallas=self.pallas)
+        else:
+            kernel = _sharded(_beval_dpsub_chunk, self.mesh, nmax=self.nmax,
+                              chunk=self.chunk, nseg=nseg, bcap=bcap,
+                              pallas=self.pallas)
+        i_arr = jnp.asarray(np.full(D, i, np.int32))
+        for lane0 in range(0, total_max, self.chunk):
+            el = np.clip(eoff - lane0, -_CLIP, _CLIP)
+            epad = np.broadcast_to(el[:, -1:], (D, bcap + 1)).astype(np.int32).copy()
+            epad[:, : Bs + 1] = el
+            seg0 = np.zeros(D, np.int64)
+            for d in range(D):
+                p0 = int(np.searchsorted(eoff[d], lane0, side="right")) - 1
+                p0 = min(max(p0, 0), Bs - 1)
+                seg0[d] = soff[d, p0] + (lane0 - eoff[d, p0]) // mult[d, p0]
+            seg0_d = jnp.asarray(np.clip(seg0, -_CLIP, _CLIP).astype(np.int32))
+            if self.algorithm == "mpdp_tree":
+                sc, sl, ev_q, ccp_q = kernel(
+                    self.all_sets, jnp.asarray(epad), loff_d, soff_d, seg0_d,
+                    self.m_b, self.adj_b, self.emu_b, self.emv_b,
+                    self.memo_cost, self.memo_rows)
+            else:
+                sc, sl, ev_q, ccp_q = kernel(
+                    self.all_sets, jnp.asarray(epad), loff_d, soff_d, seg0_d,
+                    i_arr, self.adj_b, self.memo_cost, self.memo_rows)
+            scn, sln, evn, ccpn = jax.device_get((sc, sl, ev_q, ccp_q))
+            ev_acc += evn[:, :Bs]
+            ccp_acc += ccpn[:, :Bs]
+            for d in range(D):
+                if lane0 < totals[d]:
+                    _merge_best(best_cost[d], best_left[d], int(seg0[d]),
+                                scn[d], sln[d])
+        self._bump_counters(ev_acc, ccp_acc)
+        self._commit_best(sets, best_cost, best_left)
+        self.timings["evaluate"] = (self.timings.get("evaluate", 0.0)
+                                    + time.perf_counter() - t0)
+
+    # ------------------------------------------------- MPDP-general phase --
+    def _pairs_level(self, sets):
+        """Phase A per shard per query (shared ``blocks.np_pairs_for_sets``
+        host driver), fused into per-shard (set, block, qid, segment) pair
+        arrays — the per-shard analogue of ``BatchEngine._pairs_level``."""
+        t0 = time.perf_counter()
+        out = []
+        for d in range(self.D):
+            soff = 0
+            ps_l, pb_l, pq_l, pk_l = [], [], [], []
+            for q, sets_q in enumerate(sets[d]):
+                if not len(sets_q):
+                    continue
+                g = self.shard_graphs[d][q]
+                adj_q, eu_q, ev_q, eliv_q = self._phase_a_rows[d][q]
+                ps_q, pb_q = bl.np_pairs_for_sets(
+                    sets_q, g, adj_q, eu_q, ev_q, eliv_q,
+                    nmax=self.nmax, emax=self.emax, cyc_cap=self.cyc_cap)
+                ps_l.append(ps_q)
+                pb_l.append(pb_q)
+                pq_l.append(np.full(len(ps_q), q, np.int32))
+                pk_l.append(soff + np.searchsorted(sets_q, ps_q).astype(np.int64))
+                soff += len(sets_q)
+            if ps_l:
+                out.append((np.concatenate(ps_l), np.concatenate(pb_l),
+                            np.concatenate(pq_l), np.concatenate(pk_l)))
+            else:
+                z = np.zeros(0, np.int32)
+                out.append((z, z, z, np.zeros(0, np.int64)))
+        self.timings["blocks"] = (self.timings.get("blocks", 0.0)
+                                  + time.perf_counter() - t0)
+        return out
+
+    def _eval_level_general(self, i: int, sets) -> None:
+        D, Bs = self.D, self.Bs
+        pairs = self._pairs_level(sets)
+        if not any(len(p[0]) for p in pairs):
+            return
+        t0 = time.perf_counter()
+        offs_by_d, totals = [], np.zeros(D, np.int64)
+        for d, (ps, pb, _, _) in enumerate(pairs):
+            sizes = bs.np_popcount(pb).astype(np.int64)
+            offs = np.zeros(len(ps) + 1, np.int64)
+            np.cumsum((np.int64(1) << sizes).astype(np.int64), out=offs[1:])
+            offs_by_d.append(offs)
+            totals[d] = offs[-1]
+        total_max = int(totals.max())
+        best_cost = [np.full(sum(len(s) for s in sets[d]), INF, np.float32)
+                     for d in range(D)]
+        best_left = [np.zeros(sum(len(s) for s in sets[d]), np.int32)
+                     for d in range(D)]
+        ev_acc = np.zeros((D, Bs), np.int64)
+        ccp_acc = np.zeros((D, Bs), np.int64)
+        k_all = [[] for _ in range(D)]
+        c_all = [[] for _ in range(D)]
+        l_all = [[] for _ in range(D)]
+        for lane0 in range(0, total_max, self.chunk):
+            p0s, npairs = np.zeros(D, np.int64), np.zeros(D, np.int64)
+            for d in range(D):
+                lane1 = min(lane0 + self.chunk, int(totals[d]))
+                if lane1 <= lane0:
+                    continue
+                offs = offs_by_d[d]
+                p0s[d] = int(np.searchsorted(offs, lane0, side="right")) - 1
+                npairs[d] = int(np.searchsorted(offs, lane1, side="left")) - p0s[d]
+            pcap = _cap(int(max(npairs.max(), 1)), 256)
+            psl = np.zeros((D, pcap), np.int32)
+            pbl = np.zeros((D, pcap), np.int32)
+            pql = np.zeros((D, pcap), np.int32)
+            ofl = np.full((D, pcap), np.int64(1 << 40), np.int64)
+            lane_cnt = np.zeros(D, np.int32)
+            for d in range(D):
+                np_d, p0 = int(npairs[d]), int(p0s[d])
+                if not np_d:
+                    continue
+                ps, pb, pq, _ = pairs[d]
+                psl[d, :np_d] = ps[p0: p0 + np_d]
+                pbl[d, :np_d] = pb[p0: p0 + np_d]
+                pql[d, :np_d] = pq[p0: p0 + np_d]
+                ofl[d, :np_d] = offs_by_d[d][p0: p0 + np_d] - lane0
+                lane_cnt[d] = min(lane0 + self.chunk, int(totals[d])) - lane0
+            ofl = np.clip(ofl, -_CLIP, _CLIP).astype(np.int32)
+            kernel = _sharded(_beval_general_chunk, self.mesh, nmax=self.nmax,
+                              chunk=self.chunk, pcap=pcap, bcap=self.bcap,
+                              pallas=self.pallas)
+            sc, sl, ev_q, ccp_q = kernel(
+                jnp.asarray(psl), jnp.asarray(pbl), jnp.asarray(pql),
+                jnp.asarray(ofl),
+                jnp.asarray(np.maximum(npairs, 1).astype(np.int32)),
+                jnp.asarray(lane_cnt), self.adj_b, self.memo_cost,
+                self.memo_rows)
+            scn_all, sln_all, evn, ccpn = jax.device_get((sc, sl, ev_q, ccp_q))
+            ev_acc += evn[:, :Bs]
+            ccp_acc += ccpn[:, :Bs]
+            for d in range(D):
+                np_d, p0 = int(npairs[d]), int(p0s[d])
+                if not np_d:
+                    continue
+                scn = scn_all[d][:np_d]
+                fin = np.isfinite(scn)
+                k_all[d].append(pairs[d][3][p0: p0 + np_d][fin])
+                c_all[d].append(scn[fin])
+                l_all[d].append(sln_all[d][:np_d][fin])
+        self._bump_counters(ev_acc, ccp_acc)
+        for d in range(D):
+            if k_all[d]:
+                _merge_scattered(best_cost[d], best_left[d],
+                                 np.concatenate(k_all[d]),
+                                 np.concatenate(c_all[d]),
+                                 np.concatenate(l_all[d]))
+        self._commit_best(sets, best_cost, best_left)
+        self.timings["evaluate"] = (self.timings.get("evaluate", 0.0)
+                                    + time.perf_counter() - t0)
+
+    # ------------------------------------------------------------ driver ---
+    def run(self) -> list[OptimizeResult]:
+        t0 = time.perf_counter()
+        max_n = max(g.n for g in self.graphs)
+        for i in range(2, max_n + 1):
+            sets = self._filter_level(i)
+            self._register_level(i, sets)
+            if self.algorithm == "mpdp_general":
+                self._eval_level_general(i, sets)
+            else:
+                self._eval_level(i, sets)
+        wall = time.perf_counter() - t0
+        cost_all = np.asarray(self.memo_cost)
+        left_all = np.asarray(self.memo_left)
+        out = []
+        for qi, g in enumerate(self.graphs):
+            d, s = qi % self.D, qi // self.D
+            base = s << self.nmax
+            cost = float(cost_all[d, base + g.full_set])
+            if not np.isfinite(cost):
+                raise RuntimeError(f"no plan found for batch query {qi}")
+            p = extract_plan(g.full_set, left_all[d, base: base + self.size], g)
+            r = OptimizeResult(plan=p, cost=cost, counters=self.counters[qi],
+                               algorithm=f"batch_{self.algorithm}",
+                               wall_s=wall / self.B, levels=g.n)
+            r.timings = dict(self.timings)
+            out.append(r)
+        return out

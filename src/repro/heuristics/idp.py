@@ -180,7 +180,8 @@ def _replace(root: _TNode, target: _TNode, leaf: _TNode) -> _TNode:
 
 
 def solve(g: JoinGraph, k: int = 15, subsolver: str = "mpdp",
-          max_rounds: Optional[int] = None, batch: int = 4) -> OptimizeResult:
+          max_rounds: Optional[int] = None, batch: int = 4,
+          devices=None, mesh=None) -> OptimizeResult:
     t0 = time.perf_counter()
     counters = Counters()
     if subsolver == "lindp":
@@ -199,8 +200,10 @@ def solve(g: JoinGraph, k: int = 15, subsolver: str = "mpdp",
         def batch_sub(jgs):
             # "mpdp" routes through the per-bucket topology dispatcher:
             # acyclic subproblems get the sets x m tree lanes, cyclic ones
-            # the block prefix-sum lanes (cheap spaces, identical costs)
-            rs = _e.optimize_many(jgs, algorithm=subsolver)
+            # the block prefix-sum lanes (cheap spaces, identical costs);
+            # devices/mesh shard the round's batch over a 1-D device mesh
+            rs = _e.optimize_many(jgs, algorithm=subsolver, devices=devices,
+                                  mesh=mesh)
             for r in rs:
                 counters.evaluated += r.counters.evaluated
                 counters.ccp += r.counters.ccp

@@ -69,15 +69,17 @@ def _partition(ug: UnitGraph, k: int) -> list[list[int]]:
 
 
 def solve(g: JoinGraph, k: int = 15, subsolver: str = "mpdp",
-          goo_floor: bool = True) -> OptimizeResult:
+          goo_floor: bool = True, devices=None, mesh=None) -> OptimizeResult:
     t0 = time.perf_counter()
     counters = Counters()
     from ..core import engine as _e
 
     def batch_solve(jgs):
         """Disjoint subproblems -> one batched device pass ("mpdp" lands in
-        the per-bucket tree/general lane spaces, not DPSUB)."""
-        rs = _e.optimize_many(jgs, algorithm=subsolver)
+        the per-bucket tree/general lane spaces, not DPSUB; ``devices``/
+        ``mesh`` shard the round's batch across a 1-D device mesh)."""
+        rs = _e.optimize_many(jgs, algorithm=subsolver, devices=devices,
+                              mesh=mesh)
         for r in rs:
             counters.evaluated += r.counters.evaluated
             counters.ccp += r.counters.ccp

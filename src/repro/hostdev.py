@@ -1,0 +1,34 @@
+"""Pre-jax host-device bootstrap (deliberately jax-free).
+
+``--xla_force_host_platform_device_count`` is read exactly once, when jax
+initializes its backends — so every entry point that wants emulated CPU
+devices (the test conftest, ``bench_batch --devices``, ``query_service
+--devices``) must inject it into ``XLA_FLAGS`` *before* the first jax
+import.  This module centralizes that guard; importing it never touches jax.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+
+def ensure_host_devices(n: int | None) -> bool:
+    """Ask for ``n`` emulated host devices; return True when the request is
+    (now or already) expressed in ``XLA_FLAGS``.
+
+    No-op when ``n`` is falsy or 1 (the real-device default), when a count
+    is already pinned (an explicit pin wins — if it is smaller than what the
+    caller later needs, ``core.shard.take_devices`` raises loudly), or when
+    jax is already imported (too late to matter; the caller's
+    ``take_devices`` will again fail loudly if devices are missing).
+    """
+    if not n or n <= 1:
+        return False
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" in flags:
+        return True
+    if "jax" in sys.modules:
+        return False
+    os.environ["XLA_FLAGS"] = (
+        flags + f" --xla_force_host_platform_device_count={n}").strip()
+    return True

@@ -16,7 +16,11 @@ import jax
 
 def _make_mesh(shape, axes):
     n = int(np.prod(shape))
-    devices = jax.devices()[:n]
+    # never silently truncate to however many devices happen to exist — a
+    # (16, 16) mesh on a 1-device host must fail loudly with the actual
+    # count (core.shard.take_devices raises with the CPU-emulation recipe)
+    from ..core.shard import take_devices
+    devices = take_devices(n)
     at = getattr(jax.sharding, "AxisType", None)
     if at is not None:                 # jax >= 0.5: explicit axis types
         return jax.make_mesh(shape, axes, devices=devices,

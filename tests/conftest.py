@@ -1,2 +1,11 @@
 import os, sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Multi-device CPU emulation for the sharding suite (tests/test_shard.py):
+# give the session 4 emulated host devices unless the caller already pinned
+# a count (e.g. the CI `devices-4` job exports it explicitly, and a
+# hypothetical single-device run can pin `=1`).  This must happen before the
+# first jax import anywhere in the session; repro.hostdev is jax-free.
+from repro.hostdev import ensure_host_devices
+
+ensure_host_devices(4)

@@ -1,0 +1,301 @@
+"""Multi-device sharded ``optimize_many``: device-emulated differential suite.
+
+``tests/conftest.py`` forces ``--xla_force_host_platform_device_count=4``
+(unless the caller pinned a count), so this file can build 1/2/4-device
+``batch`` meshes from emulated CPU devices in-process and assert the sharded
+engine is **bit-identical** — costs via ``==``, plans via exact shape
+equality against the *same lane space* sequentially — at every device count,
+for all three lane spaces, vector and Pallas-interpret variants alike.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import engine
+from repro.core import shard as sh
+from repro.core.batch import BatchEngine, optimize_many
+from repro.core.joingraph import JoinGraph
+from repro.core.plan import validate_plan
+from repro.core.plancache import PlanCache
+from repro.workloads import generators as gen
+from tests.helpers import rand_graph, given, settings, st
+
+NDEV = len(jax.devices())
+
+
+def needs(d):
+    return pytest.param(d, marks=pytest.mark.skipif(
+        NDEV < d, reason=f"needs {d} devices (have {NDEV}; conftest asks "
+                         "for 4 emulated CPU devices)"))
+
+
+def plan_shape(p):
+    if p.is_leaf:
+        return p.rel_set
+    return (p.rel_set, plan_shape(p.left), plan_shape(p.right))
+
+
+def tree_stream():
+    """All-acyclic mix (valid for the mpdp_tree lane space)."""
+    return [gen.chain(6, 1), gen.star(7, 2), gen.snowflake(9, 3),
+            gen.chain(4, 4), gen.musicbrainz_query(10, 5), gen.star(5, 6),
+            gen.chain(8, 7)]
+
+
+def mixed_stream():
+    """Chain/star/cycle/clique mix over both NMAX buckets (8 and 16)."""
+    return [gen.chain(6, 1), gen.cycle(8, 2), gen.clique(5, 3),
+            rand_graph(9, 3, 4), gen.star(7, 5), rand_graph(12, 4, 6),
+            gen.cycle(5, 7), rand_graph(4, 0, 8)]
+
+
+def _seq(space, graphs):
+    return [engine.optimize(g, space) for g in graphs]
+
+
+@pytest.fixture(scope="module")
+def seq_mixed():
+    return {space: _seq(space, mixed_stream())
+            for space in ("dpsub", "mpdp_general")}
+
+
+@pytest.fixture(scope="module")
+def seq_tree():
+    return _seq("mpdp_tree", tree_stream())
+
+
+# ==================================================== differential: spaces ==
+
+@pytest.mark.parametrize("devices", [needs(1), needs(2), needs(4)])
+@pytest.mark.parametrize("space", ["dpsub", "mpdp_general"])
+def test_sharded_bit_identical_to_sequential(space, devices, seq_mixed):
+    graphs = mixed_stream()
+    rs = optimize_many(graphs, algorithm=space, devices=devices)
+    for g, r, s in zip(graphs, rs, seq_mixed[space]):
+        assert r.cost == s.cost              # bit-identical, not approximate
+        assert plan_shape(r.plan) == plan_shape(s.plan)
+        validate_plan(r.plan, g)
+        assert r.algorithm == f"batch_{space}"
+
+
+@pytest.mark.parametrize("devices", [needs(1), needs(2), needs(4)])
+def test_sharded_tree_space_bit_identical(devices, seq_tree):
+    graphs = tree_stream()
+    rs = optimize_many(graphs, algorithm="mpdp_tree", devices=devices)
+    for g, r, s in zip(graphs, rs, seq_tree):
+        assert r.cost == s.cost
+        assert plan_shape(r.plan) == plan_shape(s.plan)
+        validate_plan(r.plan, g)
+
+
+@pytest.mark.parametrize("devices", [needs(2), needs(4)])
+def test_sharded_auto_dispatch_matches_unsharded(devices):
+    """``auto`` per-bucket dispatch under sharding: same spaces, same costs,
+    same per-query lane counters as the unsharded batched run (counters are
+    per-query quantities, independent of batch/shard composition)."""
+    graphs = mixed_stream() + tree_stream()
+    base = optimize_many(graphs)
+    rs = optimize_many(graphs, devices=devices)
+    for b, r in zip(base, rs):
+        assert r.cost == b.cost
+        assert r.algorithm == b.algorithm
+        assert r.counters.evaluated == b.counters.evaluated
+        assert r.counters.ccp == b.counters.ccp
+
+
+@pytest.mark.parametrize("devices", [needs(2)])
+def test_sharded_pallas_interpret(devices, monkeypatch):
+    """REPRO_PALLAS=1 routes the sharded evaluators through the Pallas
+    kernels (interpret mode on CPU) inside the shard_map body; costs stay
+    bit-identical to the sequential vector path for every lane space."""
+    small_mixed = [gen.chain(5, 1), gen.cycle(5, 3), gen.clique(4, 4),
+                   gen.star(6, 2)]
+    small_tree = [gen.chain(5, 1), gen.star(6, 2), gen.chain(4, 9)]
+    want = {"dpsub": _seq("dpsub", small_mixed),
+            "mpdp_general": _seq("mpdp_general", small_mixed),
+            "mpdp_tree": _seq("mpdp_tree", small_tree)}
+    monkeypatch.setenv("REPRO_PALLAS", "1")
+    for space in ("dpsub", "mpdp_general", "mpdp_tree"):
+        graphs = small_tree if space == "mpdp_tree" else small_mixed
+        rs = optimize_many(graphs, algorithm=space, devices=devices)
+        for r, s in zip(rs, want[space]):
+            assert r.cost == s.cost
+            assert plan_shape(r.plan) == plan_shape(s.plan)
+
+
+# ================================================= padding property tests ==
+
+_TOPOS = ("chain", "star", "cycle", "clique", "rand")
+
+
+def _topo_graph(kind_idx, n, seed):
+    kind = _TOPOS[kind_idx % len(_TOPOS)]
+    if kind == "chain":
+        return gen.chain(n, seed)
+    if kind == "star":
+        return gen.star(n, seed)
+    if kind == "cycle":
+        return gen.cycle(n, seed)
+    if kind == "clique":
+        return gen.clique(min(n, 6), seed)     # keep clique DP cheap
+    return rand_graph(n, seed % 3, seed)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 6), st.integers(0, 10_000), st.integers(2, 4))
+def test_padding_property_uneven_batches(nq, seed, devices):
+    """Uneven B (not a device multiple), single-query buckets, mixed
+    topologies 4-14 rels: padding with inert queries must not change any
+    real query's cost (vs the unsharded batched run, itself oracle-backed
+    elsewhere) and must not crash."""
+    if devices > NDEV:
+        devices = NDEV
+    if devices < 2:
+        pytest.skip("property needs >= 2 devices")
+    rng = np.random.RandomState(seed)
+    graphs = [_topo_graph(int(rng.randint(len(_TOPOS))),
+                          int(rng.randint(4, 15)), seed + 7 * j)
+              for j in range(nq)]
+    base = optimize_many(graphs)
+    rs = optimize_many(graphs, devices=devices)
+    for g, r, b in zip(graphs, rs, base):
+        assert r.cost == b.cost
+        validate_plan(r.plan, g)
+
+
+@pytest.mark.parametrize("devices", [needs(4)])
+def test_single_query_bucket_pads_to_device_multiple(devices):
+    """B=1 with 4 devices: 3 inert pad queries ride along and are
+    discarded; the lone real result is bit-identical."""
+    g = rand_graph(9, 2, 123)
+    [r] = optimize_many([g], devices=devices)
+    s = engine.optimize(g, "auto")
+    assert r.cost == s.cost
+    eng = sh.ShardedBatchEngine([g], sh.batch_mesh(devices),
+                                algorithm="mpdp_general")
+    assert eng.Bs == 1 and len(eng.shard_graphs) == devices
+    pads = [q for d in range(devices) for q in eng.shard_graphs[d]][1:]
+    assert all(p.n == 2 and p.is_tree() for p in pads)
+
+
+def test_empty_and_leaf_streams_no_device_work():
+    """Empty buckets: an empty stream and a leaf-only stream must resolve
+    without instantiating any device engine."""
+    assert optimize_many([], devices=min(2, NDEV)) == []
+    leaf = JoinGraph.make(1, [], [1000.0], [])
+    [r] = optimize_many([leaf], devices=min(2, NDEV))
+    assert r.plan.is_leaf and r.levels == 1
+    assert r.counters.evaluated == 0
+
+
+@pytest.mark.parametrize("devices", [needs(2)])
+def test_round_robin_deal_and_sub_batch_split(devices):
+    """Round-robin keeps shard loads within one query of each other, and
+    sub-batch splitting (max_batch) composes with sharding."""
+    graphs = [rand_graph(6 + (i % 3), i % 2, 40 + i) for i in range(7)]
+    eng = sh.ShardedBatchEngine(graphs, sh.batch_mesh(devices))
+    sizes = [len(s) for s in eng.shard_graphs]
+    assert len(set(sizes)) == 1              # padded to a device multiple
+    assert sum(sizes) - len(graphs) < devices
+    split = optimize_many(graphs, devices=devices, max_batch=2)
+    whole = optimize_many(graphs, devices=devices)
+    assert [r.cost for r in split] == [r.cost for r in whole]
+
+
+# ============================================================ mesh helpers ==
+
+def test_take_devices_never_truncates_silently():
+    assert len(sh.take_devices()) == NDEV
+    assert len(sh.take_devices(1)) == 1
+    with pytest.raises(ValueError, match=rf"only {NDEV} .* exist"):
+        sh.take_devices(NDEV + 1)
+    with pytest.raises(ValueError):
+        sh.take_devices(0)
+
+
+def test_batch_mesh_shapes_and_passthrough():
+    m = sh.batch_mesh(1)
+    assert m.axis_names == (sh.BATCH_AXIS,) and sh.mesh_size(m) == 1
+    assert sh.batch_mesh(m) is m             # Mesh passthrough
+    assert sh.mesh_size(sh.batch_mesh()) == NDEV
+
+
+def test_launch_mesh_raises_instead_of_truncating():
+    """`launch.mesh` shares take_devices: an oversized host mesh must raise
+    with the actual device count, not silently shrink."""
+    from repro.launch.mesh import make_host_mesh
+    with pytest.raises(ValueError, match=str(NDEV)):
+        make_host_mesh((NDEV + 1, 1))
+    m = make_host_mesh((1, 1))
+    assert m.shape["data"] == 1
+
+
+# ========================================================== plan cache ==
+
+def test_fully_cached_stream_spawns_no_device_work(monkeypatch):
+    """Cache hits are served before bucket formation: a fully-cached stream
+    must not construct any engine (sharded or not) and must report zero
+    evaluated lanes."""
+    devices = min(2, NDEV)
+    graphs = [rand_graph(7, 2, 70 + i) for i in range(4)]
+    cache = PlanCache()
+    first = optimize_many(graphs, cache=cache, devices=devices)
+    assert sum(r.counters.evaluated for r in first) > 0
+
+    def boom(*a, **k):
+        raise AssertionError("device engine spawned for a fully-cached stream")
+
+    import repro.core.batch as batch_mod
+    monkeypatch.setattr(sh.ShardedBatchEngine, "__init__", boom)
+    monkeypatch.setattr(batch_mod.BatchEngine, "__init__", boom)
+    monkeypatch.setattr(engine, "optimize", boom)
+    rs = optimize_many(graphs, cache=cache, devices=devices)
+    assert all(r.algorithm.startswith("cache[") for r in rs)
+    assert sum(r.counters.evaluated for r in rs) == 0
+    for g, r in zip(graphs, rs):
+        validate_plan(r.plan, g)
+
+
+@pytest.mark.parametrize("devices", [needs(2)])
+def test_cache_misses_then_sharded_compute(devices, monkeypatch):
+    """A half-cached stream ships only the misses to the sharded engine."""
+    hits = [rand_graph(7, 1, 90 + i) for i in range(2)]
+    misses = [rand_graph(8, 2, 95 + i) for i in range(3)]
+    cache = PlanCache()
+    optimize_many(hits, cache=cache, devices=devices)
+    seen = []
+    orig = sh.ShardedBatchEngine.__init__
+
+    def spy(self, graphs, *a, **k):
+        seen.append(len(graphs))
+        return orig(self, graphs, *a, **k)
+
+    monkeypatch.setattr(sh.ShardedBatchEngine, "__init__", spy)
+    rs = optimize_many(hits + misses, cache=cache, devices=devices)
+    assert sum(seen) == len(misses)          # only misses hit the device
+    for g, r in zip(hits + misses, rs):
+        validate_plan(r.plan, g)
+        fresh = engine.optimize(g, "auto")
+        if r.algorithm.startswith("cache["):
+            # hits are re-costed host-side on exact stats: equal up to the
+            # documented quantized-signature epsilon, not bit-identical
+            assert abs(r.cost - fresh.cost) <= 1e-4 * max(1.0, abs(fresh.cost))
+        else:
+            assert r.cost == fresh.cost
+
+
+# ======================================================= heuristics tiers ==
+
+@pytest.mark.parametrize("devices", [needs(2)])
+def test_uniondp_and_idp_inherit_sharding(devices):
+    """Heuristic rounds batch their disjoint subproblems; with ``devices``
+    they shard transparently and produce identical plans/costs."""
+    from repro.heuristics import idp, uniondp
+    g = gen.musicbrainz_query(20, seed=11)
+    u0 = uniondp.solve(g, k=8)
+    u1 = uniondp.solve(g, k=8, devices=devices)
+    assert u1.cost == u0.cost
+    i0 = idp.solve(g, k=8)
+    i1 = idp.solve(g, k=8, devices=devices)
+    assert i1.cost == i0.cost
