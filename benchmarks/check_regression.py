@@ -30,6 +30,14 @@ runner's core count, not the code.  A current report without a ``sharded``
 section skips these checks with a note (the single-device CI jobs bench
 without ``--devices``; the ``devices-4`` job provides the gating run).
 
+When the baseline carries a ``pipeline`` section (from ``bench_batch
+--pipeline``), the pipelined path is gated on its two deterministic
+invariants: pipelined costs **equal** the synchronous run's bit-for-bit, and
+the timed repeats trigger **zero** kernel retraces (the executable cache
+must serve every repeated bucket shape).  The pipelined-vs-sync speedup is
+reported, never gated — on a 2-core CI container the overlap has nothing to
+hide behind.
+
     python benchmarks/check_regression.py BENCH_batch.json \
         benchmarks/BENCH_baseline.json [--tolerance 0.25]
 
@@ -67,6 +75,36 @@ def check(current: dict, baseline: dict, tolerance: float = 0.25) -> list[str]:
             f"{algos['mpdp']['evaluated_lanes']} >= "
             f"{algos['dpsub']['evaluated_lanes']}")
     errors += check_sharded(current, baseline, tolerance)
+    errors += check_pipeline(current, baseline)
+    return errors
+
+
+def check_pipeline(current: dict, baseline: dict) -> list[str]:
+    """Deterministic pipeline gates: pipelined costs equal the synchronous
+    path bit-for-bit, and the timed repeats compile nothing (the executable
+    cache must serve every repeated bucket shape).  The speedup ratio is
+    reported only — it tracks the runner's core count, not the code."""
+    base_p = baseline.get("pipeline")
+    cur_p = current.get("pipeline")
+    if base_p is None:
+        if cur_p is not None:
+            print("note: current report has a pipeline section but the "
+                  "baseline does not — pipeline gates are vacuous until the "
+                  "baseline is refreshed with bench_batch --pipeline")
+        return []
+    if cur_p is None:
+        print("note: baseline has a pipeline section but the current report "
+              "was benched without --pipeline; pipeline checks skipped")
+        return []
+    errors: list[str] = []
+    if not cur_p.get("costs_equal", False):
+        errors.append("[pipeline] pipelined costs diverged from the "
+                      "synchronous path (must be bit-identical)")
+    if cur_p.get("retraces", 0) > base_p.get("retraces", 0):
+        errors.append(
+            f"[pipeline] timed repeats retraced kernels: "
+            f"{cur_p['retraces']} > baseline {base_p['retraces']} "
+            "(repeated same-shape buckets must hit the executable cache)")
     return errors
 
 
@@ -133,6 +171,11 @@ def main() -> int:
                   f"({a['qps_per_device']:.2f}/device) speedup "
                   f"{a['speedup']:.2f}x scaling {a['scaling_vs_1dev']:.2f}x "
                   f"lanes {a['evaluated_lanes']}")
+    if "pipeline" in current:
+        p = current["pipeline"]
+        print(f"[pipeline:{p['algorithm']}] qps {p['qps']:.2f} "
+              f"({p['speedup_vs_sync']:.2f}x vs sync) "
+              f"costs_equal {p['costs_equal']} retraces {p['retraces']}")
     if errors:
         print("\nBENCHMARK REGRESSION:")
         for e in errors:

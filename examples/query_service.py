@@ -1,49 +1,72 @@
-"""End-to-end driver of the paper's kind: an optimize-and-execute query
-service over the MusicBrainz-like schema.
+"""End-to-end driver of the paper's kind: a *streaming* optimize-and-execute
+query service over the MusicBrainz-like schema.
 
 A stream of generated analytic queries (10-56 relations — the random walk
 restarts on stall, so the full 56-table schema is reachable) flows through
 the PostgreSQL-style policy the paper enables:
 
-    n <= EXACT_LIMIT   -> exact MPDP, whole stream BATCHED through one
-                          device pipeline (engine.optimize_many) behind a
-                          canonical-signature plan cache
+    n <= EXACT_LIMIT   -> exact MPDP through the admission-controlled
+                          streaming service (``repro.core.service``): queries
+                          are grouped into (NMAX bucket, lane space) flights
+                          behind a canonical-signature plan cache, flight i's
+                          host finalize overlaps flight i+1's device work,
+                          and per-query latency percentiles are reported
     n >  EXACT_LIMIT   -> UnionDP(MPDP, k)      (paper §4.2; its per-round
                           partitions batch internally too)
 
 ``--devices N`` shards every batched pass (the exact tier AND UnionDP's
 per-round partitions) over an N-device ``batch`` mesh — on CPU the devices
 are emulated, so the flag must be parsed before jax initializes.
+``--pipeline`` additionally runs every engine's level loop pipelined (host
+compaction of level i+1 under device evaluate of level i; bit-identical
+plans).  ``--cache-file PATH`` persists the plan cache across service runs
+(the file self-invalidates when the stats-quantization version changes).
 
 Each optimized plan is executed on synthetic data by the numpy hash-join
 engine; results are cross-checked against a GOO plan for semantic equality.
 
-    PYTHONPATH=src python examples/query_service.py [--queries 8] [--devices 4]
+    PYTHONPATH=src python examples/query_service.py [--queries 8]
+        [--devices 4] [--pipeline] [--cache-file plans.plancache]
 """
 import argparse
+import os
 import time
 
 EXACT_LIMIT = 14      # CPU-container budget; 25 on the paper's GPU
 
 
-def optimize_stream(graphs, cache, devices=None):
-    """Optimize the whole stream: exact-tier queries as one batch, large
-    queries through UnionDP; ``devices`` shards both batched tiers.
-    Returns results in stream order."""
-    from repro.core import engine
+def optimize_stream(graphs, cache, devices=None, pipeline=None):
+    """Optimize the whole stream: exact-tier queries through the streaming
+    service (admission-controlled flights), large queries through UnionDP;
+    ``devices`` shards both batched tiers, ``pipeline`` overlaps host and
+    device work inside every engine.  Returns (results, StreamReport)."""
+    from repro.core import service
     from repro.heuristics import uniondp
     results = [None] * len(graphs)
     exact_idx = [i for i, g in enumerate(graphs) if g.n <= EXACT_LIMIT]
+    report = None
     if exact_idx:
-        batch = engine.optimize_many([graphs[i] for i in exact_idx],
-                                     algorithm="auto", cache=cache,
-                                     devices=devices)
-        for i, r in zip(exact_idx, batch):
+        rs, report = service.optimize_stream(
+            [graphs[i] for i in exact_idx], algorithm="auto", cache=cache,
+            devices=devices, pipeline=pipeline)
+        for i, r in zip(exact_idx, rs):
             results[i] = r
     for i, g in enumerate(graphs):
         if results[i] is None:
-            results[i] = uniondp.solve(g, k=10, devices=devices)
-    return results
+            results[i] = uniondp.solve(g, k=10, devices=devices,
+                                       pipeline=pipeline)
+    return results, report
+
+
+def load_cache(path):
+    from repro.core.plancache import PlanCache
+    if path and os.path.exists(path):
+        cache = PlanCache.load(path)
+        state = "stale, invalidated" if cache.stale_load else \
+            f"{len(cache)} entries"
+        print(f"plan cache: loaded {path} ({state})")
+        return cache
+    return PlanCache()
 
 
 def main():
@@ -52,13 +75,17 @@ def main():
     ap.add_argument("--devices", type=int, default=None,
                     help="shard batched passes over N devices (CPU devices "
                          "are emulated when needed)")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="pipelined engines: overlap host compaction with "
+                         "device evaluation (bit-identical plans)")
+    ap.add_argument("--cache-file", type=str, default=None,
+                    help="persist the plan cache here across service runs")
     args = ap.parse_args()
     # before the first jax import: backends read XLA_FLAGS exactly once
     from repro.hostdev import ensure_host_devices
     ensure_host_devices(args.devices)
 
     from repro.core.plan import validate_plan
-    from repro.core.plancache import PlanCache
     from repro.execution import executor as ex
     from repro.heuristics import goo
     from repro.workloads import generators as gen
@@ -69,10 +96,11 @@ def main():
     # disjoint seed windows keep stream entries distinct (no fake cache hits)
     graphs = [gen.musicbrainz_query(n, seed=100 + 50 * qi)
               for qi, n in enumerate(sizes)]
-    cache = PlanCache()
+    cache = load_cache(args.cache_file)
 
     t0 = time.perf_counter()
-    stream = optimize_stream(graphs, cache, devices=args.devices)
+    stream, report = optimize_stream(graphs, cache, devices=args.devices,
+                                     pipeline=args.pipeline or None)
     total_opt = time.perf_counter() - t0
 
     total_exec = 0.0
@@ -89,9 +117,25 @@ def main():
         total_exec += exec_s
         print(f"Q{qi}: n={g.n:3d} algo={res.algorithm:14s} "
               f"cost={res.cost:10.4g} exec={1e3*exec_s:6.1f}ms rows={out.count}")
+    if report is not None and report.flights:
+        # the engines honor REPRO_PIPELINE when --pipeline is absent; label
+        # the mode that actually ran, not just the flag
+        pipelined = args.pipeline or os.environ.get("REPRO_PIPELINE") == "1"
+        print(f"\nflights ({'pipelined' if pipelined else 'synchronous'} "
+              "engines, finalize overlapped):")
+        for f in report.flights:
+            print(f"  (nmax={f.nmax:2d}, {f.space:12s}) x{len(f.queries)} "
+                  f"wall={1e3*f.wall_s:7.1f}ms "
+                  f"finalize={1e3*f.finalize_s:6.1f}ms")
+        pct = report.latency_percentiles()
+        print("exact-tier latency: " +
+              " ".join(f"p{p}={1e3*v:.1f}ms" for p, v in pct.items()))
     print(f"\nservice done: {len(sizes)} queries, "
-          f"opt {total_opt:.2f}s (batched stream), exec {total_exec:.2f}s, "
+          f"opt {total_opt:.2f}s (streamed flights), exec {total_exec:.2f}s, "
           f"plan cache {cache.stats.hits} hits / {cache.stats.misses} misses")
+    if args.cache_file:
+        cache.save(args.cache_file)
+        print(f"plan cache: saved {len(cache)} entries -> {args.cache_file}")
 
 
 if __name__ == "__main__":

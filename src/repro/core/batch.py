@@ -42,13 +42,28 @@ a static select loop materializes each lane's own adjacency row); the
 pure-XLA vector path below stays the ``REPRO_PALLAS=0`` fallback.  The flag
 is threaded as a *static* jit arg so both traces coexist in one process.
 
+``pipeline=True`` (or ``REPRO_PIPELINE=1``) runs the level loop *pipelined*:
+each level's evaluate chunks are dispatched asynchronously (device refs held,
+no ``np.asarray`` sync) while the host concurrently fetches + compacts the
+next level's connectivity filter, computes its memo rows, and (general space)
+runs its block-decomposition phase A — the stage that is host-bound on small
+buckets.  The chunk grids, kernels and merge order are unchanged, so results
+stay bit-identical to the synchronous default; only dispatch order differs.
+The memo-update scatters donate their input buffers (``donate_argnums``), so
+the staged double-buffer writes alias in place instead of copy-on-write.
+
+All kernel entry points are served by ``exec_cache.EXEC`` — one compiled
+executable per (space, nmax, bcap, chunk, pallas) key for the whole process,
+with trace counting exposed on ``BatchEngine.stats`` (repeated bucket shapes
+across IDP2/UnionDP rounds and service flights must hit zero retraces).
+
 ``optimize_many`` is the public entry point; it also consults an optional
 ``PlanCache`` (canonical-signature keyed) before touching the device.
 """
 from __future__ import annotations
 
 import time
-from functools import partial
+from collections import deque
 from math import comb
 
 import numpy as np
@@ -61,22 +76,30 @@ from . import cost as cm
 from . import unrank as ur
 from .engine import (CHUNK, CYC_CAP_DEFAULT, INF, _cap, _merge_best,
                      _merge_scattered, _prune, _scatter_f32, _scatter_i32,
-                     _use_pallas)
+                     _use_pallas, _use_pipeline)
+from .exec_cache import EXEC
 from .joingraph import JoinGraph
 from .plan import Counters, OptimizeResult, extract_plan, leaf_plan
 
 NMAX_BATCH = 16          # memo is (bcap << NMAX): past 16 fall back to solo
 MAX_BATCH = 32           # sub-batch cap: bounds memo memory + recompiles
 _CLIP = 1 << 30          # offset clip (same trick as the general kernel)
+PEND_WINDOW = 8          # in-flight chunks per level: dispatching a level
+                         # queues at most this many un-fetched chunk results
+                         # (backpressure — bounds transient device memory
+                         # while still overlapping host merges with later
+                         # chunks' device execution)
 
 
 def _bcap(b: int) -> int:
     return _cap(b, 4)
 
 
-# =========================================================== jitted kernels ==
+# ================================================================= kernels ==
+# Raw (unjitted) chunk kernels: ``BatchEngine`` jits them through the
+# process-wide ``exec_cache.EXEC`` (one executable per static key, with
+# compile accounting); ``core.shard`` wraps the same bodies in shard_map.
 
-@partial(jax.jit, static_argnames=("nmax", "chunk", "bcap", "pallas"))
 def _bfilter_chunk(foff, k, binom, adj_b, *, nmax: int, chunk: int, bcap: int,
                    pallas: bool = False):
     """Batched unrank + connectivity filter.
@@ -100,7 +123,6 @@ def _bfilter_chunk(foff, k, binom, adj_b, *, nmax: int, chunk: int, bcap: int,
     return S, conn, qid
 
 
-@partial(jax.jit, static_argnames=("nmax", "chunk", "nseg", "bcap", "pallas"))
 def _beval_dpsub_chunk(all_sets, eoff, loff, soff, seg0, i,
                        adj_b, memo_cost, memo_rows,
                        *, nmax: int, chunk: int, nseg: int, bcap: int,
@@ -145,7 +167,6 @@ def _beval_dpsub_chunk(all_sets, eoff, loff, soff, seg0, i,
     return seg_cost, seg_left, ev_q, ccp_q
 
 
-@partial(jax.jit, static_argnames=("nmax", "chunk", "nseg", "bcap", "pallas"))
 def _beval_tree_chunk(all_sets, eoff, loff, soff, seg0, m_b,
                       adj_b, emu_b, emv_b, memo_cost, memo_rows,
                       *, nmax: int, chunk: int, nseg: int, bcap: int,
@@ -195,7 +216,6 @@ def _beval_tree_chunk(all_sets, eoff, loff, soff, seg0, m_b,
     return seg_cost, seg_left, ev_q, ccp_q
 
 
-@partial(jax.jit, static_argnames=("nmax", "chunk", "pcap", "bcap", "pallas"))
 def _beval_general_chunk(pair_set, pair_block, pair_qid, off_local, n_pairs,
                          lane_count, adj_b, memo_cost, memo_rows,
                          *, nmax: int, chunk: int, pcap: int, bcap: int,
@@ -250,7 +270,79 @@ def _beval_general_chunk(pair_set, pair_block, pair_qid, off_local, n_pairs,
 
 # ============================================================== host driver ==
 
-class BatchEngine:
+class _LevelLoop:
+    """Shared level-loop drivers for the batched engines.
+
+    ``BatchEngine`` and ``ShardedBatchEngine`` expose the same per-level
+    hooks (``_filter_dispatch``/``_filter_collect``, ``_register_level``,
+    ``_pairs_level``, ``_eval[_general]_dispatch``/``_eval[_general]_finalize``)
+    over different set containers (per-query lists vs per-shard nests); the
+    drivers treat those containers as opaque, so the synchronous loop and
+    the pipelined rotation live here exactly once — a fix to the overlap
+    schedule cannot diverge between the sharded and unsharded engines.
+    """
+
+    def run_levels(self) -> None:
+        """Run the level-synchronous DP; the memo stays on device (fetch it
+        with ``collect``).  The pipelined driver produces bit-identical memo
+        contents — same chunk grids, same kernels, same merge order — it
+        only overlaps host compaction with in-flight device work."""
+        t0 = time.perf_counter()
+        max_n = max(g.n for g in self.graphs)
+        general = self.algorithm == "mpdp_general"
+        if self.pipeline:
+            self._run_levels_pipelined(max_n, general)
+        else:
+            for i in range(2, max_n + 1):
+                sets = self._filter_collect(self._filter_dispatch(i))
+                self._register_level(i, sets)
+                if general:
+                    ctx = self._eval_general_dispatch(
+                        i, sets, self._pairs_level(sets))
+                    self._eval_general_finalize(i, sets, ctx)
+                else:
+                    self._eval_finalize(i, sets, self._eval_dispatch(i, sets))
+        self._wall += time.perf_counter() - t0
+
+    def _run_levels_pipelined(self, max_n: int, general: bool) -> None:
+        """Pipelined level loop.  Per level i:
+
+          1. dispatch level i+1's (memo-independent) filter chunks *first*,
+             so they clear the device queue early;
+          2. dispatch level i's evaluate chunks — the bulk device work;
+          3. while those execute, fetch + compact the filter results, cost
+             the new sets' rows, register them (rows/all_sets scatters touch
+             buffers eval(i) only reads; stream order keeps them safe), and
+             run phase A for the general space — the host-bound stage;
+          4. only then sync on eval(i)'s tail, merge and commit.
+        """
+        sets = self._filter_collect(self._filter_dispatch(2))
+        self._register_level(2, sets)
+        pairs = self._pairs_level(sets) if general else None
+        for i in range(2, max_n + 1):
+            fpend = self._filter_dispatch(i + 1) if i < max_n else None
+            if general:
+                ctx = self._eval_general_dispatch(i, sets, pairs)
+            else:
+                ctx = self._eval_dispatch(i, sets)
+            nxt = nxt_pairs = None
+            if fpend is not None:
+                nxt = self._filter_collect(fpend)
+                self._register_level(i + 1, nxt)
+                if general:
+                    nxt_pairs = self._pairs_level(nxt)
+            if general:
+                self._eval_general_finalize(i, sets, ctx)
+            else:
+                self._eval_finalize(i, sets, ctx)
+            sets, pairs = nxt, nxt_pairs
+
+    def run(self) -> list[OptimizeResult]:
+        self.run_levels()
+        return self.collect()
+
+
+class BatchEngine(_LevelLoop):
     """Level-synchronous DP over a batch of queries in one device pipeline.
 
     ``algorithm`` selects the evaluate lane space: ``dpsub`` (``sets x 2^i``),
@@ -258,10 +350,16 @@ class BatchEngine:
     ``mpdp_general`` (block prefix-sum).  All three enumerate the same CCP
     candidate minima, so costs/plans are identical — only the evaluated-lane
     counts differ.
+
+    ``pipeline`` (default: the ``REPRO_PIPELINE`` env flag) switches the
+    level loop to the pipelined driver: level i's evaluate is dispatched
+    asynchronously while the host compacts level i+1 — bit-identical
+    results, overlapped host/device time.
     """
 
     def __init__(self, graphs: list[JoinGraph], chunk: int = CHUNK,
-                 algorithm: str = "dpsub", cyc_cap: int = CYC_CAP_DEFAULT):
+                 algorithm: str = "dpsub", cyc_cap: int = CYC_CAP_DEFAULT,
+                 pipeline: bool | None = None):
         if not graphs:
             raise ValueError("empty batch")
         if algorithm not in ("dpsub", "mpdp_tree", "mpdp_general"):
@@ -278,6 +376,9 @@ class BatchEngine:
         self.algorithm = algorithm
         self.cyc_cap = cyc_cap
         self.pallas = _use_pallas()        # read per engine; static jit arg
+        self.pipeline = _use_pipeline() if pipeline is None else bool(pipeline)
+        self._exec_keys: set[tuple] = set()
+        self._wall = 0.0
         self.B = len(graphs)
         self.bcap = _bcap(self.B)
         self.nmax = max(bs.nmax_bucket(g.n) for g in graphs)
@@ -375,32 +476,68 @@ class BatchEngine:
         self.all_sets = _scatter_i32(self.all_sets, jnp.asarray(pos.astype(np.int32)),
                                      jnp.asarray(buf), size=self.flat, cap=cap)
 
+    # ---------------------------------------------------------- exec cache -
+    def _jit(self, name: str, impl, **statics):
+        """Kernel entry via the process-wide executable cache; the engine
+        remembers its keys so ``stats`` can report compile counts."""
+        self._exec_keys.add(EXEC.key(name, statics))
+        return EXEC.jit(name, impl, **statics)
+
+    @property
+    def stats(self) -> dict:
+        """Executable-cache accounting for this engine's kernel keys:
+        ``{"compiles": {key: traces}, "retraces": n, "pipeline": bool}`` —
+        repeated same-shape buckets must show zero retraces."""
+        return EXEC.stats_for(self._exec_keys, pipeline=self.pipeline)
+
     # ------------------------------------------------------------ filter ---
-    def _filter_level(self, i: int) -> list[np.ndarray]:
-        """Connected level-i sets of every query (one fused lane space)."""
+    def _filter_dispatch(self, i: int) -> dict:
+        """Dispatch level i's unrank+filter chunks, keeping at most
+        ``PEND_WINDOW`` un-fetched (older chunks drain into the context's
+        accumulators as newer ones execute).  The final fetch is
+        ``_filter_collect``'s job, so the pipelined driver can slot the
+        tail compaction under the level's evaluate."""
         t0 = time.perf_counter()
         totals = np.array([comb(g.n, i) if g.n >= i else 0
                            for g in self.graphs], np.int64)
         foff = np.zeros(self.B + 1, np.int64)
         np.cumsum(totals, out=foff[1:])
         total = int(foff[-1])
-        per_q: list[list[np.ndarray]] = [[] for _ in range(self.B)]
+        kf = self._jit("bfilter", _bfilter_chunk, nmax=self.nmax,
+                       chunk=self.chunk, bcap=self.bcap, pallas=self.pallas)
+        ctx = {"pend": deque(),
+               "per_q": [[] for _ in range(self.B)]}
         for lane0 in range(0, total, self.chunk):
             fl = np.clip(foff - lane0, -_CLIP, _CLIP)
             fpad = np.full(self.bcap + 1, fl[self.B], np.int32)
             fpad[: self.B + 1] = fl
-            S, conn, qid = _bfilter_chunk(
-                jnp.asarray(fpad), jnp.int32(i), self.binom, self.adj_b,
-                nmax=self.nmax, chunk=self.chunk, bcap=self.bcap,
-                pallas=self.pallas)
+            ctx["pend"].append(kf(jnp.asarray(fpad), jnp.int32(i),
+                                  self.binom, self.adj_b))
+            self._filter_drain(ctx, PEND_WINDOW)
+        self.timings["filter"] = (self.timings.get("filter", 0.0)
+                                  + time.perf_counter() - t0)
+        return ctx
+
+    def _filter_drain(self, ctx: dict, limit: int) -> None:
+        """Fetch + compact pending filter chunks down to ``limit``."""
+        pend, per_q = ctx["pend"], ctx["per_q"]
+        while len(pend) > limit:
+            S, conn, qid = pend.popleft()
             c = np.asarray(conn)
             if c.any():
                 Sc = np.asarray(S)[c]
                 qc = np.asarray(qid)[c]
                 for q in np.unique(qc):
                     per_q[q].append(Sc[qc == q])
+
+    def _filter_collect(self, ctx: dict) -> list[np.ndarray]:
+        """Drain the remaining filter chunks and build the per-query set
+        lists (in pipelined mode this runs under device evaluate of the
+        previous level)."""
+        t0 = time.perf_counter()
+        self._filter_drain(ctx, 0)
         sets_by_q = [np.concatenate(l) if l else np.zeros(0, np.int32)
-                     for l in per_q]
+                     for l in ctx["per_q"]]
         self.timings["filter"] = (self.timings.get("filter", 0.0)
                                   + time.perf_counter() - t0)
         return sets_by_q
@@ -446,9 +583,11 @@ class BatchEngine:
             self._scatter(np.concatenate(idx_l), cost=np.concatenate(cost_l),
                           left=np.concatenate(left_l))
 
-    def _eval_level(self, i: int, sets_by_q: list[np.ndarray]) -> None:
+    def _eval_dispatch(self, i: int, sets_by_q: list[np.ndarray]):
         """Segmented lane spaces (DPSUB ``sets x 2^i``, tree ``sets x m``):
-        lanes of query q are contiguous, ``ns_q * mult_q`` long."""
+        lanes of query q are contiguous, ``ns_q * mult_q`` long.  Dispatches
+        every chunk and returns the level context with pending device
+        results; ``_eval_finalize`` fetches, merges and commits."""
         ns = np.array([len(s) for s in sets_by_q], np.int64)
         if self.algorithm == "mpdp_tree":
             mult = np.array([g.m for g in self.graphs], np.int64)
@@ -459,13 +598,10 @@ class BatchEngine:
         np.cumsum(lanes, out=eoff[1:])
         total = int(eoff[-1])
         if total == 0:
-            return
+            return None
         t0 = time.perf_counter()
         soff = np.zeros(self.B + 1, np.int64)
         np.cumsum(ns, out=soff[1:])
-        total_sets = int(soff[-1])
-        best_cost = np.full(total_sets, INF, np.float32)
-        best_left = np.zeros(total_sets, np.int32)
         loff = np.zeros(self.bcap, np.int64)
         for q in range(self.B):
             loff[q] = (q << self.nmax) + self._level_off[q][i]
@@ -474,8 +610,19 @@ class BatchEngine:
         spad[: self.B] = soff[: self.B]
         soff_d = jnp.asarray(spad.astype(np.int32))
         nseg = self.chunk + 2
-        ev_acc = np.zeros(self.B, np.int64)
-        ccp_acc = np.zeros(self.B, np.int64)
+        if self.algorithm == "mpdp_tree":
+            kernel = self._jit("btree", _beval_tree_chunk, nmax=self.nmax,
+                               chunk=self.chunk, nseg=nseg, bcap=self.bcap,
+                               pallas=self.pallas)
+        else:
+            kernel = self._jit("bdpsub", _beval_dpsub_chunk, nmax=self.nmax,
+                               chunk=self.chunk, nseg=nseg, bcap=self.bcap,
+                               pallas=self.pallas)
+        ctx = {"pend": deque(),
+               "best_cost": np.full(int(soff[-1]), INF, np.float32),
+               "best_left": np.zeros(int(soff[-1]), np.int32),
+               "ev": np.zeros(self.B, np.int64),
+               "ccp": np.zeros(self.B, np.int64)}
         for lane0 in range(0, total, self.chunk):
             el = np.clip(eoff - lane0, -_CLIP, _CLIP)
             epad = np.full(self.bcap + 1, el[self.B], np.int32)
@@ -484,27 +631,43 @@ class BatchEngine:
             p0 = min(max(p0, 0), self.B - 1)
             seg0 = int(soff[p0] + (lane0 - eoff[p0]) // mult[p0])
             if self.algorithm == "mpdp_tree":
-                sc, sl, ev_q, ccp_q = _beval_tree_chunk(
-                    self.all_sets, jnp.asarray(epad), loff_d, soff_d,
-                    jnp.int32(seg0), self.m_b, self.adj_b,
-                    self.emu_b, self.emv_b, self.memo_cost, self.memo_rows,
-                    nmax=self.nmax, chunk=self.chunk, nseg=nseg,
-                    bcap=self.bcap, pallas=self.pallas)
+                out = kernel(self.all_sets, jnp.asarray(epad), loff_d, soff_d,
+                             jnp.int32(seg0), self.m_b, self.adj_b,
+                             self.emu_b, self.emv_b, self.memo_cost,
+                             self.memo_rows)
             else:
-                sc, sl, ev_q, ccp_q = _beval_dpsub_chunk(
-                    self.all_sets, jnp.asarray(epad), loff_d, soff_d,
-                    jnp.int32(seg0), jnp.int32(i), self.adj_b,
-                    self.memo_cost, self.memo_rows,
-                    nmax=self.nmax, chunk=self.chunk, nseg=nseg,
-                    bcap=self.bcap, pallas=self.pallas)
-            ev_acc += np.asarray(ev_q)[: self.B]
-            ccp_acc += np.asarray(ccp_q)[: self.B]
-            _merge_best(best_cost, best_left, seg0,
+                out = kernel(self.all_sets, jnp.asarray(epad), loff_d, soff_d,
+                             jnp.int32(seg0), jnp.int32(i), self.adj_b,
+                             self.memo_cost, self.memo_rows)
+            ctx["pend"].append((seg0, out))
+            self._eval_drain(ctx, PEND_WINDOW)
+        self.timings["evaluate"] = (self.timings.get("evaluate", 0.0)
+                                    + time.perf_counter() - t0)
+        return ctx
+
+    def _eval_drain(self, ctx: dict, limit: int) -> None:
+        """Fetch pending chunk results down to ``limit``, folding them into
+        the level's best arrays (cost min, max-left tie-break — chunk order,
+        identical to the synchronous path)."""
+        pend = ctx["pend"]
+        while len(pend) > limit:
+            seg0, (sc, sl, ev_q, ccp_q) = pend.popleft()
+            ctx["ev"] += np.asarray(ev_q)[: self.B]
+            ctx["ccp"] += np.asarray(ccp_q)[: self.B]
+            _merge_best(ctx["best_cost"], ctx["best_left"], seg0,
                         np.asarray(sc), np.asarray(sl))
+
+    def _eval_finalize(self, i: int, sets_by_q: list[np.ndarray], ctx) -> None:
+        """Drain the level's remaining chunk results and commit the level's
+        best (cost, left) per set to the memo."""
+        if ctx is None:
+            return
+        t0 = time.perf_counter()
+        self._eval_drain(ctx, 0)
         for q in range(self.B):
-            self.counters[q].evaluated += int(ev_acc[q])
-            self.counters[q].ccp += int(ccp_acc[q])
-        self._commit_best(sets_by_q, best_cost, best_left)
+            self.counters[q].evaluated += int(ctx["ev"][q])
+            self.counters[q].ccp += int(ctx["ccp"][q])
+        self._commit_best(sets_by_q, ctx["best_cost"], ctx["best_left"])
         self.timings["evaluate"] = (self.timings.get("evaluate", 0.0)
                                     + time.perf_counter() - t0)
 
@@ -536,22 +699,24 @@ class BatchEngine:
         return (np.concatenate(ps_l), np.concatenate(pb_l),
                 np.concatenate(pq_l), np.concatenate(pk_l))
 
-    def _eval_level_general(self, i: int, sets_by_q: list[np.ndarray]) -> None:
-        ps, pb, pq, pk = self._pairs_level(sets_by_q)
+    def _eval_general_dispatch(self, i: int, sets_by_q: list[np.ndarray],
+                               pairs):
+        """Dispatch the level's block prefix-sum chunks over the fused pair
+        arrays from ``_pairs_level`` (phase A, host).  No host sync."""
+        ps, pb, pq, pk = pairs
         if not len(ps):
-            return
+            return None
         t0 = time.perf_counter()
         sizes = bs.np_popcount(pb).astype(np.int64)
         lane_sz = (np.int64(1) << sizes).astype(np.int64)
         offs = np.zeros(len(ps) + 1, np.int64)
         np.cumsum(lane_sz, out=offs[1:])
         total = int(offs[-1])
-        total_sets = sum(len(s) for s in sets_by_q)
-        best_cost = np.full(total_sets, INF, np.float32)
-        best_left = np.zeros(total_sets, np.int32)
-        ev_acc = np.zeros(self.B, np.int64)
-        ccp_acc = np.zeros(self.B, np.int64)
-        k_all, c_all, l_all = [], [], []
+        ctx = {"pend": deque(), "pk": pk,
+               "total_sets": sum(len(s) for s in sets_by_q),
+               "ev": np.zeros(self.B, np.int64),
+               "ccp": np.zeros(self.B, np.int64),
+               "k": [], "c": [], "l": []}
         for lane0 in range(0, total, self.chunk):
             lane1 = min(lane0 + self.chunk, total)
             p0 = int(np.searchsorted(offs, lane0, side="right")) - 1
@@ -567,44 +732,62 @@ class BatchEngine:
             pql[:npair] = pq[p0:p1]
             ofl[:npair] = offs[p0:p1] - lane0
             ofl = np.clip(ofl, -_CLIP, _CLIP).astype(np.int32)
-            sc, sl, ev_q, ccp_q = _beval_general_chunk(
-                jnp.asarray(psl), jnp.asarray(pbl), jnp.asarray(pql),
-                jnp.asarray(ofl), jnp.int32(npair), jnp.int32(lane1 - lane0),
-                self.adj_b, self.memo_cost, self.memo_rows,
-                nmax=self.nmax, chunk=self.chunk, pcap=pcap, bcap=self.bcap,
-                pallas=self.pallas)
-            ev_acc += np.asarray(ev_q)[: self.B]
-            ccp_acc += np.asarray(ccp_q)[: self.B]
+            kernel = self._jit("bgeneral", _beval_general_chunk,
+                               nmax=self.nmax, chunk=self.chunk, pcap=pcap,
+                               bcap=self.bcap, pallas=self.pallas)
+            out = kernel(jnp.asarray(psl), jnp.asarray(pbl), jnp.asarray(pql),
+                         jnp.asarray(ofl), jnp.int32(npair),
+                         jnp.int32(lane1 - lane0), self.adj_b,
+                         self.memo_cost, self.memo_rows)
+            ctx["pend"].append((p0, npair, out))
+            self._eval_general_drain(ctx, PEND_WINDOW)
+        self.timings["evaluate"] = (self.timings.get("evaluate", 0.0)
+                                    + time.perf_counter() - t0)
+        return ctx
+
+    def _eval_general_drain(self, ctx: dict, limit: int) -> None:
+        """Fetch pending pair chunks down to ``limit``, collecting finite
+        per-pair candidates for the scattered merge."""
+        pend, pk = ctx["pend"], ctx["pk"]
+        while len(pend) > limit:
+            p0, npair, (sc, sl, ev_q, ccp_q) = pend.popleft()
+            ctx["ev"] += np.asarray(ev_q)[: self.B]
+            ctx["ccp"] += np.asarray(ccp_q)[: self.B]
             scn = np.asarray(sc)[:npair]
             fin = np.isfinite(scn)
-            k_all.append(pk[p0:p1][fin])
-            c_all.append(scn[fin])
-            l_all.append(np.asarray(sl)[:npair][fin])
+            ctx["k"].append(pk[p0: p0 + npair][fin])
+            ctx["c"].append(scn[fin])
+            ctx["l"].append(np.asarray(sl)[:npair][fin])
+
+    def _eval_general_finalize(self, i: int, sets_by_q: list[np.ndarray],
+                               ctx) -> None:
+        if ctx is None:
+            return
+        t0 = time.perf_counter()
+        self._eval_general_drain(ctx, 0)
+        best_cost = np.full(ctx["total_sets"], INF, np.float32)
+        best_left = np.zeros(ctx["total_sets"], np.int32)
         for q in range(self.B):
-            self.counters[q].evaluated += int(ev_acc[q])
-            self.counters[q].ccp += int(ccp_acc[q])
-        if k_all:
-            _merge_scattered(best_cost, best_left, np.concatenate(k_all),
-                             np.concatenate(c_all), np.concatenate(l_all))
+            self.counters[q].evaluated += int(ctx["ev"][q])
+            self.counters[q].ccp += int(ctx["ccp"][q])
+        if ctx["k"]:
+            _merge_scattered(best_cost, best_left, np.concatenate(ctx["k"]),
+                             np.concatenate(ctx["c"]),
+                             np.concatenate(ctx["l"]))
         self._commit_best(sets_by_q, best_cost, best_left)
         self.timings["evaluate"] = (self.timings.get("evaluate", 0.0)
                                     + time.perf_counter() - t0)
 
     # ------------------------------------------------------------ driver ---
-    def run(self) -> list[OptimizeResult]:
+    def collect(self) -> list[OptimizeResult]:
+        """Fetch the memo and extract one ``OptimizeResult`` per query.  In
+        the streaming service this host-only finalize is deferred so it
+        overlaps the next flight's device work."""
         t0 = time.perf_counter()
-        max_n = max(g.n for g in self.graphs)
-        for i in range(2, max_n + 1):
-            sets_by_q = self._filter_level(i)
-            self._register_level(i, sets_by_q)
-            if self.algorithm == "mpdp_general":
-                self._eval_level_general(i, sets_by_q)
-            else:
-                self._eval_level(i, sets_by_q)
-        wall = time.perf_counter() - t0
         cost_all = np.asarray(self.memo_cost)
         left_all = np.asarray(self.memo_left)
         out = []
+        wall = self._wall + time.perf_counter() - t0
         for q, g in enumerate(self.graphs):
             base = q << self.nmax
             cost = float(cost_all[base + g.full_set])
@@ -617,6 +800,7 @@ class BatchEngine:
             r.timings = dict(self.timings)
             out.append(r)
         return out
+
 
 
 # ============================================================ public entry ==
@@ -643,10 +827,88 @@ def _lane_space(g: JoinGraph, algorithm: str) -> str | None:
     return None
 
 
+# Stream-admission building blocks, shared verbatim by ``optimize_many``
+# and the streaming service (``core.service``) — the service's bit-identity
+# with ``optimize_many`` rests on both using exactly these steps.
+
+def probe_stream(graphs, results, cache, algorithm: str) -> list[int]:
+    """Upfront cache probe + single-relation short-circuit: fills hits and
+    leaf plans into ``results`` (in place), returns the stream indices that
+    still need an engine."""
+    pending: list[int] = []
+    for qi, g in enumerate(graphs):
+        if results[qi] is not None:
+            continue
+        if cache is not None:
+            hit = cache.get(g)
+            if hit is not None:
+                results[qi] = hit
+                continue
+        if g.n == 1:
+            p = leaf_plan(0, g)
+            results[qi] = OptimizeResult(plan=p, cost=p.cost,
+                                         counters=Counters(),
+                                         algorithm=algorithm, levels=1)
+            continue
+        pending.append(qi)
+    return pending
+
+
+def dedup_pending(graphs, pending: list[int], cache):
+    """Intra-stream dedup (caching only): canonically-equal queries compute
+    once; duplicates are deferred and resolve as cache hits after their
+    representative lands.  Returns ``(kept, deferred, dup_rep)``."""
+    if cache is None:
+        return pending, [], {}
+    from .plancache import canonical_signature
+    rep_of: dict = {}
+    kept: list[int] = []
+    deferred: list[int] = []
+    dup_rep: dict[int, int] = {}          # duplicate index -> representative
+    for qi in pending:
+        key, _ = canonical_signature(graphs[qi])
+        if key in rep_of:
+            deferred.append(qi)
+            dup_rep[qi] = rep_of[key]
+        else:
+            rep_of[key] = qi
+            kept.append(qi)
+    return kept, deferred, dup_rep
+
+
+def bucket_pending(graphs, pending: list[int], algorithm: str):
+    """Admission grouping: (NMAX bucket, lane space) -> stream indices.
+    Queries no batched space can serve (forced ``mpdp_tree`` on a cyclic
+    graph, ``nmax_bucket(n) > NMAX_BATCH``) come back in the solo list."""
+    buckets: dict[tuple[int, str], list[int]] = {}
+    solo: list[int] = []
+    for qi in pending:
+        b = bs.nmax_bucket(graphs[qi].n)
+        space = _lane_space(graphs[qi], algorithm)
+        if space is not None and b <= NMAX_BATCH:
+            buckets.setdefault((b, space), []).append(qi)
+        else:
+            solo.append(qi)
+    return buckets, solo
+
+
+def resolve_deferred(graphs, results, cache, deferred, dup_rep) -> None:
+    """Resolve deduped duplicates as cache hits (re-inserting the
+    representative when a tiny LRU evicted it mid-stream)."""
+    for qi in deferred:
+        hit = cache.get(graphs[qi])
+        if hit is None:
+            rep = dup_rep[qi]
+            cache.put(graphs[rep], results[rep])
+            hit = cache.get(graphs[qi])
+        results[qi] = hit
+
+
 def optimize_many(graphs: list[JoinGraph], algorithm: str = "auto",
                   chunk: int = CHUNK, cache=None,
                   max_batch: int = MAX_BATCH, devices=None,
-                  mesh=None) -> list[OptimizeResult]:
+                  mesh=None, pipeline: bool | None = None
+                  ) -> list[OptimizeResult]:
     """Optimize a stream of queries, batching compatible ones per device pass.
 
     * ``cache``: optional ``plancache.PlanCache`` consulted first; computed
@@ -663,6 +925,9 @@ def optimize_many(graphs: list[JoinGraph], algorithm: str = "auto",
       exist), ``mesh=`` supplies one.  Both default to the single-device
       in-process ``BatchEngine``; costs/plans are bit-identical either way,
       a 1-device mesh being the degenerate case.
+    * ``pipeline``: run the batched engines pipelined (host compaction of
+      level i+1 under device evaluate of level i; bit-identical results).
+      ``None`` defers to the ``REPRO_PIPELINE`` env flag.
     * queries with ``nmax_bucket(n) > NMAX_BATCH`` (memo would not fit the
       stacked layout) and single-relation queries are handled per query.
 
@@ -674,48 +939,9 @@ def optimize_many(graphs: list[JoinGraph], algorithm: str = "auto",
         from . import shard as _shard
         shard_mesh = _shard.batch_mesh(mesh if mesh is not None else devices)
     results: list[OptimizeResult | None] = [None] * len(graphs)
-    pending: list[int] = []
-    for qi, g in enumerate(graphs):
-        if cache is not None:
-            hit = cache.get(g)
-            if hit is not None:
-                results[qi] = hit
-                continue
-        if g.n == 1:
-            p = leaf_plan(0, g)
-            results[qi] = OptimizeResult(plan=p, cost=p.cost,
-                                         counters=Counters(),
-                                         algorithm=algorithm, levels=1)
-            continue
-        pending.append(qi)
-
-    # intra-stream dedup (caching only): canonically-equal queries compute
-    # once; the duplicates resolve as cache hits after the batch lands
-    deferred: list[int] = []
-    dup_rep: dict[int, int] = {}          # duplicate index -> representative
-    if cache is not None:
-        from .plancache import canonical_signature
-        rep_of: dict = {}
-        kept = []
-        for qi in pending:
-            key, _ = canonical_signature(graphs[qi])
-            if key in rep_of:
-                deferred.append(qi)
-                dup_rep[qi] = rep_of[key]
-            else:
-                rep_of[key] = qi
-                kept.append(qi)
-        pending = kept
-
-    buckets: dict[tuple[int, str], list[int]] = {}
-    solo: list[int] = []
-    for qi in pending:
-        b = bs.nmax_bucket(graphs[qi].n)
-        space = _lane_space(graphs[qi], algorithm)
-        if space is not None and b <= NMAX_BATCH:
-            buckets.setdefault((b, space), []).append(qi)
-        else:
-            solo.append(qi)
+    pending = probe_stream(graphs, results, cache, algorithm)
+    pending, deferred, dup_rep = dedup_pending(graphs, pending, cache)
+    buckets, solo = bucket_pending(graphs, pending, algorithm)
 
     # sub-batch step: per-shard sub-batches stay capped at max_batch
     step = max_batch if shard_mesh is None else \
@@ -725,11 +951,11 @@ def optimize_many(graphs: list[JoinGraph], algorithm: str = "auto",
             group = idxs[s0: s0 + step]
             if shard_mesh is None:
                 eng = BatchEngine([graphs[qi] for qi in group], chunk=chunk,
-                                  algorithm=space)
+                                  algorithm=space, pipeline=pipeline)
             else:
                 eng = _shard.ShardedBatchEngine(
                     [graphs[qi] for qi in group], shard_mesh, chunk=chunk,
-                    algorithm=space)
+                    algorithm=space, pipeline=pipeline)
             for qi, r in zip(group, eng.run()):
                 results[qi] = r
                 if cache is not None:
@@ -739,13 +965,5 @@ def optimize_many(graphs: list[JoinGraph], algorithm: str = "auto",
         results[qi] = r
         if cache is not None:
             cache.put(graphs[qi], r)
-    for qi in deferred:
-        hit = cache.get(graphs[qi])
-        if hit is None:
-            # a tiny LRU can evict the representative's entry before the
-            # stream finishes; re-insert it and resolve the duplicate
-            rep = dup_rep[qi]
-            cache.put(graphs[rep], results[rep])
-            hit = cache.get(graphs[qi])
-        results[qi] = hit
+    resolve_deferred(graphs, results, cache, deferred, dup_rep)
     return results

@@ -1,0 +1,112 @@
+"""Executable cache + compile accounting for the batched DP kernels.
+
+``jax.jit`` already memoizes compiled executables per (static-args, input
+signature) — but it does so *per jitted callable object*, silently, and with
+no way to ask "did this call retrace?".  The batched engines care deeply:
+every (space, nmax, bcap, chunk, pallas) bucket shape is supposed to compile
+**exactly once** per process and then be hit by every later engine instance —
+IDP2/UnionDP rounds, query-service flights, repeated benches.  A silent
+retrace (a weak-type leak, a drifting static, a new wrapper object per call)
+costs hundreds of milliseconds on the hot path and is invisible without
+accounting.
+
+This module makes the contract explicit and observable:
+
+  * ``EXEC.jit(name, impl, donate=(), **statics)`` returns a jitted callable
+    cached under the key ``(name, sorted statics)``.  The same key always
+    returns the *same* wrapper object, so jax's executable cache is shared by
+    every engine instance in the process.
+  * the wrapper's Python body runs only when jax traces it, so incrementing a
+    counter there counts **traces** (= compiles) exactly, independent of jax
+    version — no ``jax.monitoring`` hooks needed.
+  * ``EXEC.snapshot()`` / ``EXEC.total()`` expose the counts;
+    ``BatchEngine.stats`` / ``ShardedBatchEngine.stats`` surface the keys a
+    given engine touched.  ``benchmarks/bench_batch.py --pipeline`` gates on
+    the delta being zero across timed repeats, and
+    ``tests/test_pipeline.py`` asserts one compile per key.
+
+Keys deliberately exclude anything identity-based (no function objects, no
+Mesh instances): two engines over equal bucket shapes share a key even if
+every surrounding Python object differs.
+"""
+from __future__ import annotations
+
+import threading
+
+import jax
+
+
+def _pretty(key: tuple) -> str:
+    name, *items = key
+    return f"{name}[" + ",".join(f"{k}={v}" for k, v in items) + "]"
+
+
+class ExecutableCache:
+    """Process-wide cache of jitted kernel entry points with trace counts."""
+
+    def __init__(self):
+        self._fns: dict[tuple, object] = {}
+        self._compiles: dict[tuple, int] = {}
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------- keys ----
+    @staticmethod
+    def key(name: str, statics: dict) -> tuple:
+        return (name,) + tuple(sorted(statics.items()))
+
+    @staticmethod
+    def pretty(key: tuple) -> str:
+        return _pretty(key)
+
+    # ------------------------------------------------------- accounting ----
+    def record(self, key: tuple) -> None:
+        """Count one trace of ``key`` (called from inside a jit trace)."""
+        with self._lock:
+            self._compiles[key] = self._compiles.get(key, 0) + 1
+
+    def compiles(self, key: tuple) -> int:
+        return self._compiles.get(key, 0)
+
+    def snapshot(self) -> dict[tuple, int]:
+        with self._lock:
+            return dict(self._compiles)
+
+    def total(self) -> int:
+        with self._lock:
+            return sum(self._compiles.values())
+
+    def stats_for(self, keys, *, pipeline: bool | None = None) -> dict:
+        """Per-engine stats view: compile counts for the engine's keys plus
+        the number of *re*-traces (every trace beyond a key's first)."""
+        snap = self.snapshot()
+        compiles = {self.pretty(k): snap.get(k, 0) for k in sorted(keys)}
+        out = {"compiles": compiles,
+               "retraces": sum(max(0, c - 1) for c in compiles.values())}
+        if pipeline is not None:
+            out["pipeline"] = pipeline
+        return out
+
+    # ------------------------------------------------------------ entry ----
+    def jit(self, name: str, impl, **statics):
+        """Jitted callable for ``impl`` with ``statics`` baked in, cached
+        under ``(name, statics)`` — the exact key ``stats_for`` reports on,
+        so accounting can never diverge from the wrapper cache.  Returns
+        the same wrapper for equal keys, so repeated bucket shapes hit
+        jax's executable cache with zero retraces — and any violation shows
+        up in the trace counter.  (Donating entry points — the memo
+        scatters — keep their own jits; see ``engine._scatter_f32`` and
+        ``shard._sharded``.)"""
+        key = self.key(name, statics)
+        with self._lock:
+            fn = self._fns.get(key)
+            if fn is None:
+                def traced(*args, _impl=impl, _key=key, _st=dict(statics)):
+                    self.record(_key)          # runs at trace time only
+                    return _impl(*args, **_st)
+                traced.__name__ = name
+                fn = jax.jit(traced)
+                self._fns[key] = fn
+        return fn
+
+
+EXEC = ExecutableCache()

@@ -22,7 +22,10 @@ differently under different input labelings.  That only manifests as a cache
 """
 from __future__ import annotations
 
+import ast
 import dataclasses
+import os
+import zlib
 from collections import OrderedDict
 
 from .plan import OptimizeResult, Plan, cost_plan
@@ -30,9 +33,24 @@ from .plan import OptimizeResult, Plan, cost_plan
 _QUANT = 4096.0          # log2-stat quantization: 1/4096 of a doubling
 _REFINE_ROUNDS = 3
 
+# Persistence format version.  Bumped whenever the canonical-signature
+# derivation changes shape; files written by a different version (or a
+# different quantization epsilon) are *wholly* invalidated on load — a key
+# computed under a stale epsilon must never serve a hit.
+CACHE_FILE_VERSION = 1
+
 
 def _quantize(x: float) -> int:
     return int(round(float(x) * _QUANT))
+
+
+def _stable_hash(x) -> int:
+    """Process-independent hash for the WL refinement.  Python's ``hash``
+    salts str/bytes per process (PYTHONHASHSEED), which would make the
+    canonical vertex order — and therefore every persisted cache key —
+    differ across service runs; CRC32 over the repr of the (pure int/tuple)
+    invariant is deterministic everywhere."""
+    return zlib.crc32(repr(x).encode())
 
 
 def canonical_signature(g) -> tuple[tuple, list[int]]:
@@ -52,10 +70,12 @@ def canonical_signature(g) -> tuple[tuple, list[int]]:
 
     # WL refinement: vertex invariant <- hash(own stats, sorted multiset of
     # (edge stat, neighbour invariant)).  Stats-seeded, so generic queries
-    # separate in one or two rounds.
-    inv = [hash(("card", c)) for c in qcard]
+    # separate in one or two rounds.  The hash must be process-independent
+    # (persisted caches replay keys across service runs).
+    inv = [_stable_hash(("card", c)) for c in qcard]
     for _ in range(_REFINE_ROUNDS):
-        inv = [hash((inv[v], tuple(sorted((s, inv[u]) for s, u in nbrs[v]))))
+        inv = [_stable_hash(
+                   (inv[v], tuple(sorted((s, inv[u]) for s, u in nbrs[v]))))
                for v in range(n)]
 
     order = sorted(range(n), key=lambda v: (inv[v], v))
@@ -71,6 +91,24 @@ def canonical_signature(g) -> tuple[tuple, list[int]]:
            tuple(qcard[orig] for orig in order),
            tuple(s for _, s in edge_rows))
     return key, perm
+
+
+def _encode_plan(p: Plan):
+    """Canonical plan shape -> pure-literal nested tuples (leaf bitmaps at
+    the leaves); costs/rows are zero on canonical plans, so shape is all
+    there is to persist."""
+    if p.is_leaf:
+        return p.rel_set
+    return (_encode_plan(p.left), _encode_plan(p.right))
+
+
+def _decode_plan(e) -> Plan:
+    if isinstance(e, int):
+        return Plan(rel_set=e, cost=0.0, rows_log2=0.0)
+    l, r = e
+    lp, rp = _decode_plan(l), _decode_plan(r)
+    return Plan(rel_set=lp.rel_set | rp.rel_set, cost=0.0, rows_log2=0.0,
+                left=lp, right=rp)
 
 
 def _relabel_plan(p: Plan, vmap: dict[int, int]) -> Plan:
@@ -103,6 +141,7 @@ class PlanCache:
     def __init__(self, max_entries: int = 4096):
         self.max_entries = max_entries
         self.stats = CacheStats()
+        self.stale_load = False   # True when load() rejected a stale file
         self._d: OrderedDict[tuple, tuple[Plan, str]] = OrderedDict()
 
     def __len__(self) -> int:
@@ -147,3 +186,55 @@ class PlanCache:
         while len(self._d) > self.max_entries:
             self._d.popitem(last=False)
             self.stats.evictions += 1
+
+    # -------------------------------------------------------- persistence --
+    def save(self, path: str) -> None:
+        """Persist the cache (atomic rename).  The header stamps the
+        persistence format version *and* the canonical-signature
+        quantization parameters, so a file written under a different stats
+        epsilon self-invalidates on load instead of serving wrong-key hits.
+
+        The on-disk format is a Python literal (``repr`` of pure
+        int/float/str/tuple structures, parsed back with
+        ``ast.literal_eval``) — **not** pickle, so loading a shared or
+        tampered ``--cache-file`` can never execute code.  Canonical plan
+        shapes serialize as nested (left, right) tuples of leaf bitmaps;
+        costs are re-derived on the probing graph at hit time anyway.
+        """
+        blob = {"header": {"version": CACHE_FILE_VERSION, "quant": _QUANT,
+                           "refine_rounds": _REFINE_ROUNDS},
+                "entries": [(key, (_encode_plan(plan), algo))
+                            for key, (plan, algo) in self._d.items()]}
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            f.write(repr(blob))
+        os.replace(tmp, path)
+
+    @classmethod
+    def load(cls, path: str, max_entries: int = 4096) -> "PlanCache":
+        """Load a cache persisted by ``save``.
+
+        A header whose version or quantization stamp differs from this
+        build's — or an unparseable/foreign file — invalidates the whole
+        file: an **empty** cache is returned (with ``stale_load`` set) and
+        the stream re-optimizes from scratch; stale-epsilon keys must never
+        resolve to hits.  A missing file raises ``FileNotFoundError``
+        (callers decide whether that is cold start or error)."""
+        with open(path) as f:
+            text = f.read()
+        cache = cls(max_entries=max_entries)
+        try:
+            blob = ast.literal_eval(text)
+            hdr = blob["header"]
+            stale = (hdr["version"] != CACHE_FILE_VERSION
+                     or hdr["quant"] != _QUANT
+                     or hdr["refine_rounds"] != _REFINE_ROUNDS)
+            entries = blob["entries"][-max_entries:] if not stale else []
+            for key, (plan_enc, algo) in entries:
+                cache._d[key] = (_decode_plan(plan_enc), algo)
+        except (ValueError, SyntaxError, KeyError, TypeError,
+                MemoryError, RecursionError):
+            stale = True
+            cache._d.clear()
+        cache.stale_load = stale
+        return cache

@@ -1,0 +1,198 @@
+"""Streaming query service core: admission control + pipelined flights.
+
+``optimize_many`` batches a *closed* list of queries; a service sees an open
+stream and has to decide, per query, which device pass to ride.  This module
+adds that layer:
+
+  * **admission control** — incoming queries are grouped into *flights* by
+    ``(NMAX bucket, lane space)``: only queries sharing a memo shape and an
+    evaluate decode can fuse into one batched pass, so the admission key is
+    exactly the executable-cache key prefix.  Flights are capped at
+    ``max_flight`` queries per shard (the ``BatchEngine`` sub-batch bound),
+    and repeated flight shapes hit the process-wide executable cache with
+    zero retraces.
+  * **flight pipelining** — flight i's host-only finalize (memo fetch, plan
+    extraction, cache insertion, latency bookkeeping) is *deferred* until
+    after flight i+1's levels are dispatched (``run_levels``), so it
+    overlaps flight i+1's trailing device work; inside each flight the
+    engines additionally run their own level pipeline when ``pipeline`` is
+    on (host compaction of level k+1 under device evaluate of level k).
+  * **plan cache** — probed before admission (hits never spawn an engine),
+    with intra-stream dedup of canonically-equal queries, exactly like
+    ``optimize_many``; computed plans are inserted at flight finalize.
+
+Results are bit-identical to ``optimize_many`` over the same stream by
+construction: the probe/dedup/bucket stages are the *same functions*
+(``batch.probe_stream``/``dedup_pending``/``bucket_pending``/
+``resolve_deferred``), and each flight runs the same engines on the same
+sub-batches — only the finalize timing differs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from .batch import (MAX_BATCH, BatchEngine, bucket_pending, dedup_pending,
+                    probe_stream, resolve_deferred)
+from .engine import CHUNK
+from .joingraph import JoinGraph
+from .plan import OptimizeResult
+
+
+@dataclasses.dataclass
+class FlightReport:
+    """One admitted flight: its admission key, members and measured times."""
+    nmax: int
+    space: str
+    queries: list[int]             # stream indices, admission order
+    wall_s: float = 0.0            # run_levels dispatch -> finalize done
+    finalize_s: float = 0.0        # host-only finalize share (overlappable)
+
+    @property
+    def key(self) -> tuple[int, str]:
+        return (self.nmax, self.space)
+
+
+@dataclasses.dataclass
+class StreamReport:
+    """Whole-stream accounting returned next to the results."""
+    flights: list[FlightReport] = dataclasses.field(default_factory=list)
+    latency_s: list[float] = dataclasses.field(default_factory=list)
+    wall_s: float = 0.0
+    cache_hits: int = 0
+    solo: int = 0                  # queries that fell back to per-query runs
+
+    def latency_percentiles(self, ps=(50, 95, 99)) -> dict[int, float]:
+        if not self.latency_s:
+            return {p: 0.0 for p in ps}
+        xs = np.asarray(self.latency_s, np.float64)
+        return {p: float(np.percentile(xs, p)) for p in ps}
+
+
+class StreamOptimizer:
+    """Admission-controlled, flight-pipelined optimizer for query streams.
+
+    Parameters mirror ``optimize_many``; ``max_flight`` is the per-shard
+    flight size cap (multiplied by the mesh size when sharding).
+    """
+
+    def __init__(self, algorithm: str = "auto", chunk: int = CHUNK,
+                 cache=None, devices=None, mesh=None,
+                 pipeline: bool | None = None, max_flight: int = MAX_BATCH):
+        self.algorithm = algorithm
+        self.chunk = chunk
+        self.cache = cache
+        self.pipeline = pipeline
+        self.max_flight = max_flight
+        self.mesh = None
+        if mesh is not None or devices is not None:
+            from . import shard as _shard
+            self.mesh = _shard.batch_mesh(mesh if mesh is not None else devices)
+
+    # -------------------------------------------------------- admission ----
+    def admit(self, graphs: list[JoinGraph], idxs: list[int]
+              ) -> tuple[list[FlightReport], list[int]]:
+        """Group ``idxs`` into (NMAX bucket, lane space) flights — the
+        shared ``batch.bucket_pending`` grouping, split at the flight cap;
+        ungroupable queries come back as the solo list."""
+        buckets, solo = bucket_pending(graphs, idxs, self.algorithm)
+        step = self.max_flight
+        if self.mesh is not None:
+            from . import shard as _shard
+            step *= _shard.mesh_size(self.mesh)
+        flights = [FlightReport(b, space, idxs_b[s0: s0 + step])
+                   for (b, space), idxs_b in sorted(buckets.items())
+                   for s0 in range(0, len(idxs_b), step)]
+        return flights, solo
+
+    def _spawn(self, graphs: list[JoinGraph], fl: FlightReport):
+        """Build the flight's engine and dispatch its level loop."""
+        members = [graphs[qi] for qi in fl.queries]
+        if self.mesh is None:
+            eng = BatchEngine(members, chunk=self.chunk, algorithm=fl.space,
+                              pipeline=self.pipeline)
+        else:
+            from . import shard as _shard
+            eng = _shard.ShardedBatchEngine(members, self.mesh,
+                                            chunk=self.chunk,
+                                            algorithm=fl.space,
+                                            pipeline=self.pipeline)
+        eng.run_levels()
+        return eng
+
+    def _finalize(self, graphs, fl: FlightReport, eng, t_flight, t_stream,
+                  results, report) -> None:
+        """Host-only flight finalize: fetch + extract + cache insert.  Runs
+        while the *next* flight's trailing device work is still in flight."""
+        t0 = time.perf_counter()
+        for qi, r in zip(fl.queries, eng.collect()):
+            results[qi] = r
+            if self.cache is not None:
+                self.cache.put(graphs[qi], r)
+        done = time.perf_counter()
+        fl.finalize_s = done - t0
+        fl.wall_s = done - t_flight
+        for qi in fl.queries:
+            report.latency_s[qi] = done - t_stream
+        report.flights.append(fl)
+
+    # ------------------------------------------------------------ stream ---
+    def optimize_stream(self, graphs: list[JoinGraph]
+                        ) -> tuple[list[OptimizeResult], StreamReport]:
+        """Optimize the stream; returns results in stream order plus the
+        flight/latency report.  Costs are bit-identical to
+        ``optimize_many`` over the same list."""
+        from . import engine as _eng
+        t_stream = time.perf_counter()
+        report = StreamReport(latency_s=[0.0] * len(graphs))
+        results: list[OptimizeResult | None] = [None] * len(graphs)
+        # same probe/dedup stages as optimize_many (shared helpers)
+        pending = probe_stream(graphs, results, self.cache, self.algorithm)
+        for qi, r in enumerate(results):
+            if r is not None:
+                report.latency_s[qi] = time.perf_counter() - t_stream
+                if r.algorithm.startswith("cache["):
+                    report.cache_hits += 1
+        pending, deferred, dup_rep = dedup_pending(graphs, pending,
+                                                   self.cache)
+        flights, solo = self.admit(graphs, pending)
+        report.solo = len(solo)
+
+        # double-buffered flight loop: finalize of flight i happens after
+        # flight i+1's levels have been dispatched
+        prev = None                        # (flight, engine, t_flight)
+        for fl in flights:
+            t_flight = time.perf_counter()
+            eng = self._spawn(graphs, fl)
+            if prev is not None:
+                self._finalize(graphs, *prev, t_stream, results, report)
+            prev = (fl, eng, t_flight)
+        if prev is not None:
+            self._finalize(graphs, *prev, t_stream, results, report)
+
+        for qi in solo:
+            r = _eng.optimize(graphs[qi], self.algorithm, chunk=self.chunk)
+            results[qi] = r
+            report.latency_s[qi] = time.perf_counter() - t_stream
+            if self.cache is not None:
+                self.cache.put(graphs[qi], r)
+        resolve_deferred(graphs, results, self.cache, deferred, dup_rep)
+        for qi in deferred:
+            report.latency_s[qi] = time.perf_counter() - t_stream
+            report.cache_hits += 1
+        report.wall_s = time.perf_counter() - t_stream
+        return results, report
+
+
+def optimize_stream(graphs: list[JoinGraph], algorithm: str = "auto",
+                    chunk: int = CHUNK, cache=None, devices=None, mesh=None,
+                    pipeline: bool | None = None,
+                    max_flight: int = MAX_BATCH
+                    ) -> tuple[list[OptimizeResult], StreamReport]:
+    """One-shot convenience wrapper around ``StreamOptimizer``."""
+    opt = StreamOptimizer(algorithm=algorithm, chunk=chunk, cache=cache,
+                          devices=devices, mesh=mesh, pipeline=pipeline,
+                          max_flight=max_flight)
+    return opt.optimize_stream(graphs)

@@ -31,6 +31,14 @@ reductions (exact f32 ``segment_min`` + max-left tie-break) are associative,
 so neither the round-robin partition nor the inert padding can perturb a
 real query's result.  The 1-device mesh is the degenerate case.
 
+``pipeline=True`` (or ``REPRO_PIPELINE=1``) runs the same pipelined driver
+as ``BatchEngine``: a level's fused evaluate steps are dispatched without a
+host sync while the host compacts the next level's filter output, costs its
+rows and (general space) runs phase A — per-shard numerics and merge order
+unchanged, so the bit-identity guarantee carries over verbatim.  Sharded
+kernel wrappers are trace-counted in ``exec_cache.EXEC`` (see
+``ShardedBatchEngine.stats``).
+
 CPU has one device by default; multi-device runs are emulated with
 
     XLA_FLAGS=--xla_force_host_platform_device_count=4
@@ -41,6 +49,7 @@ test session; ``benchmarks/bench_batch.py --devices N`` does it for itself).
 from __future__ import annotations
 
 import time
+from collections import deque
 from math import comb
 
 import numpy as np
@@ -52,10 +61,12 @@ from . import bitset as bs
 from . import blocks as bl
 from . import cost as cm
 from . import unrank as ur
-from .batch import (NMAX_BATCH, _CLIP, _bcap, _beval_dpsub_chunk,
-                    _beval_general_chunk, _beval_tree_chunk, _bfilter_chunk)
+from .batch import (NMAX_BATCH, PEND_WINDOW, _CLIP, _LevelLoop, _bcap,
+                    _beval_dpsub_chunk, _beval_general_chunk,
+                    _beval_tree_chunk, _bfilter_chunk)
 from .engine import (CHUNK, CYC_CAP_DEFAULT, INF, _cap, _merge_best,
-                     _merge_scattered, _use_pallas)
+                     _merge_scattered, _use_pallas, _use_pipeline)
+from .exec_cache import EXEC
 from .joingraph import JoinGraph
 from .plan import Counters, OptimizeResult, extract_plan
 
@@ -112,9 +123,18 @@ def mesh_size(mesh: Mesh) -> int:
 _WRAP_CACHE: dict = {}
 
 
-def _set_drop(buf, idx, val):
-    """Single-shard scatter body (OOB pad indices are dropped)."""
+def _set_drop(buf, idx, val, *, cap: int = 0, flat: int = 0, kind: str = ""):
+    """Single-shard scatter body (OOB pad indices are dropped).  The keyword
+    statics only disambiguate the executable-cache key — one key per
+    (pad cap, memo size, value dtype) compile signature."""
     return buf.at[idx].set(val, mode="drop")
+
+
+def _exec_key(fn, mesh: Mesh, statics: dict) -> tuple:
+    """Executable-cache accounting key for a sharded kernel: identity-free
+    (name + statics + device count), so equal bucket shapes share a key."""
+    return EXEC.key("sharded:" + fn.__name__.lstrip("_"),
+                    dict(statics, devices=int(np.prod(mesh.devices.shape))))
 
 
 def _sharded(fn, mesh: Mesh, donate: tuple = (), **statics):
@@ -122,17 +142,20 @@ def _sharded(fn, mesh: Mesh, donate: tuple = (), **statics):
 
     Every array argument and output carries a leading device axis sharded
     ``P(batch)``; the body strips it (each device's block has leading dim 1)
-    and calls ``fn`` — one of the jitted ``core.batch`` chunk kernels or the
+    and calls ``fn`` — one of the raw ``core.batch`` chunk kernels or the
     scatter body — unchanged, so per-device numerics are exactly the
     single-device ones and no collectives can appear.  Wrappers are cached
-    per (fn, mesh, statics) so each bucket shape compiles once.
+    per (fn, mesh, statics) so each bucket shape compiles once; traces are
+    counted in ``exec_cache.EXEC`` under the identity-free key.
     """
     key = (fn, mesh, donate, tuple(sorted(statics.items())))
     wrapped = _WRAP_CACHE.get(key)
     if wrapped is None:
         from ..distributed.collectives import shard_map_compat
+        ckey = _exec_key(fn, mesh, statics)
 
         def inner(*args):
+            EXEC.record(ckey)          # runs at trace time only
             out = fn(*[a[0] for a in args], **statics)
             if isinstance(out, tuple):
                 return tuple(y[None] for y in out)
@@ -154,7 +177,7 @@ def _pad_graph() -> JoinGraph:
 
 # ============================================================== host driver ==
 
-class ShardedBatchEngine:
+class ShardedBatchEngine(_LevelLoop):
     """Level-synchronous DP over a batch of queries, sharded across devices.
 
     Mirrors ``BatchEngine`` (same lane spaces, same kernels, same host
@@ -165,7 +188,8 @@ class ShardedBatchEngine:
 
     def __init__(self, graphs: list[JoinGraph], mesh: Mesh | None = None,
                  chunk: int = CHUNK, algorithm: str = "dpsub",
-                 cyc_cap: int = CYC_CAP_DEFAULT):
+                 cyc_cap: int = CYC_CAP_DEFAULT,
+                 pipeline: bool | None = None):
         if not graphs:
             raise ValueError("empty batch")
         if algorithm not in ("dpsub", "mpdp_tree", "mpdp_general"):
@@ -184,6 +208,9 @@ class ShardedBatchEngine:
         self.algorithm = algorithm
         self.cyc_cap = cyc_cap
         self.pallas = _use_pallas()        # read per engine; static jit arg
+        self.pipeline = _use_pipeline() if pipeline is None else bool(pipeline)
+        self._exec_keys: set[tuple] = set()
+        self._wall = 0.0
         self.B = len(graphs)
         npad = (-self.B) % self.D
         padded = self.graphs + [_pad_graph() for _ in range(npad)]
@@ -243,6 +270,18 @@ class ShardedBatchEngine:
         """Commit a stacked host array to the mesh, sharded over ``batch``."""
         return jax.device_put(jnp.asarray(x), self._shard1)
 
+    def _kernel(self, fn, donate: tuple = (), **statics):
+        """Sharded kernel via ``_sharded``, with the engine remembering the
+        executable-cache key so ``stats`` can report compile counts."""
+        self._exec_keys.add(_exec_key(fn, self.mesh, statics))
+        return _sharded(fn, self.mesh, donate=donate, **statics)
+
+    @property
+    def stats(self) -> dict:
+        """Executable-cache accounting for this engine's sharded kernel
+        keys (see ``BatchEngine.stats``)."""
+        return EXEC.stats_for(self._exec_keys, pipeline=self.pipeline)
+
     # ------------------------------------------------------------- memo ----
     def _init_memo(self):
         D = self.D
@@ -285,29 +324,34 @@ class ShardedBatchEngine:
         cap = _cap(max(len(x) for x in idx_by_d))
         idx = self._stack([x.astype(np.int64) for x in idx_by_d], cap,
                           np.int64, fill=self.flat).astype(jnp.int32)
-        scatter = _sharded(_set_drop, self.mesh, donate=(0,))
+        scat_f = self._kernel(_set_drop, donate=(0,), cap=cap,
+                              flat=self.flat, kind="f32")
         if cost is not None:
-            self.memo_cost = scatter(self.memo_cost, idx,
-                                     self._stack(cost, cap, np.float32))
+            self.memo_cost = scat_f(self.memo_cost, idx,
+                                    self._stack(cost, cap, np.float32))
         if rows is not None:
-            self.memo_rows = scatter(self.memo_rows, idx,
-                                     self._stack(rows, cap, np.float32))
+            self.memo_rows = scat_f(self.memo_rows, idx,
+                                    self._stack(rows, cap, np.float32))
         if left is not None:
-            self.memo_left = scatter(self.memo_left, idx,
-                                     self._stack(left, cap, np.int32))
+            scat_i = self._kernel(_set_drop, donate=(0,), cap=cap,
+                                  flat=self.flat, kind="i32")
+            self.memo_left = scat_i(self.memo_left, idx,
+                                    self._stack(left, cap, np.int32))
 
     def _set_all_sets(self, pos_by_d, sets_by_d):
         cap = _cap(max(len(x) for x in pos_by_d))
         pos = self._stack([x.astype(np.int64) for x in pos_by_d], cap,
                           np.int64, fill=self.flat).astype(jnp.int32)
-        scatter = _sharded(_set_drop, self.mesh, donate=(0,))
+        scatter = self._kernel(_set_drop, donate=(0,), cap=cap,
+                               flat=self.flat, kind="i32")
         self.all_sets = scatter(self.all_sets,
                                 pos, self._stack(sets_by_d, cap, np.int32))
 
     # ------------------------------------------------------------ filter ---
-    def _filter_level(self, i: int) -> list[list[np.ndarray]]:
-        """Connected level-i sets, per shard per query: one fused device
-        step per chunk, host compaction per shard."""
+    def _filter_dispatch(self, i: int) -> list:
+        """Dispatch level i's fused filter chunks (all D shards per step);
+        no host sync — ``_filter_collect`` fetches, so the pipelined driver
+        can overlap the compaction with in-flight device evaluate."""
         t0 = time.perf_counter()
         D, Bs, bcap = self.D, self.Bs, self.bcap
         totals = np.array([[comb(g.n, i) if g.n >= i else 0 for g in sh]
@@ -315,25 +359,42 @@ class ShardedBatchEngine:
         foff = np.zeros((D, Bs + 1), np.int64)
         np.cumsum(totals, axis=1, out=foff[:, 1:])
         total_max = int(foff[:, -1].max())
-        per_q = [[[] for _ in range(Bs)] for _ in range(D)]
-        kf = _sharded(_bfilter_chunk, self.mesh, nmax=self.nmax,
-                      chunk=self.chunk, bcap=bcap, pallas=self.pallas)
+        kf = self._kernel(_bfilter_chunk, nmax=self.nmax,
+                          chunk=self.chunk, bcap=bcap, pallas=self.pallas)
         k_arr = jnp.asarray(np.full(D, i, np.int32))
+        ctx = {"pend": deque(),
+               "per_q": [[[] for _ in range(Bs)] for _ in range(D)]}
         for lane0 in range(0, total_max, self.chunk):
             fl = np.clip(foff - lane0, -_CLIP, _CLIP)
             fpad = np.broadcast_to(fl[:, -1:], (D, bcap + 1)).astype(np.int32).copy()
             fpad[:, : Bs + 1] = fl
-            # one fused fetch: D shards' chunks land in a single host sync
-            Sn, c, qn = jax.device_get(
-                kf(jnp.asarray(fpad), k_arr, self.binom_b, self.adj_b))
-            for d in range(D):
+            ctx["pend"].append(kf(jnp.asarray(fpad), k_arr, self.binom_b,
+                                  self.adj_b))
+            self._filter_drain(ctx, PEND_WINDOW)
+        self.timings["filter"] = (self.timings.get("filter", 0.0)
+                                  + time.perf_counter() - t0)
+        return ctx
+
+    def _filter_drain(self, ctx: dict, limit: int) -> None:
+        """Fetch + compact pending filter chunks down to ``limit`` (one
+        fused ``device_get`` per chunk covers all D shards)."""
+        pend, per_q = ctx["pend"], ctx["per_q"]
+        while len(pend) > limit:
+            Sn, c, qn = jax.device_get(pend.popleft())
+            for d in range(self.D):
                 if c[d].any():
                     Sc = Sn[d][c[d]]
                     qc = qn[d][c[d]]
                     for q in np.unique(qc):
                         per_q[d][q].append(Sc[qc == q])
+
+    def _filter_collect(self, ctx: dict) -> list[list[np.ndarray]]:
+        """Drain the remaining filter chunks and build the per-shard
+        per-query set lists."""
+        t0 = time.perf_counter()
+        self._filter_drain(ctx, 0)
         sets = [[np.concatenate(l) if l else np.zeros(0, np.int32)
-                 for l in per_q[d]] for d in range(D)]
+                 for l in ctx["per_q"][d]] for d in range(self.D)]
         self.timings["filter"] = (self.timings.get("filter", 0.0)
                                   + time.perf_counter() - t0)
         return sets
@@ -403,11 +464,12 @@ class ShardedBatchEngine:
         if any(len(x) for x in idx_d):
             self._scatter(idx_d, cost=cost_d, left=left_d)
 
-    def _eval_level(self, i: int, sets) -> None:
+    def _eval_dispatch(self, i: int, sets):
         """Segmented lane spaces (DPSUB ``sets x 2^i``, tree ``sets x m``):
         each shard's lane space is chunked on the same grid a standalone
         ``BatchEngine`` would use; shorter shards run dead (all-masked)
-        chunks at the tail, whose all-INF segments merge as no-ops."""
+        chunks at the tail, whose all-INF segments merge as no-ops.
+        Dispatch only — ``_eval_finalize`` fetches, merges and commits."""
         D, Bs, bcap = self.D, self.Bs, self.bcap
         ns = np.array([[len(s) for s in sets[d]] for d in range(D)], np.int64)
         if self.algorithm == "mpdp_tree":
@@ -421,12 +483,10 @@ class ShardedBatchEngine:
         totals = eoff[:, -1]
         total_max = int(totals.max())
         if total_max == 0:
-            return
+            return None
         t0 = time.perf_counter()
         soff = np.zeros((D, Bs + 1), np.int64)
         np.cumsum(ns, axis=1, out=soff[:, 1:])
-        best_cost = [np.full(int(soff[d, -1]), INF, np.float32) for d in range(D)]
-        best_left = [np.zeros(int(soff[d, -1]), np.int32) for d in range(D)]
         loff = np.zeros((D, bcap), np.int64)
         for d in range(D):
             for q in range(Bs):
@@ -436,17 +496,22 @@ class ShardedBatchEngine:
         spad[:, :Bs] = soff[:, :Bs]
         soff_d = jnp.asarray(spad.astype(np.int32))
         nseg = self.chunk + 2
-        ev_acc = np.zeros((D, Bs), np.int64)
-        ccp_acc = np.zeros((D, Bs), np.int64)
         if self.algorithm == "mpdp_tree":
-            kernel = _sharded(_beval_tree_chunk, self.mesh, nmax=self.nmax,
-                              chunk=self.chunk, nseg=nseg, bcap=bcap,
-                              pallas=self.pallas)
+            kernel = self._kernel(_beval_tree_chunk, nmax=self.nmax,
+                                  chunk=self.chunk, nseg=nseg, bcap=bcap,
+                                  pallas=self.pallas)
         else:
-            kernel = _sharded(_beval_dpsub_chunk, self.mesh, nmax=self.nmax,
-                              chunk=self.chunk, nseg=nseg, bcap=bcap,
-                              pallas=self.pallas)
+            kernel = self._kernel(_beval_dpsub_chunk, nmax=self.nmax,
+                                  chunk=self.chunk, nseg=nseg, bcap=bcap,
+                                  pallas=self.pallas)
         i_arr = jnp.asarray(np.full(D, i, np.int32))
+        ctx = {"pend": deque(), "totals": totals,
+               "best_cost": [np.full(int(soff[d, -1]), INF, np.float32)
+                             for d in range(D)],
+               "best_left": [np.zeros(int(soff[d, -1]), np.int32)
+                             for d in range(D)],
+               "ev": np.zeros((D, Bs), np.int64),
+               "ccp": np.zeros((D, Bs), np.int64)}
         for lane0 in range(0, total_max, self.chunk):
             el = np.clip(eoff - lane0, -_CLIP, _CLIP)
             epad = np.broadcast_to(el[:, -1:], (D, bcap + 1)).astype(np.int32).copy()
@@ -458,23 +523,42 @@ class ShardedBatchEngine:
                 seg0[d] = soff[d, p0] + (lane0 - eoff[d, p0]) // mult[d, p0]
             seg0_d = jnp.asarray(np.clip(seg0, -_CLIP, _CLIP).astype(np.int32))
             if self.algorithm == "mpdp_tree":
-                sc, sl, ev_q, ccp_q = kernel(
+                out = kernel(
                     self.all_sets, jnp.asarray(epad), loff_d, soff_d, seg0_d,
                     self.m_b, self.adj_b, self.emu_b, self.emv_b,
                     self.memo_cost, self.memo_rows)
             else:
-                sc, sl, ev_q, ccp_q = kernel(
+                out = kernel(
                     self.all_sets, jnp.asarray(epad), loff_d, soff_d, seg0_d,
                     i_arr, self.adj_b, self.memo_cost, self.memo_rows)
-            scn, sln, evn, ccpn = jax.device_get((sc, sl, ev_q, ccp_q))
-            ev_acc += evn[:, :Bs]
-            ccp_acc += ccpn[:, :Bs]
-            for d in range(D):
+            ctx["pend"].append((lane0, seg0, out))
+            self._eval_drain(ctx, PEND_WINDOW)
+        self.timings["evaluate"] = (self.timings.get("evaluate", 0.0)
+                                    + time.perf_counter() - t0)
+        return ctx
+
+    def _eval_drain(self, ctx: dict, limit: int) -> None:
+        """Fetch pending fused chunk results down to ``limit``, folding them
+        into the per-shard best arrays (chunk order, as synchronous)."""
+        Bs, totals = self.Bs, ctx["totals"]
+        pend = ctx["pend"]
+        while len(pend) > limit:
+            lane0, seg0, out = pend.popleft()
+            scn, sln, evn, ccpn = jax.device_get(out)
+            ctx["ev"] += evn[:, :Bs]
+            ctx["ccp"] += ccpn[:, :Bs]
+            for d in range(self.D):
                 if lane0 < totals[d]:
-                    _merge_best(best_cost[d], best_left[d], int(seg0[d]),
-                                scn[d], sln[d])
-        self._bump_counters(ev_acc, ccp_acc)
-        self._commit_best(sets, best_cost, best_left)
+                    _merge_best(ctx["best_cost"][d], ctx["best_left"][d],
+                                int(seg0[d]), scn[d], sln[d])
+
+    def _eval_finalize(self, i: int, sets, ctx) -> None:
+        if ctx is None:
+            return
+        t0 = time.perf_counter()
+        self._eval_drain(ctx, 0)
+        self._bump_counters(ctx["ev"], ctx["ccp"])
+        self._commit_best(sets, ctx["best_cost"], ctx["best_left"])
         self.timings["evaluate"] = (self.timings.get("evaluate", 0.0)
                                     + time.perf_counter() - t0)
 
@@ -511,11 +595,12 @@ class ShardedBatchEngine:
                                   + time.perf_counter() - t0)
         return out
 
-    def _eval_level_general(self, i: int, sets) -> None:
-        D, Bs = self.D, self.Bs
-        pairs = self._pairs_level(sets)
+    def _eval_general_dispatch(self, i: int, sets, pairs):
+        """Dispatch the block prefix-sum chunks over the per-shard pair
+        arrays from ``_pairs_level`` (phase A, host); no host sync."""
+        D = self.D
         if not any(len(p[0]) for p in pairs):
-            return
+            return None
         t0 = time.perf_counter()
         offs_by_d, totals = [], np.zeros(D, np.int64)
         for d, (ps, pb, _, _) in enumerate(pairs):
@@ -525,15 +610,12 @@ class ShardedBatchEngine:
             offs_by_d.append(offs)
             totals[d] = offs[-1]
         total_max = int(totals.max())
-        best_cost = [np.full(sum(len(s) for s in sets[d]), INF, np.float32)
-                     for d in range(D)]
-        best_left = [np.zeros(sum(len(s) for s in sets[d]), np.int32)
-                     for d in range(D)]
-        ev_acc = np.zeros((D, Bs), np.int64)
-        ccp_acc = np.zeros((D, Bs), np.int64)
-        k_all = [[] for _ in range(D)]
-        c_all = [[] for _ in range(D)]
-        l_all = [[] for _ in range(D)]
+        ctx = {"pend": deque(), "pairs": pairs,
+               "ev": np.zeros((D, self.Bs), np.int64),
+               "ccp": np.zeros((D, self.Bs), np.int64),
+               "k": [[] for _ in range(D)],
+               "c": [[] for _ in range(D)],
+               "l": [[] for _ in range(D)]}
         for lane0 in range(0, total_max, self.chunk):
             p0s, npairs = np.zeros(D, np.int64), np.zeros(D, np.int64)
             for d in range(D):
@@ -560,53 +642,72 @@ class ShardedBatchEngine:
                 ofl[d, :np_d] = offs_by_d[d][p0: p0 + np_d] - lane0
                 lane_cnt[d] = min(lane0 + self.chunk, int(totals[d])) - lane0
             ofl = np.clip(ofl, -_CLIP, _CLIP).astype(np.int32)
-            kernel = _sharded(_beval_general_chunk, self.mesh, nmax=self.nmax,
-                              chunk=self.chunk, pcap=pcap, bcap=self.bcap,
-                              pallas=self.pallas)
-            sc, sl, ev_q, ccp_q = kernel(
+            kernel = self._kernel(_beval_general_chunk, nmax=self.nmax,
+                                  chunk=self.chunk, pcap=pcap, bcap=self.bcap,
+                                  pallas=self.pallas)
+            out = kernel(
                 jnp.asarray(psl), jnp.asarray(pbl), jnp.asarray(pql),
                 jnp.asarray(ofl),
                 jnp.asarray(np.maximum(npairs, 1).astype(np.int32)),
                 jnp.asarray(lane_cnt), self.adj_b, self.memo_cost,
                 self.memo_rows)
-            scn_all, sln_all, evn, ccpn = jax.device_get((sc, sl, ev_q, ccp_q))
-            ev_acc += evn[:, :Bs]
-            ccp_acc += ccpn[:, :Bs]
-            for d in range(D):
+            ctx["pend"].append((p0s, npairs, out))
+            self._eval_general_drain(ctx, PEND_WINDOW)
+        self.timings["evaluate"] = (self.timings.get("evaluate", 0.0)
+                                    + time.perf_counter() - t0)
+        return ctx
+
+    def _eval_general_drain(self, ctx: dict, limit: int) -> None:
+        """Fetch pending fused pair chunks down to ``limit``, collecting
+        finite per-pair candidates per shard for the scattered merge."""
+        Bs, pairs = self.Bs, ctx["pairs"]
+        pend = ctx["pend"]
+        while len(pend) > limit:
+            p0s, npairs, out = pend.popleft()
+            scn_all, sln_all, evn, ccpn = jax.device_get(out)
+            ctx["ev"] += evn[:, :Bs]
+            ctx["ccp"] += ccpn[:, :Bs]
+            for d in range(self.D):
                 np_d, p0 = int(npairs[d]), int(p0s[d])
                 if not np_d:
                     continue
                 scn = scn_all[d][:np_d]
                 fin = np.isfinite(scn)
-                k_all[d].append(pairs[d][3][p0: p0 + np_d][fin])
-                c_all[d].append(scn[fin])
-                l_all[d].append(sln_all[d][:np_d][fin])
-        self._bump_counters(ev_acc, ccp_acc)
+                ctx["k"][d].append(pairs[d][3][p0: p0 + np_d][fin])
+                ctx["c"][d].append(scn[fin])
+                ctx["l"][d].append(sln_all[d][:np_d][fin])
+
+    def _eval_general_finalize(self, i: int, sets, ctx) -> None:
+        if ctx is None:
+            return
+        t0 = time.perf_counter()
+        D = self.D
+        self._eval_general_drain(ctx, 0)
+        best_cost = [np.full(sum(len(s) for s in sets[d]), INF, np.float32)
+                     for d in range(D)]
+        best_left = [np.zeros(sum(len(s) for s in sets[d]), np.int32)
+                     for d in range(D)]
+        self._bump_counters(ctx["ev"], ctx["ccp"])
         for d in range(D):
-            if k_all[d]:
+            if ctx["k"][d]:
                 _merge_scattered(best_cost[d], best_left[d],
-                                 np.concatenate(k_all[d]),
-                                 np.concatenate(c_all[d]),
-                                 np.concatenate(l_all[d]))
+                                 np.concatenate(ctx["k"][d]),
+                                 np.concatenate(ctx["c"][d]),
+                                 np.concatenate(ctx["l"][d]))
         self._commit_best(sets, best_cost, best_left)
         self.timings["evaluate"] = (self.timings.get("evaluate", 0.0)
                                     + time.perf_counter() - t0)
 
     # ------------------------------------------------------------ driver ---
-    def run(self) -> list[OptimizeResult]:
+    # (run / run_levels / the pipelined rotation come from _LevelLoop)
+    def collect(self) -> list[OptimizeResult]:
+        """Fetch the stacked memo and extract per-query results (see
+        ``BatchEngine.collect``)."""
         t0 = time.perf_counter()
-        max_n = max(g.n for g in self.graphs)
-        for i in range(2, max_n + 1):
-            sets = self._filter_level(i)
-            self._register_level(i, sets)
-            if self.algorithm == "mpdp_general":
-                self._eval_level_general(i, sets)
-            else:
-                self._eval_level(i, sets)
-        wall = time.perf_counter() - t0
         cost_all = np.asarray(self.memo_cost)
         left_all = np.asarray(self.memo_left)
         out = []
+        wall = self._wall + time.perf_counter() - t0
         for qi, g in enumerate(self.graphs):
             d, s = qi % self.D, qi // self.D
             base = s << self.nmax

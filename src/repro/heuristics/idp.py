@@ -181,7 +181,8 @@ def _replace(root: _TNode, target: _TNode, leaf: _TNode) -> _TNode:
 
 def solve(g: JoinGraph, k: int = 15, subsolver: str = "mpdp",
           max_rounds: Optional[int] = None, batch: int = 4,
-          devices=None, mesh=None) -> OptimizeResult:
+          devices=None, mesh=None,
+          pipeline: bool | None = None) -> OptimizeResult:
     t0 = time.perf_counter()
     counters = Counters()
     if subsolver == "lindp":
@@ -201,9 +202,11 @@ def solve(g: JoinGraph, k: int = 15, subsolver: str = "mpdp",
             # "mpdp" routes through the per-bucket topology dispatcher:
             # acyclic subproblems get the sets x m tree lanes, cyclic ones
             # the block prefix-sum lanes (cheap spaces, identical costs);
-            # devices/mesh shard the round's batch over a 1-D device mesh
+            # devices/mesh shard the round's batch over a 1-D device mesh,
+            # pipeline overlaps its host compaction with device evaluate —
+            # repeated round shapes hit the process-wide executable cache
             rs = _e.optimize_many(jgs, algorithm=subsolver, devices=devices,
-                                  mesh=mesh)
+                                  mesh=mesh, pipeline=pipeline)
             for r in rs:
                 counters.evaluated += r.counters.evaluated
                 counters.ccp += r.counters.ccp

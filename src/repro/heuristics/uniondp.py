@@ -69,7 +69,8 @@ def _partition(ug: UnitGraph, k: int) -> list[list[int]]:
 
 
 def solve(g: JoinGraph, k: int = 15, subsolver: str = "mpdp",
-          goo_floor: bool = True, devices=None, mesh=None) -> OptimizeResult:
+          goo_floor: bool = True, devices=None, mesh=None,
+          pipeline: bool | None = None) -> OptimizeResult:
     t0 = time.perf_counter()
     counters = Counters()
     from ..core import engine as _e
@@ -77,9 +78,10 @@ def solve(g: JoinGraph, k: int = 15, subsolver: str = "mpdp",
     def batch_solve(jgs):
         """Disjoint subproblems -> one batched device pass ("mpdp" lands in
         the per-bucket tree/general lane spaces, not DPSUB; ``devices``/
-        ``mesh`` shard the round's batch across a 1-D device mesh)."""
+        ``mesh`` shard the round's batch across a 1-D device mesh,
+        ``pipeline`` overlaps host compaction with device evaluate)."""
         rs = _e.optimize_many(jgs, algorithm=subsolver, devices=devices,
-                              mesh=mesh)
+                              mesh=mesh, pipeline=pipeline)
         for r in rs:
             counters.evaluated += r.counters.evaluated
             counters.ccp += r.counters.ccp

@@ -1,0 +1,311 @@
+"""Pipelined batched DP + streaming service: differential bit-identity.
+
+The pipelined drivers (``BatchEngine``/``ShardedBatchEngine`` with
+``pipeline=True``) dispatch the same kernels on the same chunk grids as the
+synchronous path — only dispatch order changes — so everything observable
+must match bit-for-bit: costs (``==``), plan shapes, per-query lane
+counters.  This suite checks that across all three lane spaces, the vector
+and Pallas-interpret kernel variants, and 1/2/4-device emulated meshes
+(``tests/conftest.py`` forces 4 host devices), plus the streaming service's
+admission/flight layer and the executable-cache compile accounting.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import engine, service
+from repro.core.batch import BatchEngine, optimize_many
+from repro.core.exec_cache import EXEC
+from repro.core.plan import validate_plan
+from repro.core.plancache import PlanCache
+from repro.workloads import generators as gen
+from tests.helpers import rand_graph, given, settings, st
+
+NDEV = len(jax.devices())
+
+
+def needs(d):
+    return pytest.param(d, marks=pytest.mark.skipif(
+        NDEV < d, reason=f"needs {d} devices (have {NDEV}; conftest asks "
+                         "for 4 emulated CPU devices)"))
+
+
+def plan_shape(p):
+    if p.is_leaf:
+        return p.rel_set
+    return (p.rel_set, plan_shape(p.left), plan_shape(p.right))
+
+
+def tree_stream():
+    """All-acyclic mix (valid for the mpdp_tree lane space)."""
+    return [gen.chain(6, 1), gen.star(7, 2), gen.snowflake(9, 3),
+            gen.chain(4, 4), gen.musicbrainz_query(10, 5), gen.star(5, 6)]
+
+
+def mixed_stream():
+    """Chain/star/cycle/clique mix over both NMAX buckets (8 and 16)."""
+    return [gen.chain(6, 1), gen.cycle(8, 2), gen.clique(5, 3),
+            rand_graph(9, 3, 4), gen.star(7, 5), rand_graph(12, 4, 6),
+            rand_graph(4, 0, 8)]
+
+
+def small_stream():
+    """Tiny mix for the (slow) Pallas interpret-mode runs."""
+    return [gen.chain(5, 1), gen.cycle(5, 3), gen.clique(4, 4),
+            gen.star(6, 2)]
+
+
+def assert_same(graphs, a, b):
+    for g, ra, rb in zip(graphs, a, b):
+        assert ra.cost == rb.cost            # bit-identical, not approximate
+        assert plan_shape(ra.plan) == plan_shape(rb.plan)
+        assert ra.counters.evaluated == rb.counters.evaluated
+        assert ra.counters.ccp == rb.counters.ccp
+        assert ra.algorithm == rb.algorithm
+        validate_plan(ra.plan, g)
+
+
+# ===================================================== pipelined == sync ====
+
+@pytest.mark.parametrize("space", ["dpsub", "mpdp_general", "mpdp_tree"])
+def test_pipelined_bit_identical_vector(space):
+    graphs = tree_stream() if space == "mpdp_tree" else mixed_stream()
+    sync = optimize_many(graphs, algorithm=space, pipeline=False)
+    pipe = optimize_many(graphs, algorithm=space, pipeline=True)
+    assert_same(graphs, sync, pipe)
+    seq = [engine.optimize(g, space) for g in graphs]
+    assert [r.cost for r in pipe] == [r.cost for r in seq]
+
+
+@pytest.mark.parametrize("space", ["dpsub", "mpdp_general", "mpdp_tree"])
+def test_pipelined_pallas_interpret_bit_identical(space, monkeypatch):
+    graphs = [g for g in small_stream() if space != "mpdp_tree"
+              or g.is_tree()]
+    monkeypatch.setenv("REPRO_PALLAS", "0")
+    sync = optimize_many(graphs, algorithm=space, pipeline=False)
+    monkeypatch.setenv("REPRO_PALLAS", "1")
+    pipe = optimize_many(graphs, algorithm=space, pipeline=True)
+    assert_same(graphs, sync, pipe)
+
+
+@pytest.mark.parametrize("devices", [needs(1), needs(2), needs(4)])
+@pytest.mark.parametrize("space", ["dpsub", "mpdp_general"])
+def test_pipelined_sharded_bit_identical(space, devices):
+    graphs = mixed_stream()
+    sync = optimize_many(graphs, algorithm=space, pipeline=False,
+                         devices=devices)
+    pipe = optimize_many(graphs, algorithm=space, pipeline=True,
+                         devices=devices)
+    assert_same(graphs, sync, pipe)
+    base = optimize_many(graphs, algorithm=space, pipeline=True)
+    assert [r.cost for r in pipe] == [r.cost for r in base]
+
+
+@pytest.mark.parametrize("devices", [needs(4)])
+def test_pipelined_sharded_tree_bit_identical(devices):
+    graphs = tree_stream()
+    sync = optimize_many(graphs, algorithm="mpdp_tree", pipeline=False,
+                         devices=devices)
+    pipe = optimize_many(graphs, algorithm="mpdp_tree", pipeline=True,
+                         devices=devices)
+    assert_same(graphs, sync, pipe)
+
+
+def test_env_knob_defaults(monkeypatch):
+    g = [gen.chain(5, 1)]
+    monkeypatch.delenv("REPRO_PIPELINE", raising=False)
+    assert BatchEngine(g).pipeline is False
+    monkeypatch.setenv("REPRO_PIPELINE", "1")
+    assert BatchEngine(g).pipeline is True
+    # explicit kwarg beats the env flag
+    assert BatchEngine(g, pipeline=False).pipeline is False
+
+
+# ============================================= executable-cache accounting ==
+
+def test_repeated_buckets_compile_once_per_key():
+    """Two engines over equal (space, nmax, bcap, chunk, pallas) buckets
+    must share every executable: the second run compiles nothing, and no
+    key ever traces twice."""
+    graphs = [gen.chain(6, 10), gen.cycle(7, 11), gen.clique(5, 12)]
+    e1 = BatchEngine(graphs, algorithm="mpdp_general", pipeline=True)
+    e1.run()
+    assert e1.stats["retraces"] == 0
+    assert e1.stats["compiles"] and all(
+        c == 1 for c in e1.stats["compiles"].values())
+    before = EXEC.total()
+    e2 = BatchEngine([gen.chain(6, 20), gen.cycle(7, 21), gen.clique(5, 22)],
+                     algorithm="mpdp_general", pipeline=False)
+    e2.run()
+    assert EXEC.total() == before, "repeated bucket shape retraced kernels"
+    assert e2.stats["retraces"] == 0
+    assert e2._exec_keys == e1._exec_keys
+
+
+@pytest.mark.parametrize("devices", [needs(2)])
+def test_repeated_sharded_buckets_compile_once(devices):
+    from repro.core import shard
+    graphs = [gen.chain(6, 10), gen.star(7, 11)]
+    mesh = shard.batch_mesh(devices)
+    e1 = shard.ShardedBatchEngine(graphs, mesh, algorithm="mpdp_tree",
+                                  pipeline=True)
+    e1.run()
+    before = EXEC.total()
+    e2 = shard.ShardedBatchEngine([gen.chain(6, 30), gen.star(7, 31)],
+                                  shard.batch_mesh(devices),
+                                  algorithm="mpdp_tree", pipeline=False)
+    e2.run()
+    assert EXEC.total() == before
+    assert e2.stats["retraces"] == 0
+
+
+def test_stats_shape():
+    g = [gen.chain(5, 1)]
+    e = BatchEngine(g, algorithm="dpsub", pipeline=True)
+    e.run()
+    s = e.stats
+    assert s["pipeline"] is True
+    assert any(k.startswith("bdpsub[") for k in s["compiles"])
+    assert any(k.startswith("bfilter[") for k in s["compiles"])
+
+
+# ======================================================= streaming service ==
+
+def test_service_matches_optimize_many():
+    graphs = mixed_stream() + tree_stream()
+    rs, report = service.optimize_stream(graphs, pipeline=True)
+    base = optimize_many(graphs)
+    assert_same(graphs, rs, base)
+    # every admitted flight groups one (nmax, space) bucket
+    admitted = sorted(qi for f in report.flights for qi in f.queries)
+    assert admitted == list(range(len(graphs)))
+    assert len(report.latency_s) == len(graphs)
+    assert all(l > 0 for l in report.latency_s)
+    pct = report.latency_percentiles()
+    assert pct[50] <= pct[95] <= pct[99]
+
+
+def test_service_flight_cap_and_solo():
+    graphs = [gen.chain(5, i) for i in range(7)]
+    opt = service.StreamOptimizer(max_flight=3)
+    flights, solo = opt.admit(graphs, list(range(7)))
+    assert not solo
+    assert [len(f.queries) for f in flights] == [3, 3, 1]
+    assert all(f.space == "mpdp_tree" for f in flights)
+    # forced tree space on a cyclic query cannot be admitted
+    cyc = [gen.cycle(5, 1)]
+    opt2 = service.StreamOptimizer(algorithm="mpdp_tree")
+    flights2, solo2 = opt2.admit(cyc, [0])
+    assert not flights2 and solo2 == [0]
+
+
+def test_service_cache_hits_skip_flights():
+    g = rand_graph(8, 2, 77)
+    cache = PlanCache()
+    rs1, rep1 = service.optimize_stream([g], cache=cache, pipeline=True)
+    rs2, rep2 = service.optimize_stream([g], cache=cache, pipeline=True)
+    assert rep1.cache_hits == 0 and rep2.cache_hits == 1
+    assert not rep2.flights                 # a pure-hit stream spawns nothing
+    assert plan_shape(rs1[0].plan) == plan_shape(rs2[0].plan)
+
+
+# ============================================= random flight compositions ==
+
+_TOPOS = ("chain", "star", "cycle", "clique", "rand")
+
+
+def _topo_graph(kind_idx, n, seed):
+    kind = _TOPOS[kind_idx % len(_TOPOS)]
+    if kind == "chain":
+        return gen.chain(n, seed)
+    if kind == "star":
+        return gen.star(n, seed)
+    if kind == "cycle":
+        return gen.cycle(n, seed)
+    if kind == "clique":
+        return gen.clique(min(n, 6), seed)
+    return rand_graph(n, seed % 4, seed)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 4), st.integers(4, 12),
+                          st.integers(0, 60)),
+                min_size=1, max_size=7),
+       st.integers(0, 5))
+def test_random_flight_compositions_pipelined_vs_sync(comps, dup_at):
+    """Random mixed-NMAX streams with a duplicate interleaved mid-stream
+    (an intra-stream cache hit): the pipelined service must produce the
+    same costs/plans as the synchronous service and as ``optimize_many``."""
+    graphs = [_topo_graph(k, n, s) for k, n, s in comps]
+    graphs.insert(min(dup_at, len(graphs)), graphs[0])   # mid-stream dup
+    sync_rs, _ = service.optimize_stream(graphs, cache=PlanCache(),
+                                         pipeline=False)
+    pipe_rs, rep = service.optimize_stream(graphs, cache=PlanCache(),
+                                           pipeline=True)
+    many = optimize_many(graphs, cache=PlanCache())
+    for g, rs, rp, rm in zip(graphs, sync_rs, pipe_rs, many):
+        assert rs.cost == rp.cost == rm.cost
+        assert plan_shape(rs.plan) == plan_shape(rp.plan) == plan_shape(rm.plan)
+        validate_plan(rp.plan, g)
+    assert rep.cache_hits >= 1              # the interleaved duplicate
+
+
+# ==================================================== cache persistence ====
+
+def test_plancache_save_load_roundtrip(tmp_path):
+    path = str(tmp_path / "plans.plancache")
+    g = rand_graph(9, 3, 5)
+    g2 = rand_graph(8, 1, 6)
+    cache = PlanCache()
+    optimize_many([g, g2], cache=cache)
+    cache.save(path)
+    loaded = PlanCache.load(path)
+    assert len(loaded) == len(cache) == 2
+    assert not loaded.stale_load
+    hit = loaded.get(g)
+    assert hit is not None and hit.algorithm.startswith("cache[")
+    fresh = engine.optimize(g, "auto")
+    assert abs(hit.cost - fresh.cost) <= 1e-4 * max(1.0, abs(fresh.cost))
+    validate_plan(hit.plan, g)
+
+
+def test_plancache_stale_quantization_invalidates(tmp_path):
+    import ast
+    path = str(tmp_path / "plans.plancache")
+    cache = PlanCache()
+    optimize_many([rand_graph(7, 1, 9)], cache=cache)
+    cache.save(path)
+    with open(path) as f:
+        blob = ast.literal_eval(f.read())   # pure-literal format, no pickle
+    blob["header"]["quant"] = 1024.0        # stats epsilon drifted
+    with open(path, "w") as f:
+        f.write(repr(blob))
+    loaded = PlanCache.load(path)
+    assert loaded.stale_load and len(loaded) == 0
+    # garbage / foreign files invalidate instead of erroring (or executing)
+    with open(path, "w") as f:
+        f.write("__import__('os')")
+    assert PlanCache.load(path).stale_load
+    with open(path, "w") as f:
+        f.write("{]")
+    assert PlanCache.load(path).stale_load
+
+
+def test_plancache_signature_is_process_stable():
+    """Persisted keys must replay across processes: the WL refinement hash
+    is PYTHONHASHSEED-independent (CRC32, not builtin ``hash``)."""
+    import subprocess, sys, os
+    g = rand_graph(7, 2, 33)
+    from repro.core.plancache import canonical_signature
+    key, _ = canonical_signature(g)
+    code = (
+        "from tests.helpers import rand_graph\n"
+        "from repro.core.plancache import canonical_signature\n"
+        "print(repr(canonical_signature(rand_graph(7, 2, 33))[0]))\n")
+    env = dict(os.environ, PYTHONHASHSEED="271828",
+               PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH", ""))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, cwd=os.getcwd(),
+                         check=True)
+    assert out.stdout.strip() == repr(key)
