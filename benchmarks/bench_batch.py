@@ -33,6 +33,16 @@ it measures how host-bound the runner is.
         [--repeat 3] [--smoke] [--devices 4] [--pipeline]
         [--json BENCH_batch.json]
 
+``--uniondp`` additionally runs the **plan-quality** benchmark: skewed
+PK-FK streams (MusicBrainz random walks, deep snowflakes; 30-80 relations)
+and a uniform-selectivity control stream are optimized with plain GOO,
+IDP2, the legacy size-greedy UnionDP (no re-optimization) and the current
+cost-aware UnionDP (raw — no GOO floor).  Per-query cost ratios vs GOO and
+the geometric-mean improvement of the new partitioner over the legacy one
+are recorded; ``check_regression.py`` gates both deterministically
+(<= GOO on every query, >= 1.2x geomean improvement on the skewed streams)
+plus the sync-vs-pipelined cost equality of the re-optimization loop.
+
 ``--json`` writes the machine-readable report consumed by
 ``benchmarks/check_regression.py`` (the CI bench-regression gate; the
 ``devices-4`` CI job adds the sharded section to the gated report);
@@ -65,7 +75,8 @@ def _lanes(results):
 
 
 def bench(nq: int = 32, repeat: int = 3, seed: int = 0,
-          devices: int | None = None, pipeline: bool = False) -> dict:
+          devices: int | None = None, pipeline: bool = False,
+          uniondp: bool = False, smoke: bool = False) -> dict:
     from repro.core import engine
     graphs = make_stream(nq, seed)
 
@@ -126,6 +137,8 @@ def bench(nq: int = 32, repeat: int = 3, seed: int = 0,
                                        devices, out["algorithms"])
     if pipeline:
         out["pipeline"] = bench_pipeline(graphs, repeat)
+    if uniondp:
+        out["uniondp_quality"] = bench_uniondp_quality(smoke)
     return out
 
 
@@ -181,6 +194,89 @@ def bench_pipeline(graphs, repeat) -> dict:
     }
 
 
+UNIONDP_K = 10
+# deterministic quality gates, written into every report so a baseline
+# refresh (commit the fresh report verbatim) preserves them: <= GOO per
+# query up to the f32 temp-table-vs-canonical epsilon, and the geomean
+# improvement floor over the legacy size-greedy partitioner
+UNIONDP_GOO_GATE = 1.002
+UNIONDP_IMPROVEMENT_GATE = 1.2
+
+# (tag, generator kind, n) — deterministic streams; "mb" is the skewed
+# PK-FK MusicBrainz random walk (schema caps at 56 tables), "snow" the deep
+# skewed snowflake (reaches 80), "mbu" the uniform-selectivity control
+# (same walks, sel drawn log-uniform instead of 1/card(PK))
+_UNIONDP_SKEWED = [("mb", 30), ("mb", 40), ("mb", 56),
+                   ("snow", 30), ("snow", 60), ("snow", 80)]
+_UNIONDP_SKEWED_SMOKE = [("mb", 30), ("mb", 56), ("snow", 60)]
+_UNIONDP_UNIFORM = [("mbu", 30), ("mbu", 40)]
+_UNIONDP_UNIFORM_SMOKE = [("mbu", 30)]
+
+
+def _uniondp_graph(kind: str, n: int):
+    from repro.workloads import generators as gen
+    if kind == "mb":
+        return gen.musicbrainz_query(n, seed=200 + n)
+    if kind == "mbu":
+        return gen.musicbrainz_query(n, seed=300 + n, pk_fk=False)
+    return gen.snowflake(n, seed=n)
+
+
+def bench_uniondp_quality(smoke: bool) -> dict:
+    """Plan-quality section: raw UnionDP (cost-aware partitions +
+    re-optimization, no GOO floor) vs plain GOO, IDP2 and the legacy
+    size-greedy partitioner on skewed + uniform large-query streams.
+
+    Everything here is *deterministic* (fixed generator seeds, no timing),
+    so ``check_regression.py`` gates the ratios exactly: every query's
+    ``new/goo`` must stay under the baseline's ``goo_gate`` and the
+    geometric-mean ``old/new`` improvement on the skewed streams over
+    ``improvement_gate``.  The sync-vs-pipelined equality of the first
+    skewed query is recorded as ``pipeline_costs_equal`` (same gate idea as
+    the throughput section's: the re-optimization loop must not perturb
+    results when the engines overlap host and device work).
+    """
+    import math
+    from repro.heuristics import goo, idp, uniondp
+
+    skewed = _UNIONDP_SKEWED_SMOKE if smoke else _UNIONDP_SKEWED
+    uniform = _UNIONDP_UNIFORM_SMOKE if smoke else _UNIONDP_UNIFORM
+    out: dict = {"k": UNIONDP_K, "queries": [], "pipeline_costs_equal": True,
+                 "goo_gate": UNIONDP_GOO_GATE,
+                 "improvement_gate": UNIONDP_IMPROVEMENT_GATE}
+    imp_logs = []
+    for stream, cases in (("skewed", skewed), ("uniform", uniform)):
+        for kind, n in cases:
+            g = _uniondp_graph(kind, n)
+            goo_c = goo.solve(g).cost
+            idp_c = idp.solve(g, k=UNIONDP_K).cost
+            old_c = uniondp.solve(g, k=UNIONDP_K, partition="size",
+                                  reopt_rounds=0).cost
+            new = uniondp.solve(g, k=UNIONDP_K)
+            out["queries"].append({
+                "stream": stream, "kind": kind, "n": n,
+                "goo": goo_c, "idp2": idp_c, "old": old_c, "new": new.cost,
+                "ratio_vs_goo": new.cost / goo_c,
+                "ratio_vs_idp2": new.cost / idp_c,
+                "improvement_vs_size": old_c / new.cost,
+                # accepted re-optimization passes (round_costs also holds
+                # the seed cost, hence the -1)
+                "reopt_passes": len(new.info["round_costs"]) - 1,
+            })
+            if stream == "skewed":
+                imp_logs.append(math.log(old_c / new.cost))
+    # sync-vs-pipelined equality through partition rounds + reopt passes
+    g = _uniondp_graph(*skewed[0])
+    sync = uniondp.solve(g, k=UNIONDP_K)
+    pipe = uniondp.solve(g, k=UNIONDP_K, pipeline=True)
+    out["pipeline_costs_equal"] = (
+        sync.cost == pipe.cost
+        and sync.info["round_costs"] == pipe.info["round_costs"])
+    out["worst_ratio_vs_goo"] = max(q["ratio_vs_goo"] for q in out["queries"])
+    out["geomean_improvement_skewed"] = math.exp(sum(imp_logs) / len(imp_logs))
+    return out
+
+
 def bench_sharded(graphs, seq_costs, best_seq, repeat, devices,
                   unsharded) -> dict:
     """Time each batched algorithm over a D-device mesh and the degenerate
@@ -233,6 +329,11 @@ def main() -> None:
                     help="also bench pipelined vs synchronous engines "
                          "(result-equality + zero-retrace gate; speedup "
                          "reported, never gated)")
+    ap.add_argument("--uniondp", action="store_true",
+                    help="also bench UnionDP plan quality on skewed + "
+                         "uniform 30-80-relation streams (all gates "
+                         "deterministic: <= GOO per query, geomean "
+                         "improvement vs the size-greedy partitioner)")
     ap.add_argument("--smoke", action="store_true",
                     help="trimmed CI mode (16 queries, min-of-2 repeats)")
     ap.add_argument("--json", type=str, default=None,
@@ -247,7 +348,7 @@ def main() -> None:
         # one noisy-neighbor blip on a shared CI runner
         nq, repeat = min(nq, 16), 2
     r = bench(nq, repeat, args.seed, devices=args.devices,
-              pipeline=args.pipeline)
+              pipeline=args.pipeline, uniondp=args.uniondp, smoke=args.smoke)
     print("mode,queries,wall_s,queries_per_s,evaluated_lanes")
     print(f"sequential,{r['queries']},{r['seq_s']:.3f},{r['seq_qps']:.2f},-")
     for algo, a in r["algorithms"].items():
@@ -277,6 +378,17 @@ def main() -> None:
         print(f"# pipelined[{p['algorithm']}] {p['speedup_vs_sync']:.2f}x vs "
               f"synchronous ({p['qps']:.2f} vs {p['qps_sync']:.2f} q/s), "
               f"costs bit-identical, {p['retraces']} retraces in timed runs")
+    if "uniondp_quality" in r:
+        u = r["uniondp_quality"]
+        print("stream,kind,n,new/goo,new/idp2,old/new,reopt_passes")
+        for q in u["queries"]:
+            print(f"{q['stream']},{q['kind']},{q['n']},"
+                  f"{q['ratio_vs_goo']:.4f},{q['ratio_vs_idp2']:.4f},"
+                  f"{q['improvement_vs_size']:.2f},{q['reopt_passes']}")
+        print(f"# uniondp quality (k={u['k']}): worst vs goo "
+              f"{u['worst_ratio_vs_goo']:.4f}x, geomean improvement vs "
+              f"size-greedy {u['geomean_improvement_skewed']:.2f}x (skewed "
+              f"streams), pipelined costs equal: {u['pipeline_costs_equal']}")
     if args.json:
         with open(args.json, "w") as f:
             json.dump(r, f, indent=2, sort_keys=True)

@@ -38,6 +38,22 @@ must serve every repeated bucket shape).  The pipelined-vs-sync speedup is
 reported, never gated — on a 2-core CI container the overlap has nothing to
 hide behind.
 
+When the baseline carries a ``uniondp_quality`` section (from ``bench_batch
+--uniondp``), the plan-quality gates fire — all fully deterministic (fixed
+generator seeds, cost ratios, no timing):
+
+  * every benchmarked query's ``new/goo`` cost ratio must stay at or under
+    the baseline's ``goo_gate`` (1 + a small f32 temp-table-vs-canonical
+    costing epsilon): raw UnionDP — no GOO floor — must not lose to plain
+    GOO on either the skewed or the uniform streams;
+  * the geometric-mean improvement of the cost-aware partitioner +
+    re-optimization over the legacy size-greedy partitioner on the *skewed*
+    streams must clear the baseline's ``improvement_gate`` (the paper-claim
+    half: partitions chosen by estimated cost, not size, are what make the
+    divide-and-conquer competitive);
+  * ``pipeline_costs_equal`` must be true (the re-optimization loop is
+    bit-identical under the pipelined engines).
+
     python benchmarks/check_regression.py BENCH_batch.json \
         benchmarks/BENCH_baseline.json [--tolerance 0.25]
 
@@ -76,6 +92,44 @@ def check(current: dict, baseline: dict, tolerance: float = 0.25) -> list[str]:
             f"{algos['dpsub']['evaluated_lanes']}")
     errors += check_sharded(current, baseline, tolerance)
     errors += check_pipeline(current, baseline)
+    errors += check_uniondp(current, baseline)
+    return errors
+
+
+def check_uniondp(current: dict, baseline: dict) -> list[str]:
+    """Deterministic UnionDP plan-quality gates (see module docstring)."""
+    base_u = baseline.get("uniondp_quality")
+    cur_u = current.get("uniondp_quality")
+    if base_u is None:
+        if cur_u is not None:
+            print("note: current report has a uniondp_quality section but "
+                  "the baseline does not — quality gates are vacuous until "
+                  "the baseline is refreshed with bench_batch --uniondp")
+        return []
+    if cur_u is None:
+        print("note: baseline has a uniondp_quality section but the current "
+              "report was benched without --uniondp; quality checks skipped "
+              "(the bench-regression CI job runs the gating configuration)")
+        return []
+    errors: list[str] = []
+    goo_gate = base_u.get("goo_gate", 1.002)
+    for q in cur_u["queries"]:
+        if q["ratio_vs_goo"] > goo_gate:
+            errors.append(
+                f"[uniondp:{q['kind']}{q['n']}] raw plan lost to GOO: "
+                f"cost ratio {q['ratio_vs_goo']:.4f} > gate {goo_gate} "
+                "(cost-aware partitioning + re-optimization must beat the "
+                "greedy baseline without the retired goo_floor)")
+    imp_gate = base_u.get("improvement_gate", 1.2)
+    if cur_u["geomean_improvement_skewed"] < imp_gate:
+        errors.append(
+            f"[uniondp] geomean improvement over the size-greedy "
+            f"partitioner fell to {cur_u['geomean_improvement_skewed']:.2f}x "
+            f"< gate {imp_gate}x on the skewed streams")
+    if not cur_u.get("pipeline_costs_equal", False):
+        errors.append(
+            "[uniondp] pipelined re-optimization costs diverged from the "
+            "synchronous path (must be bit-identical)")
     return errors
 
 
@@ -176,6 +230,12 @@ def main() -> int:
         print(f"[pipeline:{p['algorithm']}] qps {p['qps']:.2f} "
               f"({p['speedup_vs_sync']:.2f}x vs sync) "
               f"costs_equal {p['costs_equal']} retraces {p['retraces']}")
+    if "uniondp_quality" in current:
+        u = current["uniondp_quality"]
+        print(f"[uniondp] worst vs goo {u['worst_ratio_vs_goo']:.4f}x "
+              f"geomean improvement {u['geomean_improvement_skewed']:.2f}x "
+              f"pipeline_equal {u['pipeline_costs_equal']} "
+              f"({len(u['queries'])} queries)")
     if errors:
         print("\nBENCHMARK REGRESSION:")
         for e in errors:

@@ -21,6 +21,10 @@ are emulated, so the flag must be parsed before jax initializes.
 compaction of level i+1 under device evaluate of level i; bit-identical
 plans).  ``--cache-file PATH`` persists the plan cache across service runs
 (the file self-invalidates when the stats-quantization version changes).
+``--explain`` prints, for the first UnionDP-tier query, the partition
+boundaries each recursion round chose (table names per partition) and the
+re-optimization loop's per-pass total costs — the worked example in
+``docs/heuristics.md`` is this output.
 
 Each optimized plan is executed on synthetic data by the numpy hash-join
 engine; results are cross-checked against a GOO plan for semantic equality.
@@ -80,6 +84,10 @@ def main():
                          "device evaluation (bit-identical plans)")
     ap.add_argument("--cache-file", type=str, default=None,
                     help="persist the plan cache here across service runs")
+    ap.add_argument("--explain", action="store_true",
+                    help="print the chosen partition boundaries and "
+                         "per-round re-optimization costs for the first "
+                         "UnionDP-tier query")
     args = ap.parse_args()
     # before the first jax import: backends read XLA_FLAGS exactly once
     from repro.hostdev import ensure_host_devices
@@ -117,6 +125,21 @@ def main():
         total_exec += exec_s
         print(f"Q{qi}: n={g.n:3d} algo={res.algorithm:14s} "
               f"cost={res.cost:10.4g} exec={1e3*exec_s:6.1f}ms rows={out.count}")
+    if args.explain:
+        for qi, (g, res) in enumerate(zip(graphs, stream)):
+            if "partitions" not in res.info:
+                continue               # exact-tier query: no partitioning
+            print(f"\nexplain Q{qi} (n={g.n}, {res.algorithm}):")
+            for rnd, groups in enumerate(res.info["partitions"]):
+                names = ["{" + ",".join(g.names[v] for v in gr) + "}"
+                         for gr in sorted(groups, key=len, reverse=True)]
+                print(f"  round {rnd}: {len(groups)} partitions  "
+                      + " ".join(names))
+            rc = res.info["round_costs"]
+            print("  re-optimization: " + " -> ".join(f"{c:.6g}" for c in rc)
+                  + (f"  ({len(rc) - 1} accepted pass"
+                     + ("es" if len(rc) != 2 else "") + ")"))
+            break                      # one worked example is the contract
     if report is not None and report.flights:
         # the engines honor REPRO_PIPELINE when --pipeline is absent; label
         # the mode that actually ran, not just the flag

@@ -55,7 +55,10 @@ the staged double-buffer writes alias in place instead of copy-on-write.
 All kernel entry points are served by ``exec_cache.EXEC`` — one compiled
 executable per (space, nmax, bcap, chunk, pallas) key for the whole process,
 with trace counting exposed on ``BatchEngine.stats`` (repeated bucket shapes
-across IDP2/UnionDP rounds and service flights must hit zero retraces).
+across IDP2/UnionDP partition rounds, UnionDP re-optimization passes and
+service flights must hit zero retraces — the heuristics re-enter this module
+many times per query with recurring (nmax, bcap) shapes, which is exactly
+the access pattern the process-wide cache exists for).
 
 ``optimize_many`` is the public entry point; it also consults an optional
 ``PlanCache`` (canonical-signature keyed) before touching the device.

@@ -81,6 +81,33 @@ def np_join_cost(rl2_l, rl2_r, rl2_out):
     return np.minimum(hj, np.minimum(mj, nl))
 
 
+# ----------------------------------------------- partition-boundary helper --
+
+def np_boundary_cost(rl2_a, rl2_b, sel_l2) -> np.float32:
+    """Estimated cost of the *boundary join* between two partitions.
+
+    ``rl2_a``/``rl2_b`` are the partitions' aggregated log2 cardinalities and
+    ``sel_l2`` the summed log2 selectivity of every edge crossing the
+    boundary; the boundary join therefore produces
+    ``max(rl2_a + rl2_b + sel_l2, 0)`` log2 rows and costs whatever the
+    cheapest physical operator charges for it.
+
+    This is the merge-scoring proxy of UnionDP's cost-aware partitioner
+    (``heuristics.uniondp``): cheap boundaries — tiny dimension chains,
+    strongly-reducing PK-FK clusters — are unioned into partitions first,
+    because any internal order of such a group is near-free.  An edge whose
+    boundary join is expensive (a skewed PK-FK edge touching a huge
+    fact-side partition) is precisely the join whose placement decides plan
+    quality, so it is kept out of the greedy sweep and decided by the exact
+    DP over composites instead; a size-greedy rule, blind to the stats,
+    routinely trapped those joins inside an arbitrary partition.
+    """
+    ra = np.float32(rl2_a)
+    rb = np.float32(rl2_b)
+    out = np.maximum(ra + rb + np.float32(sel_l2), np.float32(0.0))
+    return np_join_cost(ra, rb, out)
+
+
 # --------------------------------------------------- set-cardinality helper --
 
 def np_rows_for_sets(sets_np: np.ndarray, g) -> np.ndarray:

@@ -627,6 +627,13 @@ def optimize_many(graphs, algorithm: str = "auto", chunk: int = CHUNK,
     ``optimize``; plan-cache hits are instead re-costed canonically on the
     probing graph's exact stats (the cache key quantizes stats at 1/4096
     log2, so a hit's cost can differ at that epsilon).
+
+    This is the single device entry point of the heuristics tier: every
+    IDP2 round, UnionDP partition round AND UnionDP re-optimization pass
+    ships its vertex-disjoint subproblems through one call — so
+    ``devices``/``mesh``/``pipeline`` compose with the heuristics for free,
+    and the bit-identity guarantee extends to their whole search
+    (``tests/test_uniondp_quality.py`` gates it end to end).
     """
     from . import batch as _batch
     kw = {} if max_batch is None else {"max_batch": max_batch}

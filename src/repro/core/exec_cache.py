@@ -25,9 +25,23 @@ This module makes the contract explicit and observable:
     the delta being zero across timed repeats, and
     ``tests/test_pipeline.py`` asserts one compile per key.
 
+**The key tuple.**  ``ExecutableCache.key(name, statics)`` produces
+
+    (name, ("bcap", 4), ("chunk", 32768), ("nmax", 10), ("pallas", False))
+
+i.e. the kernel entry-point name followed by the *sorted* static kwargs.
+Every field that forces a distinct XLA executable — and nothing else —
+must appear: ``name`` selects the impl (``bfilter``/``bccp``/``btree``/
+``bgeneral``/sharded wrappers), ``nmax``/``bcap``/``chunk`` fix the lane
+and memo shapes, ``pallas`` switches the kernel body.  The admission key
+of ``core.service`` flights is a prefix of this tuple by design: queries
+sharing a flight are exactly the queries sharing executables.
+
 Keys deliberately exclude anything identity-based (no function objects, no
 Mesh instances): two engines over equal bucket shapes share a key even if
-every surrounding Python object differs.
+every surrounding Python object differs.  Donating entry points (the memo
+scatters) keep their own jits — a donated buffer's executable must not be
+shared with a non-donating call site — but they are trace-counted too.
 """
 from __future__ import annotations
 

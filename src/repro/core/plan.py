@@ -72,6 +72,11 @@ class OptimizeResult:
     wall_s: float = 0.0
     levels: int = 0
     timings: dict = dataclasses.field(default_factory=dict)
+    # optional solver-specific explain payload (e.g. UnionDP records its
+    # partition boundaries per recursion round and the re-optimization
+    # loop's per-round total costs; see ``examples/query_service.py
+    # --explain``).  Never consulted by the engines themselves.
+    info: dict = dataclasses.field(default_factory=dict)
 
 
 def leaf_plan(v: int, g) -> Plan:

@@ -19,6 +19,12 @@ Ties in the refinement are broken by original index, which is not
 relabel-invariant — automorphic-modulo-stats vertices may canonicalize
 differently under different input labelings.  That only manifests as a cache
 *miss* (two keys for one isomorphism class), never as a wrong hit.
+
+Staleness is handled at two granularities: a persisted file whose header's
+format version or quantization epsilon mismatches is *wholly* invalidated on
+load, and individual entries whose recorded per-relation cardinalities have
+drifted beyond their stored epsilon are dropped by
+``PlanCache.invalidate_drift`` (see the class docstring).
 """
 from __future__ import annotations
 
@@ -34,10 +40,13 @@ _QUANT = 4096.0          # log2-stat quantization: 1/4096 of a doubling
 _REFINE_ROUNDS = 3
 
 # Persistence format version.  Bumped whenever the canonical-signature
-# derivation changes shape; files written by a different version (or a
-# different quantization epsilon) are *wholly* invalidated on load — a key
-# computed under a stale epsilon must never serve a hit.
-CACHE_FILE_VERSION = 1
+# derivation or the entry payload changes shape; files written by a
+# different version (or a different quantization epsilon) are *wholly*
+# invalidated on load — a key computed under a stale epsilon must never
+# serve a hit.  v2: entries additionally carry the per-vertex
+# (name, quantized card) stats signature and the quantization epsilon they
+# were inserted under, feeding ``PlanCache.invalidate_drift``.
+CACHE_FILE_VERSION = 2
 
 
 def _quantize(x: float) -> int:
@@ -136,13 +145,26 @@ class CacheStats:
 
 
 class PlanCache:
-    """LRU cache: canonical signature -> plan shape in canonical labels."""
+    """LRU cache: canonical signature -> plan shape in canonical labels.
+
+    Each entry also records a *stats signature* — the per-vertex
+    ``(relation name, quantized log2 card)`` pairs of the inserting graph —
+    and the quantization epsilon (``quant``, steps per log2 doubling) in
+    force at insert time.  ``invalidate_drift`` uses both to drop entries
+    whose underlying table statistics have since drifted: a stale-stats
+    probe (a query still carrying the old estimates) then *misses* and
+    re-optimizes instead of replaying a plan chosen for cardinalities that
+    no longer exist.  Fresh-stats probes never needed the guard — their
+    quantized cards land in a different canonical key anyway.
+    """
 
     def __init__(self, max_entries: int = 4096):
         self.max_entries = max_entries
         self.stats = CacheStats()
         self.stale_load = False   # True when load() rejected a stale file
-        self._d: OrderedDict[tuple, tuple[Plan, str]] = OrderedDict()
+        # key -> (canonical plan, algorithm, stats signature, quant epsilon)
+        self._d: OrderedDict[tuple, tuple[Plan, str, tuple, float]] = \
+            OrderedDict()
 
     def __len__(self) -> int:
         return len(self._d)
@@ -168,7 +190,7 @@ class PlanCache:
             return None
         self._d.move_to_end(key)
         self.stats.hits += 1
-        canon_plan, algo = entry
+        canon_plan, algo = entry[0], entry[1]
         inv = {c: o for o, c in enumerate(perm)}
         p = cost_plan(_relabel_plan(canon_plan, inv), g)
         from .plan import Counters
@@ -181,11 +203,44 @@ class PlanCache:
             self._d.move_to_end(key)
             return
         canon_plan = _relabel_plan(result.plan, {v: perm[v] for v in range(g.n)})
-        self._d[key] = (canon_plan, result.algorithm)
+        stats_sig = tuple(
+            (str(g.names[v]) if v < len(g.names) else f"R{v}",
+             _quantize(g.log2_card[v]))
+            for v in range(g.n))
+        self._d[key] = (canon_plan, result.algorithm, stats_sig, _QUANT)
         self.stats.inserts += 1
         while len(self._d) > self.max_entries:
             self._d.popitem(last=False)
             self.stats.evictions += 1
+
+    def invalidate_drift(self, rel_rows: dict, *, log2: bool = False) -> int:
+        """Drop every entry whose recorded per-relation cardinalities have
+        drifted from the current statistics; returns the number dropped.
+
+        ``rel_rows`` maps relation name -> current row count (linear rows;
+        pass ``log2=True`` when the values are already log2).  An entry is
+        stale when any of its relations appears in ``rel_rows`` with a
+        cardinality more than one quantization step (the entry's stored
+        epsilon, 1/quant of a log2 doubling) away from the value recorded
+        at insert time — beyond that step the canonical key a fresh-stats
+        query would compute has moved, so the entry can only ever serve
+        probes that still carry the stale estimates.  Relations not named
+        in ``rel_rows`` are trusted unchanged; entries whose graphs used
+        the positional default names ("R0", "R1", ...) are only matched if
+        the caller keys ``rel_rows`` the same way.
+        """
+        import math
+        new_l2 = {name: (float(v) if log2 else math.log2(max(float(v), 1.0)))
+                  for name, v in rel_rows.items()}
+        dropped = [key for key, entry in self._d.items()
+                   if len(entry) > 2 and any(
+                       name in new_l2 and
+                       abs(round(new_l2[name] * entry[3]) - qc) > 1
+                       for name, qc in entry[2])]
+        for key in dropped:
+            del self._d[key]
+            self.stats.evictions += 1
+        return len(dropped)
 
     # -------------------------------------------------------- persistence --
     def save(self, path: str) -> None:
@@ -203,8 +258,9 @@ class PlanCache:
         """
         blob = {"header": {"version": CACHE_FILE_VERSION, "quant": _QUANT,
                            "refine_rounds": _REFINE_ROUNDS},
-                "entries": [(key, (_encode_plan(plan), algo))
-                            for key, (plan, algo) in self._d.items()]}
+                "entries": [(key, (_encode_plan(plan), algo, stats_sig, q))
+                            for key, (plan, algo, stats_sig, q)
+                            in self._d.items()]}
         tmp = f"{path}.tmp.{os.getpid()}"
         with open(tmp, "w") as f:
             f.write(repr(blob))
@@ -230,8 +286,9 @@ class PlanCache:
                      or hdr["quant"] != _QUANT
                      or hdr["refine_rounds"] != _REFINE_ROUNDS)
             entries = blob["entries"][-max_entries:] if not stale else []
-            for key, (plan_enc, algo) in entries:
-                cache._d[key] = (_decode_plan(plan_enc), algo)
+            for key, (plan_enc, algo, stats_sig, q) in entries:
+                cache._d[key] = (_decode_plan(plan_enc), algo,
+                                 tuple(tuple(p) for p in stats_sig), float(q))
         except (ValueError, SyntaxError, KeyError, TypeError,
                 MemoryError, RecursionError):
             stale = True

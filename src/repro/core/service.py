@@ -21,6 +21,24 @@ adds that layer:
     with intra-stream dedup of canonically-equal queries, exactly like
     ``optimize_many``; computed plans are inserted at flight finalize.
 
+**Flight lifecycle.**  Every admitted flight moves through four states,
+and the double-buffered stream loop interleaves them across flights:
+
+    admitted   bucket_pending grouped it; FlightReport created with its
+               (NMAX, space) key and member stream indices
+    dispatched _spawn built the (Sharded)BatchEngine and called
+               run_levels(): all DP levels are dispatched; trailing
+               evaluate chunks may still be executing on the device
+    finalized  _finalize called collect(): host-only memo fetch, plan
+               extraction, plan-cache insertion, latency stamping — runs
+               while the NEXT flight's device work is in flight
+    reported   appended to StreamReport.flights with wall_s (dispatch ->
+               finalize done) and finalize_s (the overlappable share)
+
+Solo queries (bucket rejects: n > NMAX cap, exotic statics) fall back to
+per-query ``engine.optimize`` after all flights land; deferred duplicates
+resolve last, off the canonical results (``resolve_deferred``).
+
 Results are bit-identical to ``optimize_many`` over the same stream by
 construction: the probe/dedup/bucket stages are the *same functions*
 (``batch.probe_stream``/``dedup_pending``/``bucket_pending``/

@@ -8,9 +8,24 @@ adjacency rows, the flat ``(bcap << NMAX)`` memo tables (logically
 axis sharded with ``NamedSharding``/``shard_map`` over ``batch``:
 
   * the B queries of a (NMAX, topology) bucket are padded up to a device
-    multiple with *inert* 2-relation queries (their lanes run, their results
-    are discarded) and dealt round-robin, so every shard holds exactly
-    ``ceil(B / D)`` queries and all shards share one set of static shapes;
+    multiple with *inert* 2-relation queries and dealt round-robin, so
+    every shard holds exactly ``ceil(B / D)`` queries and all shards share
+    one set of static shapes.  The contract, precisely:
+
+      - **deal**: bucket entry ``j`` lands on shard ``j % D``, local slot
+        ``j // D`` — a pure index bijection, so result collection is
+        ``results[j] = shard[j % D][j // D]`` with no search and no
+        device-order dependence;
+      - **padding**: the ``(-B) % D`` pad slots are appended *after* the
+        real queries, so they always occupy the highest (shard, slot)
+        pairs; a pad query is a fixed 2-relation join (``_pad_graph``)
+        whose lanes execute normally — keeping every shard's chunk grid
+        identical — but whose memo region no real query ever reads and
+        whose result slot is simply dropped at collection;
+      - **inertness**: pads are static and tiny (NMAX bucket unchanged,
+        level count 2), so they cannot move a bucket into a different
+        executable-cache key, and ``tests/test_shard.py`` asserts a padded
+        uneven batch returns bit-identical results to the unpadded batch;
   * each device runs the level-synchronous unrank -> filter -> evaluate ->
     prune pipeline on its own slice: the ``shard_map`` body strips the
     leading device axis and calls the *single-shard* batched kernels of

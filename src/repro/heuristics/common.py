@@ -105,6 +105,25 @@ class UnitGraph:
         self.units = keep
         self._rebuild_edges()
 
+    def sel_adjacency(self) -> dict[int, dict[int, float]]:
+        """Aggregated log2 selectivities as a dict-of-dicts adjacency:
+        ``adj[i][j]`` is the summed log2 selectivity of every base edge
+        crossing units ``i`` and ``j``.  The cost-aware partitioner mutates
+        a copy of this structure while union-find merges collapse it."""
+        adj: dict[int, dict[int, float]] = {i: {} for i in range(self.n)}
+        for (a, b), s in self.sel_l2.items():
+            adj[a][b] = s
+            adj[b][a] = s
+        return adj
+
+    def rel_ids(self, idxs: list[int]) -> list[int]:
+        """Sorted base-relation ids covered by units ``idxs`` (for explain
+        output: partition boundaries in base-graph vocabulary)."""
+        rel = 0
+        for i in idxs:
+            rel |= self.units[i].rel_set
+        return list(bs.iter_bits(rel))
+
     def as_joingraph(self, idxs: Optional[list[int]] = None):
         """JoinGraph over (a subset of) units, for exact-DP subcalls.
         Returns (graph, unit index list)."""

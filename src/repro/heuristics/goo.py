@@ -1,8 +1,17 @@
 """GOO — Greedy Operator Ordering (Fegaras '98; paper §6/§7.3 baseline).
 
 Repeatedly joins the connected unit pair with the smallest resulting
-cardinality until one unit remains.  Also serves as the IDP2 seed-plan
-builder (the paper uses GOO for the IDP2 heuristic step).
+cardinality until one unit remains.  Three roles in this codebase:
+
+  * the quality *baseline* every large-query heuristic is measured against
+    (``bench_batch --uniondp`` gates UnionDP's plan-cost ratio vs GOO);
+  * the IDP2 seed-plan builder (the paper uses GOO for the IDP2 heuristic
+    step), and one of the two candidate seed trees of UnionDP's
+    re-optimization passes (``uniondp._reoptimize``);
+  * the opt-in ``goo_floor`` serving guard of ``uniondp.solve`` — formerly a
+    default crutch that hid partitioning regressions behind a
+    ``+goo_floor`` tag, now OFF by default: cost-aware partitioning plus
+    re-optimization beats plain GOO outright (see ``docs/heuristics.md``).
 """
 from __future__ import annotations
 

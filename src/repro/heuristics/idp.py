@@ -168,6 +168,99 @@ def _costly_disjoint_subtrees(root: _TNode, k: int, batch: int) -> list[_TNode]:
     return chosen
 
 
+def tree_from_plan(p) -> _TNode:
+    """Plan tree over *base relations* -> ``_TNode`` tree over unit ids.
+
+    Valid for a fresh ``UnitGraph`` built from base units, where unit ``i``
+    *is* base relation ``i``.  This is how UnionDP's re-optimization loop
+    seeds the round driver with its composite plan instead of a GOO tree:
+    the plan's own join structure becomes the subtree-selection space, so
+    costly subtrees that straddle the previous partition boundaries are
+    exactly re-optimized (IDP2's trick applied across rounds)."""
+    if p.is_leaf:
+        return _TNode(frozenset(p.relations()))
+    l = tree_from_plan(p.left)
+    r = tree_from_plan(p.right)
+    return _TNode(l.uids | r.uids, l, r)
+
+
+def run_rounds(ug: UnitGraph, tree: _TNode, k: int, batch, batch_sub,
+               max_rounds: Optional[int] = None):
+    """IDP2's round driver, shared by ``idp.solve`` and UnionDP's
+    re-optimization loop (``uniondp``).
+
+    Repeatedly: re-cost ``tree`` over ``ug`` (temp-table semantics), select
+    up to ``batch`` unit-disjoint most-costly subtrees with <= k leaves,
+    optimize each subtree's units exactly — the whole round ships as ONE
+    ``optimize_many`` batch via ``batch_sub`` — and collapse each optimized
+    subtree into a composite unit.  Runs until a single unit remains (or
+    ``max_rounds``); returns the final ``Unit`` (greedy GOO finish when
+    stopped early).  Each collapse replaces a subtree by the exact optimum
+    over the *same* unit set with unchanged output cardinality, so the total
+    tree cost is monotone non-increasing round over round.
+    """
+    from .common import expand_unit_plan
+    g = ug.base
+    rounds = 0
+    while True:
+        _recost(tree, ug)
+        if ug.n == 1:
+            break
+        targets = _costly_disjoint_subtrees(tree, k, batch)
+        if (len(targets[0].uids) == len(tree.uids)
+                and len(tree.uids) <= k):
+            targets = [tree]
+        # disjoint targets: every subgraph extracts from the same pre-merge
+        # snapshot and the whole round runs as ONE batched device pass
+        jobs = []
+        for target in targets:
+            jg, idxs = ug.as_joingraph(sorted(target.uids))
+            jobs.append((jg, [ug.units[i] for i in idxs]))
+        plans = batch_sub([jg for jg, _ in jobs])
+        for target, (jg, ulist), plan in zip(targets, jobs, plans):
+            # recompute current indices by unit identity: earlier merges in
+            # this round reindexed ug.units
+            ids = sorted(ug.index_of(t) for t in ulist)
+            base_plan = expand_unit_plan(plan, ulist, g)
+            ug.merge(ids, base_plan)
+            # ug.units reindexed: composite appended at end, others shift.
+            old2new = {}
+            j = 0
+            dropped = set(ids)
+            for old in range(len(ug.units) + len(ids) - 1):
+                if old in dropped:
+                    continue
+                old2new[old] = j
+                j += 1
+            new_leaf = _TNode(frozenset([len(ug.units) - 1]),
+                              unit=ug.units[-1])
+            tree = _replace(tree, target, new_leaf)
+
+            def remap(n: _TNode, new_leaf=new_leaf, old2new=old2new):
+                if n is new_leaf:
+                    return
+                if n.is_leaf:
+                    n.uids = frozenset(old2new[u] for u in n.uids)
+                    return
+                remap(n.left)
+                remap(n.right)
+                n.uids = n.left.uids | n.right.uids
+
+            remap(tree)
+        rounds += 1
+        if max_rounds and rounds >= max_rounds:
+            break
+        if len(tree.uids) == 1 and tree.is_leaf:
+            break
+
+    final_unit = ug.units[-1] if ug.n > 1 else ug.units[0]
+    if ug.n > 1:
+        # stopped early (max_rounds): finish greedily with GOO
+        from .goo import goo_plan as _gp
+        final_unit = _gp(ug)
+    return final_unit
+
+
 def _replace(root: _TNode, target: _TNode, leaf: _TNode) -> _TNode:
     if root is target:
         return leaf
@@ -221,68 +314,11 @@ def solve(g: JoinGraph, k: int = 15, subsolver: str = "mpdp",
                               algorithm=f"idp2_{subsolver}",
                               wall_s=time.perf_counter() - t0)
 
-    tree = _goo_tree(ug)
-    rounds = 0
     # unit-id indirection: _TNode.uids refer to slots in ug.units; merging
-    # rewrites ug.units, so we rebuild uid maps via relsets after each merge
-    while True:
-        _recost(tree, ug)
-        if ug.n == 1:
-            break
-        targets = _costly_disjoint_subtrees(tree, k, batch)
-        if (len(targets[0].uids) == len(tree.uids)
-                and len(tree.uids) <= k):
-            targets = [tree]
-        from .common import expand_unit_plan
-        # disjoint targets: every subgraph extracts from the same pre-merge
-        # snapshot and the whole round runs as ONE batched device pass
-        jobs = []
-        for target in targets:
-            jg, idxs = ug.as_joingraph(sorted(target.uids))
-            jobs.append((jg, [ug.units[i] for i in idxs]))
-        plans = batch_sub([jg for jg, _ in jobs])
-        for target, (jg, ulist), plan in zip(targets, jobs, plans):
-            # recompute current indices by unit identity: earlier merges in
-            # this round reindexed ug.units
-            ids = sorted(ug.index_of(t) for t in ulist)
-            base_plan = expand_unit_plan(plan, ulist, g)
-            ug.merge(ids, base_plan)
-            # ug.units reindexed: composite appended at end, others shift.
-            old2new = {}
-            j = 0
-            dropped = set(ids)
-            for old in range(len(ug.units) + len(ids) - 1):
-                if old in dropped:
-                    continue
-                old2new[old] = j
-                j += 1
-            new_leaf = _TNode(frozenset([len(ug.units) - 1]),
-                              unit=ug.units[-1])
-            tree = _replace(tree, target, new_leaf)
-
-            def remap(n: _TNode, new_leaf=new_leaf, old2new=old2new):
-                if n is new_leaf:
-                    return
-                if n.is_leaf:
-                    n.uids = frozenset(old2new[u] for u in n.uids)
-                    return
-                remap(n.left)
-                remap(n.right)
-                n.uids = n.left.uids | n.right.uids
-
-            remap(tree)
-        rounds += 1
-        if max_rounds and rounds >= max_rounds:
-            break
-        if len(tree.uids) == 1 and tree.is_leaf:
-            break
-
-    # final plan: the single remaining unit's base plan
-    final_unit = ug.units[-1] if ug.n > 1 else ug.units[0]
-    if ug.n > 1:
-        # stopped early (max_rounds): finish greedily with GOO
-        from .goo import goo_plan as _gp
-        final_unit = _gp(ug)
+    # rewrites ug.units, so run_rounds rebuilds uid maps after each merge
+    tree = _goo_tree(ug)
+    final_unit = run_rounds(ug, tree, k, batch, batch_sub,
+                            max_rounds=max_rounds)
     p = cost_plan(final_unit.plan, g)
     return OptimizeResult(plan=p, cost=p.cost, counters=counters,
                           algorithm=f"idp2_{subsolver}",

@@ -1,20 +1,54 @@
-"""UnionDP — the paper's novel graph-conscious heuristic (§4.2, Alg. 4).
+"""UnionDP — the paper's novel graph-conscious heuristic (§4.2, Alg. 4),
+with cost-aware partition boundaries and IDP2-style re-optimization.
 
-Partition the unit graph with a union-find sweep that visits edges in
-increasing ``size(left partition) + size(right partition)`` (ties: cheaper
-edge weight first, so expensive joins end up as cut edges and are applied
-late), unioning while the merged partition stays <= k.  Each partition is
-optimized exactly with MPDP, becomes a composite node, and the procedure
-recurses on the composite graph until it fits a single MPDP call.
+Partition the unit graph with a union-find sweep, optimize every partition
+exactly with MPDP, collapse each into a composite node, and recurse on the
+composite graph until it fits a single MPDP call.  Two things distinguish
+this implementation from the paper's size-greedy baseline:
+
+  * **cost-aware partitioning** (``partition="cost"``, the default): instead
+    of visiting edges by merged-partition *size*, candidate merges are
+    scored by ``cost.np_boundary_cost`` — the estimated cost of the
+    *boundary join* between the two partitions (edge selectivity x boundary
+    cardinality under the real cost model) — and the cheapest boundary is
+    unioned first while the merged partition stays <= k.  Partitions thus
+    absorb the joins whose placement barely matters (tiny dimension chains,
+    strongly-reducing PK-FK clusters), while the expensive skewed boundary
+    joins stay *outside* the sweep, where the exact composite-level DP
+    decides their order — the size-greedy rule instead buried them inside
+    whatever partition the size accounting happened to close.
+    Shared-nothing decomposition quality hinges on *which* boundaries are
+    cut, not how balanced the parts are (Trummer & Koch, arXiv 1511.01768);
+    ``partition="size"`` keeps the legacy rule for comparison
+    (``bench_batch --uniondp`` gates the old-vs-new ratio).
+  * **iterative re-optimization** (``reopt_rounds > 0``, default on): each
+    pass seeds IDP2's round driver (``idp.run_rounds``) with the cheaper of
+    the composite plan's own join tree and a fresh GOO merge tree, then
+    exactly re-optimizes the most costly <= k-leaf subtrees — collapsed
+    composites let later rounds re-order unit sets that straddle the
+    previous partition boundaries.  Passes repeat until one stops improving
+    the total cost (or ``reopt_rounds`` is exhausted); accepted passes are
+    strictly improving, so ``info["round_costs"]`` is monotone
+    non-increasing and the final cost is <= plain GOO by construction
+    (see ``_reoptimize``).
 
 A round's partitions are vertex-disjoint, so their induced subproblems are
-*independent*: they ship to the device as one ``optimize_many`` batch (batch
-folded into the lane dimension) instead of sequential per-partition engine
-runs — the same plans, one pipeline.  The ``mpdp`` subsolver requests the
-cheap lane space per bucket (acyclic partitions -> MPDP:Tree ``sets x m``,
-cyclic -> MPDP-general block prefix-sum) instead of the DPSUB blow-up.  Results carry a GOO quality floor:
-when the partitioned plan loses to the greedy baseline the baseline is
-returned (tagged ``+goo_floor``).
+*independent*: each partitioning round AND each re-optimization pass ships
+its subproblems to the device as one ``optimize_many`` batch (batch folded
+into the lane dimension; ``devices``/``mesh`` shard it over a 1-D device
+mesh, ``pipeline`` overlaps host compaction with device evaluate — results
+stay bit-identical across all of those modes).
+
+The GOO quality floor that used to hide partitioning regressions behind a
+``+goo_floor`` tag is **retired as a default**: cost-aware boundaries plus
+re-optimization beat plain GOO on the skewed PK-FK streams outright
+(gated in ``benchmarks/check_regression.py``).  ``goo_floor=True`` remains
+available as an opt-in belt-and-braces serving guard.
+
+``info`` on the returned ``OptimizeResult`` carries the explain payload:
+``partitions`` (per recursion round, each partition as sorted base-relation
+ids) and ``round_costs`` (total plan cost after the initial partitioned pass
+and after each accepted re-optimization pass).
 """
 from __future__ import annotations
 
@@ -29,7 +63,10 @@ from ..core.plan import Counters, OptimizeResult, cost_plan
 from .common import UnitGraph, expand_unit_plan
 
 
-def _partition(ug: UnitGraph, k: int) -> list[list[int]]:
+def _partition_size_greedy(ug: UnitGraph, k: int) -> list[list[int]]:
+    """Legacy rule (paper Alg. 4): union edges by increasing merged size,
+    ties broken by cheaper edge weight first.  Kept for the quality
+    benchmark's old-vs-new comparison (``partition="size"``)."""
     n = ug.n
     parent = list(range(n))
     size = [1] * n
@@ -68,8 +105,134 @@ def _partition(ug: UnitGraph, k: int) -> list[list[int]]:
     return list(groups.values())
 
 
+def _partition_cost_aware(ug: UnitGraph, k: int) -> list[list[int]]:
+    """Cost-aware union rule: repeatedly merge the partition pair with the
+    *cheapest* boundary join, while the merged size stays <= k.
+
+    Each candidate merge is scored with ``cost.np_boundary_cost(rows_a,
+    rows_b, crossing_sel)`` — edge selectivity x boundary cardinality under
+    the real cost model — over the *current* partitions: per-root aggregated
+    log2 rows plus a dict-of-dicts crossing-selectivity adjacency (seeded
+    from ``ug.sel_adjacency``) are folded on every union.  Cheap boundaries
+    (tiny dimension chains, strongly-reducing PK-FK clusters) are absorbed
+    into partitions, where any internal order is near-free; the *expensive*
+    boundary joins — a skewed PK-FK edge touching a huge fact side — are
+    exactly the ones whose placement decides plan quality, so they are kept
+    out of the union sweep and handed to the exact composite-level DP
+    instead of being buried mid-partition by a size-greedy rule that never
+    looked at the stats.
+
+    A min-heap with lazy revalidation keeps the sweep near O(E log E): stale
+    entries (either side merged since the push) are re-scored and re-pushed;
+    pairs that can no longer fit under k are dropped permanently (partition
+    sizes only grow).  Ties break on unit indices — deterministic sweep.
+    """
+    n = ug.n
+    parent = list(range(n))
+    size = [1] * n
+    rows = [u.rows_log2 for u in ug.units]    # per-root aggregated log2 rows
+    nbr = ug.sel_adjacency()                  # root -> {root: crossing sel}
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    def boundary(ra, rb):
+        return float(cm.np_boundary_cost(rows[ra], rows[rb], nbr[ra][rb]))
+
+    heap = []
+    for (a, b) in ug.edges:
+        heapq.heappush(heap, (boundary(a, b), a, b))
+    while heap:
+        key, a, b = heapq.heappop(heap)
+        ra, rb = find(a), find(b)
+        if ra == rb:
+            continue
+        if size[ra] + size[rb] > k:
+            continue                          # sizes only grow: drop forever
+        cur = boundary(ra, rb)
+        if cur != key:
+            heapq.heappush(heap, (cur, ra, rb))    # lazy key refresh
+            continue
+        # union ra into rb: fold rows and redirect ra's crossing edges
+        parent[ra] = rb
+        size[rb] += size[ra]
+        rows[rb] = max(rows[ra] + rows[rb] + nbr[ra].pop(rb), 0.0)
+        del nbr[rb][ra]
+        for o, s in nbr.pop(ra).items():
+            nbr[o].pop(ra)
+            nbr[o][rb] = nbr[rb][o] = nbr[rb].get(o, 0.0) + s
+            if size[rb] + size[o] <= k:
+                heapq.heappush(heap, (boundary(rb, o), rb, o))
+    groups: dict[int, list[int]] = {}
+    for i in range(n):
+        groups.setdefault(find(i), []).append(i)
+    return list(groups.values())
+
+
+def _partition(ug: UnitGraph, k: int, rule: str = "cost") -> list[list[int]]:
+    """Partition the unit graph into groups of <= k units (every unit
+    appears in exactly one group).  ``rule="cost"`` scores merges by
+    boundary-join cost (default), ``rule="size"`` is the legacy size-greedy
+    sweep."""
+    if rule == "size":
+        return _partition_size_greedy(ug, k)
+    if rule != "cost":
+        raise ValueError(f"unknown partition rule: {rule!r}")
+    return _partition_cost_aware(ug, k)
+
+
+def _reoptimize(g: JoinGraph, plan, k: int, batch_sub, batch: int,
+                max_rounds: int):
+    """Bounded IDP2-style re-optimization over the composite plan.
+
+    Each pass treats the current plan as a tree over the base unit graph and
+    runs ``idp.run_rounds`` — exact re-optimization of the most costly
+    <= k-leaf subtrees, whole rounds batched — seeded with the *cheaper* of
+    two trees (temp-table recost decides):
+
+      * the plan's own join tree: refinement happens *across the previous
+        partition boundaries* — once early rounds collapse cheap subtrees
+        into composite units, later rounds exactly re-order unit sets that
+        straddle what used to be separate partitions;
+      * a fresh GOO merge tree over the unit graph: when the partitioned
+        plan starts behind greedy, the driver instead refines greedy's
+        grouping (classic IDP2), whose refined cost is monotonically <= the
+        GOO plan itself.
+
+    A pass is accepted only if it strictly lowers the total canonical cost,
+    so the returned per-pass cost sequence is monotone non-increasing and
+    the loop stops at the first non-improving pass (or after ``max_rounds``).
+    Consequence: the raw UnionDP result is <= plain GOO (up to f32 rounding)
+    *by construction* — not by plan substitution, which is why the
+    ``goo_floor`` crutch is retired; the served plan always comes out of the
+    exact subsolver.  Returns (best plan, per-pass costs incl. the seed's).
+    """
+    from . import idp as _idp
+    best = plan
+    costs = [best.cost]
+    for _ in range(max_rounds):
+        ug = UnitGraph(g)
+        plan_tree = _idp.tree_from_plan(best)
+        goo_tree = _idp._goo_tree(ug)
+        _idp._recost(plan_tree, ug)
+        _idp._recost(goo_tree, ug)
+        tree = plan_tree if plan_tree.cost <= goo_tree.cost else goo_tree
+        unit = _idp.run_rounds(ug, tree, k, batch, batch_sub)
+        cand = cost_plan(unit.plan, g)
+        if not cand.cost < best.cost:
+            break
+        best = cand
+        costs.append(cand.cost)
+    return best, costs
+
+
 def solve(g: JoinGraph, k: int = 15, subsolver: str = "mpdp",
-          goo_floor: bool = True, devices=None, mesh=None,
+          goo_floor: bool = False, partition: str = "cost",
+          reopt_rounds: int = 4, reopt_batch: int = 4,
+          devices=None, mesh=None,
           pipeline: bool | None = None) -> OptimizeResult:
     t0 = time.perf_counter()
     counters = Counters()
@@ -87,14 +250,17 @@ def solve(g: JoinGraph, k: int = 15, subsolver: str = "mpdp",
             counters.ccp += r.counters.ccp
         return [r.plan for r in rs]
 
+    info: dict = {"partitions": [], "round_costs": []}
     ug = UnitGraph(g)
     while ug.n > k:
-        groups = _partition(ug, k)
+        groups = _partition(ug, k, rule=partition)
         if all(len(gr) == 1 for gr in groups):
             # cannot union anything (all merges would exceed k): force the
             # two cheapest-connected groups together to guarantee progress
             a, b = ug.edges[0]
             groups = [[a, b]] + [[i] for i in range(ug.n) if i not in (a, b)]
+        info["partitions"].append(
+            [ug.rel_ids(sorted(gr)) for gr in groups])
         # capture unit objects up-front: each merge reindexes ug.units.
         # Partitions are disjoint, so every subgraph can be extracted from
         # the pre-merge snapshot and the whole round batched.
@@ -112,16 +278,27 @@ def solve(g: JoinGraph, k: int = 15, subsolver: str = "mpdp",
     p = expand_unit_plan(batch_solve([jg])[0], [ug.units[i] for i in idxs], g)
     p = cost_plan(p, g)
     algo = f"uniondp_{subsolver}"
-    # quality floor: partition boundaries can lose badly to plain GOO on
-    # strongly-skewed PK-FK stats; never serve a plan worse than the greedy
-    # baseline (the floor plan is reported in the algorithm tag).  Pass
-    # goo_floor=False to observe the raw partitioned plan (tests do).
+    if reopt_rounds > 0 and g.n > k:
+        p, info["round_costs"] = _reoptimize(g, p, k, batch_solve,
+                                             reopt_batch, reopt_rounds)
+        algo += "+reopt"
+    else:
+        info["round_costs"] = [p.cost]
+    # opt-in serving guard, OFF by default: the cost-aware partitioner plus
+    # re-optimization beat plain GOO outright on the skewed PK-FK streams
+    # (gated in benchmarks/check_regression.py), so the floor is no longer a
+    # correctness crutch — it remains available for belt-and-braces serving.
     if goo_floor and g.n > k:
         from .goo import solve as _goo_solve
         base = _goo_solve(g)
         if base.cost < p.cost:
             p = base.plan
             algo += "+goo_floor"
+            # keep the explain payload consistent with the served plan:
+            # round_costs stays monotone and ends at the result's cost, and
+            # the raw (pre-floor) cost remains inspectable
+            info["goo_floor_raw_cost"] = info["round_costs"][-1]
+            info["round_costs"] = info["round_costs"] + [base.cost]
     return OptimizeResult(plan=p, cost=p.cost, counters=counters,
-                          algorithm=algo,
+                          algorithm=algo, info=info,
                           wall_s=time.perf_counter() - t0)

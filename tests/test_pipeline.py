@@ -309,3 +309,48 @@ def test_plancache_signature_is_process_stable():
                          capture_output=True, text=True, cwd=os.getcwd(),
                          check=True)
     assert out.stdout.strip() == repr(key)
+
+
+# ============================================== stats-drift invalidation ===
+
+def test_plancache_drift_invalidation():
+    """A stale-stats entry must *miss* instead of replaying a plan chosen
+    for cardinalities that no longer exist: ``invalidate_drift`` drops
+    entries whose recorded per-relation stats drifted beyond their stored
+    quantization epsilon."""
+    g = gen.musicbrainz_query(10, seed=4)           # real table names
+    cache = PlanCache()
+    cache.put(g, engine.optimize(g, "auto"))
+    assert cache.get(g) is not None
+
+    # unchanged stats: nothing dropped, entry still hits
+    rows = {name: float(2.0 ** g.log2_card[v])
+            for v, name in enumerate(g.names)}
+    assert cache.invalidate_drift(rows) == 0
+    assert cache.get(g) is not None
+
+    # a table the entry references quadrupled: entry dropped, the
+    # stale-stats probe (same old graph) now misses and re-optimizes
+    rows[g.names[0]] *= 4.0
+    assert cache.invalidate_drift(rows) == 1
+    assert len(cache) == 0
+    assert cache.get(g) is None
+
+    # unrelated-table drift never touches the entry
+    cache.put(g, engine.optimize(g, "auto"))
+    assert cache.invalidate_drift({"not_a_table_here": 123.0}) == 0
+    assert cache.get(g) is not None
+
+
+def test_plancache_drift_survives_persistence(tmp_path):
+    """The per-entry stats signature + epsilon round-trip through
+    save/load, so a reloaded service can still apply drift invalidation."""
+    path = str(tmp_path / "plans.plancache")
+    g = gen.musicbrainz_query(9, seed=11)
+    cache = PlanCache()
+    cache.put(g, engine.optimize(g, "auto"))
+    cache.save(path)
+    loaded = PlanCache.load(path)
+    assert not loaded.stale_load and len(loaded) == 1
+    assert loaded.invalidate_drift({g.names[2]: 1.0}) == 1   # collapsed table
+    assert loaded.get(g) is None

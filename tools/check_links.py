@@ -1,0 +1,97 @@
+"""Intra-repo markdown link checker — the CI docs gate.
+
+Scans the given markdown files/directories for ``[text](target)`` links and
+fails (exit 1) when a *repo-local* target does not exist, or when a
+``#fragment`` pointing into a checked markdown file names a heading that is
+not there (GitHub anchor slug rules: lowercase, punctuation stripped,
+spaces to dashes).  External links (``http(s)://``, ``mailto:``) are out of
+scope — this gate is about the docs tree not rotting as files move, not
+about the internet.
+
+    python tools/check_links.py README.md docs
+
+No dependencies beyond the standard library, so the CI job needs no
+install step.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+CODE_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style heading anchor: lowercase, drop punctuation (keep
+    alphanumerics/spaces/dashes), spaces -> dashes."""
+    h = re.sub(r"`([^`]*)`", r"\1", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def collect_files(paths: list[str]) -> list[str]:
+    out = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _, files in os.walk(p):
+                out.extend(os.path.join(root, f) for f in sorted(files)
+                           if f.endswith(".md"))
+        else:
+            out.append(p)
+    return out
+
+
+def anchors_of(md_path: str, cache: dict) -> set[str]:
+    if md_path not in cache:
+        with open(md_path, encoding="utf-8") as f:
+            text = CODE_FENCE_RE.sub("", f.read())
+        cache[md_path] = {slugify(m) for m in HEADING_RE.findall(text)}
+    return cache[md_path]
+
+
+def check_file(md_path: str, anchor_cache: dict) -> list[str]:
+    errors = []
+    with open(md_path, encoding="utf-8") as f:
+        raw = f.read()
+    text = CODE_FENCE_RE.sub("", raw)          # links in code blocks: examples
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        target, _, fragment = target.partition("#")
+        base = os.path.dirname(md_path)
+        if not target:                          # same-file #fragment
+            dest = md_path
+        else:
+            dest = os.path.normpath(os.path.join(base, target))
+            if not os.path.exists(dest):
+                errors.append(f"{md_path}: broken link -> {target}")
+                continue
+        if fragment and dest.endswith(".md"):
+            if slugify(fragment) not in anchors_of(dest, anchor_cache):
+                errors.append(
+                    f"{md_path}: missing anchor -> {target}#{fragment}")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    paths = argv or ["README.md", "docs"]
+    files = collect_files(paths)
+    if not files:
+        print("check_links: no markdown files found", file=sys.stderr)
+        return 1
+    anchor_cache: dict = {}
+    errors = []
+    for md in files:
+        errors.extend(check_file(md, anchor_cache))
+    for e in errors:
+        print(e)
+    print(f"check_links: {len(files)} files, "
+          f"{'FAIL' if errors else 'ok'} ({len(errors)} broken)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
