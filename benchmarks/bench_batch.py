@@ -43,6 +43,16 @@ are recorded; ``check_regression.py`` gates both deterministically
 (<= GOO on every query, >= 1.2x geomean improvement on the skewed streams)
 plus the sync-vs-pipelined cost equality of the re-optimization loop.
 
+``--lattice`` (requires ``--devices N``) additionally runs the
+**intra-query lattice** benchmark: one query's DP lane space sharded over
+the mesh (``repro.core.lattice``) on all three spaces — DPSUB on a chain,
+MPDP-general on a cycle, and MPDP:Tree on a 17-relation snowflake that the
+single-device batched path cannot even admit (``nmax`` cap 16).  Every gate
+is deterministic and enforced by ``check_regression.py``: costs bit-identical
+to the solo oracle *and* to the degenerate 1-device lattice run, exactly one
+collective per committed DP level, zero retraces across the timed repeats.
+The frontier speedup vs the solo oracle is reported, never gated.
+
 ``--json`` writes the machine-readable report consumed by
 ``benchmarks/check_regression.py`` (the CI bench-regression gate; the
 ``devices-4`` CI job adds the sharded section to the gated report);
@@ -76,7 +86,8 @@ def _lanes(results):
 
 def bench(nq: int = 32, repeat: int = 3, seed: int = 0,
           devices: int | None = None, pipeline: bool = False,
-          uniondp: bool = False, smoke: bool = False) -> dict:
+          uniondp: bool = False, lattice: bool = False,
+          smoke: bool = False) -> dict:
     from repro.core import engine
     graphs = make_stream(nq, seed)
 
@@ -139,6 +150,102 @@ def bench(nq: int = 32, repeat: int = 3, seed: int = 0,
         out["pipeline"] = bench_pipeline(graphs, repeat)
     if uniondp:
         out["uniondp_quality"] = bench_uniondp_quality(smoke)
+    if lattice:
+        out["lattice"] = bench_lattice(devices, repeat)
+    return out
+
+
+# (space, generator kind, n) — one case per lane space; the snowflake is the
+# frontier case: nmax_bucket(17) = 18 > the batched cap of 16, so only the
+# lattice path can solve it exactly
+_LATTICE_CASES = [("dpsub", "chain", 7),
+                  ("mpdp_general", "cycle", 7),
+                  ("mpdp_tree", "snow", 17)]
+
+
+def _lattice_graph(kind: str, n: int):
+    from repro.workloads import generators as gen
+    if kind == "chain":
+        return gen.chain(n, seed=1)
+    if kind == "cycle":
+        return gen.cycle(n, seed=2)
+    return gen.snowflake(n, seed=3)
+
+
+def bench_lattice(devices: int, repeat: int) -> dict:
+    """Intra-query lattice sharding over a D-device mesh, one case per lane
+    space (``_LATTICE_CASES``).
+
+    Everything gated here is deterministic (``check_regression.py``):
+
+      * ``costs_equal_solo`` / ``costs_equal_1dev`` — the D-device lattice
+        cost must equal both the solo single-device oracle and the
+        degenerate 1-device lattice run, bit-for-bit (the lane partition
+        must relocate work, never change results);
+      * ``collectives_ok`` — each run dispatches exactly one
+        ``min_left_commit`` exchange per committed DP level (``n - 1``),
+        cross-checked against the host-side ``collectives.STATS`` counter
+        (a hot-path collective would have to go through that module);
+      * ``retraces`` — the timed repeats must hit the executable cache
+        (zero compiles after warm-up).
+
+    The frontier case's speedup vs the solo oracle is reported, never
+    gated; on the 17-relation snowflake the solo comparison is only
+    possible at all because the unbatched oracle replans level-by-level —
+    the *batched* path rejects n > 16 outright.
+    """
+    from repro.core import engine
+    from repro.core.exec_cache import EXEC
+    from repro.core.lattice import LatticeShardedEngine, lattice_bucket
+    from repro.distributed import collectives as coll
+
+    out: dict = {"devices": devices, "cases": [],
+                 "costs_equal_solo": True, "costs_equal_1dev": True,
+                 "collectives_ok": True, "retraces": 0}
+    # warm + oracle phase: every solo/1-device/D-device compile lands here
+    # so the timed repeats below can be gated on zero retraces
+    oracle = {}
+    for space, kind, n in _LATTICE_CASES:
+        g = _lattice_graph(kind, n)
+        engine.optimize(g, "auto")                     # solo compile
+        t0 = time.perf_counter()
+        solo = engine.optimize(g, "auto")
+        solo_s = time.perf_counter() - t0
+        r1 = LatticeShardedEngine(g, 1, algorithm=space).run()[0]
+        LatticeShardedEngine(g, devices, algorithm=space).run()
+        oracle[(space, kind, n)] = (g, solo.cost, solo_s, r1.cost)
+    compiles0 = EXEC.total()
+    for space, kind, n in _LATTICE_CASES:
+        g, solo_cost, solo_s, cost_1dev = oracle[(space, kind, n)]
+        commits0 = coll.STATS.snapshot()
+        best, eng, rd = float("inf"), None, None
+        for _ in range(repeat):
+            t0 = time.perf_counter()
+            eng = LatticeShardedEngine(g, devices, algorithm=space)
+            rd = eng.run()[0]
+            best = min(best, time.perf_counter() - t0)
+        commits = coll.STATS.snapshot() - commits0
+        levels = g.n - 1
+        ok = eng.collectives == levels and commits == repeat * levels
+        out["costs_equal_solo"] = bool(out["costs_equal_solo"]
+                                       and rd.cost == solo_cost)
+        out["costs_equal_1dev"] = bool(out["costs_equal_1dev"]
+                                       and rd.cost == cost_1dev)
+        out["collectives_ok"] = bool(out["collectives_ok"] and ok)
+        out["cases"].append({
+            "space": space, "kind": kind, "n": n,
+            "nmax": lattice_bucket(n),
+            "cost": rd.cost,
+            "wall_s": best,
+            "solo_s": solo_s,
+            "speedup_vs_solo": solo_s / best,
+            "collectives": eng.collectives,
+            "levels": levels,
+            "evaluated_lanes": rd.counters.evaluated,
+        })
+    out["retraces"] = EXEC.total() - compiles0
+    if not (out["costs_equal_solo"] and out["costs_equal_1dev"]):
+        print("# WARNING: lattice costs diverged (solo/1-device mismatch)")
     return out
 
 
@@ -334,11 +441,20 @@ def main() -> None:
                          "uniform 30-80-relation streams (all gates "
                          "deterministic: <= GOO per query, geomean "
                          "improvement vs the size-greedy partitioner)")
+    ap.add_argument("--lattice", action="store_true",
+                    help="also bench intra-query lattice sharding (one "
+                         "query's lane space over the mesh; all gates "
+                         "deterministic: costs equal solo + 1-device, one "
+                         "collective per level, zero retraces); needs "
+                         "--devices >= 2")
     ap.add_argument("--smoke", action="store_true",
                     help="trimmed CI mode (16 queries, min-of-2 repeats)")
     ap.add_argument("--json", type=str, default=None,
                     help="write the machine-readable report here")
     args = ap.parse_args()
+    if args.lattice and (args.devices or 0) < 2:
+        ap.error("--lattice shards one query's lane space over a mesh; "
+                 "pass --devices N with N >= 2")
     # must land before the first jax import: backends read XLA_FLAGS once
     from repro.hostdev import ensure_host_devices
     ensure_host_devices(args.devices)
@@ -348,7 +464,8 @@ def main() -> None:
         # one noisy-neighbor blip on a shared CI runner
         nq, repeat = min(nq, 16), 2
     r = bench(nq, repeat, args.seed, devices=args.devices,
-              pipeline=args.pipeline, uniondp=args.uniondp, smoke=args.smoke)
+              pipeline=args.pipeline, uniondp=args.uniondp,
+              lattice=args.lattice, smoke=args.smoke)
     print("mode,queries,wall_s,queries_per_s,evaluated_lanes")
     print(f"sequential,{r['queries']},{r['seq_s']:.3f},{r['seq_qps']:.2f},-")
     for algo, a in r["algorithms"].items():
@@ -378,6 +495,21 @@ def main() -> None:
         print(f"# pipelined[{p['algorithm']}] {p['speedup_vs_sync']:.2f}x vs "
               f"synchronous ({p['qps']:.2f} vs {p['qps_sync']:.2f} q/s), "
               f"costs bit-identical, {p['retraces']} retraces in timed runs")
+    if "lattice" in r:
+        lat = r["lattice"]
+        d = lat["devices"]
+        for c in lat["cases"]:
+            print(f"lattice[{c['space']}]@{d}dev,n={c['n']},"
+                  f"{c['wall_s']:.3f},{c['speedup_vs_solo']:.2f}x vs solo,"
+                  f"{c['evaluated_lanes']}")
+        front = max(lat["cases"], key=lambda c: c["n"])
+        print(f"# lattice {d} devices: costs equal solo "
+              f"{lat['costs_equal_solo']}, equal 1-dev "
+              f"{lat['costs_equal_1dev']}, one collective per level "
+              f"{lat['collectives_ok']}, {lat['retraces']} retraces; "
+              f"frontier n={front['n']} (nmax {front['nmax']} > batched cap) "
+              f"solved in {front['wall_s']:.2f}s, "
+              f"{front['speedup_vs_solo']:.2f}x vs solo oracle")
     if "uniondp_quality" in r:
         u = r["uniondp_quality"]
         print("stream,kind,n,new/goo,new/idp2,old/new,reopt_passes")

@@ -38,6 +38,14 @@ must serve every repeated bucket shape).  The pipelined-vs-sync speedup is
 reported, never gated — on a 2-core CI container the overlap has nothing to
 hide behind.
 
+When the baseline carries a ``lattice`` section (from ``bench_batch
+--lattice --devices N``), the intra-query lattice path is gated on its
+deterministic invariants only: the D-device lattice cost must equal both the
+solo oracle's and the 1-device lattice run's bit-for-bit, every run must
+dispatch exactly one level-commit collective per committed DP level, and the
+timed repeats must trigger zero retraces.  The frontier speedup vs the solo
+oracle is reported, never gated.
+
 When the baseline carries a ``uniondp_quality`` section (from ``bench_batch
 --uniondp``), the plan-quality gates fire — all fully deterministic (fixed
 generator seeds, cost ratios, no timing):
@@ -92,7 +100,46 @@ def check(current: dict, baseline: dict, tolerance: float = 0.25) -> list[str]:
             f"{algos['dpsub']['evaluated_lanes']}")
     errors += check_sharded(current, baseline, tolerance)
     errors += check_pipeline(current, baseline)
+    errors += check_lattice(current, baseline)
     errors += check_uniondp(current, baseline)
+    return errors
+
+
+def check_lattice(current: dict, baseline: dict) -> list[str]:
+    """Deterministic intra-query lattice gates: D-device costs equal the
+    solo oracle and the 1-device lattice bit-for-bit, exactly one collective
+    per committed DP level, zero retraces in the timed repeats.  Timings are
+    reported only."""
+    base_l = baseline.get("lattice")
+    cur_l = current.get("lattice")
+    if base_l is None:
+        if cur_l is not None:
+            print("note: current report has a lattice section but the "
+                  "baseline does not — lattice gates are vacuous until the "
+                  "baseline is refreshed with bench_batch --lattice")
+        return []
+    if cur_l is None:
+        print("note: baseline has a lattice section but the current report "
+              "was benched without --lattice; lattice checks skipped "
+              "(the devices-4 CI job runs the gating configuration)")
+        return []
+    errors: list[str] = []
+    if not cur_l.get("costs_equal_solo", False):
+        errors.append("[lattice] sharded cost diverged from the solo "
+                      "single-device oracle (must be bit-identical)")
+    if not cur_l.get("costs_equal_1dev", False):
+        errors.append("[lattice] D-device cost diverged from the 1-device "
+                      "lattice run (the lane partition must relocate work, "
+                      "never change results)")
+    if not cur_l.get("collectives_ok", False):
+        errors.append("[lattice] collective count != committed DP levels "
+                      "(memo exchange must happen exactly once per level "
+                      "commit — no hot-path collectives)")
+    if cur_l.get("retraces", 0) > base_l.get("retraces", 0):
+        errors.append(
+            f"[lattice] timed repeats retraced kernels: "
+            f"{cur_l['retraces']} > baseline {base_l['retraces']} "
+            "(repeated lattice engines must hit the executable cache)")
     return errors
 
 
@@ -230,6 +277,18 @@ def main() -> int:
         print(f"[pipeline:{p['algorithm']}] qps {p['qps']:.2f} "
               f"({p['speedup_vs_sync']:.2f}x vs sync) "
               f"costs_equal {p['costs_equal']} retraces {p['retraces']}")
+    if "lattice" in current:
+        lat = current["lattice"]
+        d = lat["devices"]
+        for c in lat["cases"]:
+            print(f"[lattice:{c['space']}@{d}dev] n={c['n']} "
+                  f"wall {c['wall_s']:.3f}s "
+                  f"({c['speedup_vs_solo']:.2f}x vs solo) "
+                  f"collectives {c['collectives']}/{c['levels']}")
+        print(f"[lattice] costs_equal_solo {lat['costs_equal_solo']} "
+              f"costs_equal_1dev {lat['costs_equal_1dev']} "
+              f"collectives_ok {lat['collectives_ok']} "
+              f"retraces {lat['retraces']}")
     if "uniondp_quality" in current:
         u = current["uniondp_quality"]
         print(f"[uniondp] worst vs goo {u['worst_ratio_vs_goo']:.4f}x "

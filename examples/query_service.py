@@ -5,14 +5,21 @@ A stream of generated analytic queries (10-56 relations — the random walk
 restarts on stall, so the full 56-table schema is reachable) flows through
 the PostgreSQL-style policy the paper enables:
 
-    n <= EXACT_LIMIT   -> exact MPDP through the admission-controlled
+    n <= exact limit   -> exact MPDP through the admission-controlled
                           streaming service (``repro.core.service``): queries
                           are grouped into (NMAX bucket, lane space) flights
                           behind a canonical-signature plan cache, flight i's
                           host finalize overlaps flight i+1's device work,
                           and per-query latency percentiles are reported
-    n >  EXACT_LIMIT   -> UnionDP(MPDP, k)      (paper §4.2; its per-round
+    n >  exact limit   -> UnionDP(MPDP, k)      (paper §4.2; its per-round
                           partitions batch internally too)
+
+The exact limit is ``EXACT_LIMIT`` (14) on a single device; with
+``--devices N`` it rises to ``EXACT_LIMIT_LATTICE`` (18), because the
+service admits oversized queries as intra-query *lattice* flights
+(``repro.core.lattice``: one query's DP lane space sharded over the mesh,
+replicated per-device memo, one collective per committed level) instead of
+bouncing them to the heuristic tier.
 
 ``--devices N`` shards every batched pass (the exact tier AND UnionDP's
 per-round partitions) over an N-device ``batch`` mesh — on CPU the devices
@@ -36,7 +43,9 @@ import argparse
 import os
 import time
 
-EXACT_LIMIT = 14      # CPU-container budget; 25 on the paper's GPU
+EXACT_LIMIT = 14           # CPU-container budget; 25 on the paper's GPU
+EXACT_LIMIT_LATTICE = 18   # with a mesh: lattice flights shard one query's
+                           # lane space, so exact DP reaches further
 
 
 def optimize_stream(graphs, cache, devices=None, pipeline=None):
@@ -47,7 +56,8 @@ def optimize_stream(graphs, cache, devices=None, pipeline=None):
     from repro.core import service
     from repro.heuristics import uniondp
     results = [None] * len(graphs)
-    exact_idx = [i for i, g in enumerate(graphs) if g.n <= EXACT_LIMIT]
+    limit = EXACT_LIMIT_LATTICE if devices else EXACT_LIMIT
+    exact_idx = [i for i, g in enumerate(graphs) if g.n <= limit]
     report = None
     if exact_idx:
         rs, report = service.optimize_stream(
@@ -147,9 +157,10 @@ def main():
         print(f"\nflights ({'pipelined' if pipelined else 'synchronous'} "
               "engines, finalize overlapped):")
         for f in report.flights:
+            tag = " lattice" if f.lattice else ""
             print(f"  (nmax={f.nmax:2d}, {f.space:12s}) x{len(f.queries)} "
                   f"wall={1e3*f.wall_s:7.1f}ms "
-                  f"finalize={1e3*f.finalize_s:6.1f}ms")
+                  f"finalize={1e3*f.finalize_s:6.1f}ms{tag}")
         pct = report.latency_percentiles()
         print("exact-tier latency: " +
               " ".join(f"p{p}={1e3*v:.1f}ms" for p, v in pct.items()))

@@ -895,6 +895,29 @@ def bucket_pending(graphs, pending: list[int], algorithm: str):
     return buckets, solo
 
 
+def lattice_pending(graphs, solo: list[int], algorithm: str):
+    """Split the solo fallback list into lattice-sharded flights and true
+    solos (mesh runs only).  A query is lattice-eligible when it has a
+    batched lane space but is too big for the stacked batch memo
+    (``nmax_bucket(n) > NMAX_BATCH``) and still fits the lattice cap —
+    exactly the queries that used to pay the single-device memory-capped
+    ``engine.optimize`` path.  Returns ``(lattice, rest)`` with ``lattice``
+    a list of ``(stream index, lane space)``.
+    """
+    from .lattice import NMAX_LATTICE
+    lattice: list[tuple[int, str]] = []
+    rest: list[int] = []
+    for qi in solo:
+        g = graphs[qi]
+        space = _lane_space(g, algorithm)
+        if (space is not None and g.n >= 2
+                and bs.nmax_bucket(g.n) > NMAX_BATCH and g.n <= NMAX_LATTICE):
+            lattice.append((qi, space))
+        else:
+            rest.append(qi)
+    return lattice, rest
+
+
 def resolve_deferred(graphs, results, cache, deferred, dup_rep) -> None:
     """Resolve deduped duplicates as cache hits (re-inserting the
     representative when a tiny LRU evicted it mid-stream)."""
@@ -927,7 +950,12 @@ def optimize_many(graphs: list[JoinGraph], algorithm: str = "auto",
       mesh over the first N devices (raising, never truncating, when fewer
       exist), ``mesh=`` supplies one.  Both default to the single-device
       in-process ``BatchEngine``; costs/plans are bit-identical either way,
-      a 1-device mesh being the degenerate case.
+      a 1-device mesh being the degenerate case.  With a mesh present the
+      dispatcher also routes *oversized* solo queries
+      (``nmax_bucket(n) > NMAX_BATCH``, ``n <= lattice.NMAX_LATTICE``) to
+      the intra-query ``lattice.LatticeShardedEngine`` — the lane space of
+      the single query sharded over the same mesh — instead of the
+      memory-capped per-query fallback.
     * ``pipeline``: run the batched engines pipelined (host compaction of
       level i+1 under device evaluate of level i; bit-identical results).
       ``None`` defers to the ``REPRO_PIPELINE`` env flag.
@@ -945,6 +973,9 @@ def optimize_many(graphs: list[JoinGraph], algorithm: str = "auto",
     pending = probe_stream(graphs, results, cache, algorithm)
     pending, deferred, dup_rep = dedup_pending(graphs, pending, cache)
     buckets, solo = bucket_pending(graphs, pending, algorithm)
+    lattice: list[tuple[int, str]] = []
+    if shard_mesh is not None:
+        lattice, solo = lattice_pending(graphs, solo, algorithm)
 
     # sub-batch step: per-shard sub-batches stay capped at max_batch
     step = max_batch if shard_mesh is None else \
@@ -963,6 +994,13 @@ def optimize_many(graphs: list[JoinGraph], algorithm: str = "auto",
                 results[qi] = r
                 if cache is not None:
                     cache.put(graphs[qi], r)
+    for qi, space in lattice:
+        from .lattice import LatticeShardedEngine
+        r = LatticeShardedEngine(graphs[qi], shard_mesh, chunk=chunk,
+                                 algorithm=space, pipeline=pipeline).run()[0]
+        results[qi] = r
+        if cache is not None:
+            cache.put(graphs[qi], r)
     for qi in solo:
         r = _eng.optimize(graphs[qi], algorithm, chunk=chunk)
         results[qi] = r

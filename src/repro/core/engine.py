@@ -573,12 +573,25 @@ class ExactEngine:
 
 
 def optimize(g: JoinGraph, algorithm: str = "auto", chunk: int = CHUNK,
-             cyc_cap: int = CYC_CAP_DEFAULT,
-             enum: str = "unrank") -> OptimizeResult:
+             cyc_cap: int = CYC_CAP_DEFAULT, enum: str = "unrank",
+             lattice_devices=None, lattice_mesh=None) -> OptimizeResult:
     """Exact join-order optimization.  algorithm in
     {auto, mpdp, mpdp_tree, mpdp_general, dpsub, dpsize, dpccp};
-    enum in {unrank (paper Alg.5), expand (beyond-paper frontier growth)}."""
+    enum in {unrank (paper Alg.5), expand (beyond-paper frontier growth)}.
+
+    ``lattice_devices=N`` (or ``lattice_mesh=``) shards this one query's DP
+    lane space across a 1-D device mesh (``core.lattice``): the memo drops
+    from one ``1 << nmax_bucket(n)`` table to a replicated
+    ``1 << lattice_bucket(n)`` table per device and each device evaluates
+    only its lane slice — bit-identical costs/plans, with exactly one
+    collective per committed level.  Supported for the dpsub / mpdp_tree /
+    mpdp_general lane spaces (``auto``/``mpdp`` resolve by topology)."""
     from . import dpccp as _dpccp
+    if lattice_devices is not None or lattice_mesh is not None:
+        from . import lattice as _lat
+        return _lat.optimize_lattice(g, algorithm=algorithm, chunk=chunk,
+                                     cyc_cap=cyc_cap, devices=lattice_devices,
+                                     mesh=lattice_mesh)
     if algorithm == "dpccp":
         return _dpccp.solve(g)
     if g.n == 1:

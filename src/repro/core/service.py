@@ -37,7 +37,13 @@ and the double-buffered stream loop interleaves them across flights:
 
 Solo queries (bucket rejects: n > NMAX cap, exotic statics) fall back to
 per-query ``engine.optimize`` after all flights land; deferred duplicates
-resolve last, off the canonical results (``resolve_deferred``).
+resolve last, off the canonical results (``resolve_deferred``).  With a
+mesh, oversized-but-exact-eligible queries (``nmax_bucket(n) > NMAX_BATCH``,
+``n <= lattice.NMAX_LATTICE``) are instead admitted as single-query
+**lattice flights** (``lattice.LatticeShardedEngine``: the one query's lane
+space sharded over the mesh) — they ride the same flight lifecycle, marked
+``FlightReport.lattice`` and counted in ``StreamReport.lattice``, so big
+queries stop falling out of the exact path entirely.
 
 Results are bit-identical to ``optimize_many`` over the same stream by
 construction: the probe/dedup/bucket stages are the *same functions*
@@ -53,7 +59,7 @@ import time
 import numpy as np
 
 from .batch import (MAX_BATCH, BatchEngine, bucket_pending, dedup_pending,
-                    probe_stream, resolve_deferred)
+                    lattice_pending, probe_stream, resolve_deferred)
 from .engine import CHUNK
 from .joingraph import JoinGraph
 from .plan import OptimizeResult
@@ -65,6 +71,7 @@ class FlightReport:
     nmax: int
     space: str
     queries: list[int]             # stream indices, admission order
+    lattice: bool = False          # single-query intra-query lattice flight
     wall_s: float = 0.0            # run_levels dispatch -> finalize done
     finalize_s: float = 0.0        # host-only finalize share (overlappable)
 
@@ -81,6 +88,7 @@ class StreamReport:
     wall_s: float = 0.0
     cache_hits: int = 0
     solo: int = 0                  # queries that fell back to per-query runs
+    lattice: int = 0               # finalized intra-query lattice flights
 
     def latency_percentiles(self, ps=(50, 95, 99)) -> dict[int, float]:
         if not self.latency_s:
@@ -114,21 +122,35 @@ class StreamOptimizer:
               ) -> tuple[list[FlightReport], list[int]]:
         """Group ``idxs`` into (NMAX bucket, lane space) flights — the
         shared ``batch.bucket_pending`` grouping, split at the flight cap;
-        ungroupable queries come back as the solo list."""
+        ungroupable queries come back as the solo list.  With a mesh,
+        oversized exact-eligible queries become single-query lattice
+        flights instead of solos (``batch.lattice_pending``)."""
         buckets, solo = bucket_pending(graphs, idxs, self.algorithm)
         step = self.max_flight
+        latt: list[tuple[int, str]] = []
         if self.mesh is not None:
             from . import shard as _shard
             step *= _shard.mesh_size(self.mesh)
+            latt, solo = lattice_pending(graphs, solo, self.algorithm)
         flights = [FlightReport(b, space, idxs_b[s0: s0 + step])
                    for (b, space), idxs_b in sorted(buckets.items())
                    for s0 in range(0, len(idxs_b), step)]
+        if latt:
+            from .lattice import lattice_bucket
+            flights += [FlightReport(lattice_bucket(graphs[qi].n), space,
+                                     [qi], lattice=True)
+                        for qi, space in latt]
         return flights, solo
 
     def _spawn(self, graphs: list[JoinGraph], fl: FlightReport):
         """Build the flight's engine and dispatch its level loop."""
         members = [graphs[qi] for qi in fl.queries]
-        if self.mesh is None:
+        if fl.lattice:
+            from .lattice import LatticeShardedEngine
+            eng = LatticeShardedEngine(members[0], self.mesh,
+                                       chunk=self.chunk, algorithm=fl.space,
+                                       pipeline=self.pipeline)
+        elif self.mesh is None:
             eng = BatchEngine(members, chunk=self.chunk, algorithm=fl.space,
                               pipeline=self.pipeline)
         else:
@@ -154,6 +176,8 @@ class StreamOptimizer:
         fl.wall_s = done - t_flight
         for qi in fl.queries:
             report.latency_s[qi] = done - t_stream
+        if fl.lattice:
+            report.lattice += 1
         report.flights.append(fl)
 
     # ------------------------------------------------------------ stream ---

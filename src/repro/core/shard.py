@@ -72,6 +72,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..distributed.compat import shard_map_compat
 from . import bitset as bs
 from . import blocks as bl
 from . import cost as cm
@@ -157,16 +158,18 @@ def _sharded(fn, mesh: Mesh, donate: tuple = (), **statics):
 
     Every array argument and output carries a leading device axis sharded
     ``P(batch)``; the body strips it (each device's block has leading dim 1)
-    and calls ``fn`` — one of the raw ``core.batch`` chunk kernels or the
-    scatter body — unchanged, so per-device numerics are exactly the
-    single-device ones and no collectives can appear.  Wrappers are cached
+    and calls ``fn`` — one of the raw ``core.batch`` chunk kernels, the
+    scatter body, or the lattice level-commit exchange — unchanged, so
+    per-device numerics are exactly the single-device ones.  The chunk/
+    scatter bodies are collective-free; only the lattice commit body
+    (``distributed.collectives.min_left_commit``) reduces over the ``batch``
+    axis, and it is dispatched once per committed level.  Wrappers are cached
     per (fn, mesh, statics) so each bucket shape compiles once; traces are
     counted in ``exec_cache.EXEC`` under the identity-free key.
     """
     key = (fn, mesh, donate, tuple(sorted(statics.items())))
     wrapped = _WRAP_CACHE.get(key)
     if wrapped is None:
-        from ..distributed.collectives import shard_map_compat
         ckey = _exec_key(fn, mesh, statics)
 
         def inner(*args):

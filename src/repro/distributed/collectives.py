@@ -1,4 +1,11 @@
-"""Distributed-optimization tricks: compressed gradient collectives.
+"""Cross-device collectives: the lattice level-commit exchange + compressed
+gradient reductions.
+
+``min_left_commit`` is the **single** collective of the lattice-sharded
+exact DP (``core.lattice``): one (min-cost, max-left tie-break) exchange
+per committed level, fused with the replicated memo scatter.  Its host-side
+invocation count is tracked in ``STATS`` so tests and the bench gate can
+assert "collectives only at level commit" (count == committed levels).
 
 ``int8_psum``: block-scaled int8 all-reduce via shard_map — 4x less DCN
 traffic for cross-pod gradient reduction (the thin `pod` axis is the
@@ -9,33 +16,62 @@ relative quantization step; AdamW's epsilon dominates it in practice.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+# the one version-compat shim, re-exported for existing import sites
+# (tests assert this *is* compat.shard_map_compat — do not redefine here)
+from .compat import shard_map_compat  # noqa: F401
+
 BLOCK = 256
 
 
-def shard_map_compat(f, mesh, in_specs, out_specs, check=False):
-    """shard_map across JAX versions: top-level ``jax.shard_map`` with
-    ``check_vma`` (new) vs ``jax.experimental.shard_map`` with ``check_rep``
-    (<= 0.4.x).  The kwarg is picked by signature inspection so genuine
-    construction errors propagate instead of being retried away."""
-    import inspect
-    try:
-        from jax import shard_map as sm
-    except ImportError:
-        from jax.experimental.shard_map import shard_map as sm
-    params = inspect.signature(sm).parameters
-    if "check_vma" in params:
-        kw = {"check_vma": check}
-    elif "check_rep" in params:
-        kw = {"check_rep": check}
-    else:
-        kw = {}
-    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+class CollectiveStats:
+    """Host-side accounting of collective dispatches.
+
+    ``level_commits`` counts ``min_left_commit`` exchange *calls* (each is
+    exactly one cross-device reduce per committed DP level).  Counting on
+    the host, at the call site, keeps the invariant observable without
+    instrumenting XLA: a hot-path collective would have to go through this
+    module to exist at all."""
+
+    def __init__(self) -> None:
+        self.level_commits = 0
+
+    def record_commit(self) -> None:
+        self.level_commits += 1
+
+    def snapshot(self) -> int:
+        return self.level_commits
+
+
+STATS = CollectiveStats()
+
+
+def min_left_commit(memo_cost, memo_left, idx, cost, left, *,
+                    axis: str, cap: int = 0, flat: int = 0):
+    """Level-commit exchange body (runs inside a shard_map over ``axis``).
+
+    Each device holds its partial per-set best arrays for the level —
+    ``cost``/``left``: the (min cost, max-left-bitmap tie-break) over the
+    device's slice of the level's lanes, padded to ``cap`` with (INF, 0).
+    The exchange combines them with the same associative semiring the host
+    merges use (``engine._merge_best``): min cost across devices, then max
+    left bitmap among the devices achieving it — so any partition of the
+    lanes yields bit-identical memo contents.  The combined values are
+    scattered straight into the replicated memo (pad index ``flat`` drops),
+    keeping every device's memo row identical after the commit.
+
+    Sets with no finite candidate scatter (INF, 0) — by value a no-op, since
+    each set commits exactly once at its own level and starts at (INF, 0).
+    ``cap``/``flat`` only disambiguate the executable-cache key.
+    """
+    best = jax.lax.pmin(cost, axis)
+    tie = jnp.where((cost == best) & jnp.isfinite(best), left, jnp.int32(0))
+    bleft = jax.lax.pmax(tie, axis)
+    return (memo_cost.at[idx].set(best, mode="drop"),
+            memo_left.at[idx].set(bleft, mode="drop"))
 
 
 def _quant(x):

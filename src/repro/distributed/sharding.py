@@ -1,4 +1,17 @@
-"""Parameter / batch / cache sharding rules (DP+FSDP x TP x EP x SP).
+"""Sharding rules: the DP lane partitioner + LLM param/batch/cache specs.
+
+``partition_lanes`` is the lattice-sharding primitive (``core.lattice``):
+it splits one DP level's lane space — DPSUB ``sets x 2^i`` lanes, MPDP:Tree
+``sets x m`` lanes, or the MPDP-general block prefix-sum — into contiguous,
+balanced per-device ranges.  Contiguity matters twice over: filter output
+concatenated in device order stays in global (colex-ascending) set order,
+and evaluate chunks keep monotone segment ids so the in-chunk segment
+prunes stay valid.  Property tests (``tests/test_lattice_shard.py``) pin
+disjointness, exact cover and balance for arbitrary totals and device
+counts.
+
+The rest of the module is parameter / batch / cache sharding rules for the
+training/serving stack (DP+FSDP x TP x EP x SP).
 
 Policy (per pod: data=16 is the FSDP+batch axis, model=16 is the tensor/
 expert axis; the multi-pod `pod` axis joins the batch axes, while params
@@ -26,6 +39,33 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..launch.mesh import dp_axes
 
+
+# ---------------------------------------------------- DP lane partitioner --
+
+def partition_lanes(total: int, parts: int) -> np.ndarray:
+    """Balanced contiguous partition of ``[0, total)`` into ``parts`` ranges.
+
+    Returns int64 offsets of shape ``(parts + 1,)``: part ``d`` owns lanes
+    ``[offsets[d], offsets[d + 1])``.  The first ``total % parts`` parts get
+    one extra lane, so sizes differ by at most one; ``total == 0`` yields
+    ``parts`` empty ranges.  Disjointness and exact cover are structural
+    (prefix sums of non-negative sizes); the per-device lane windows built
+    from these offsets mask everything outside ``[offsets[d], offsets[d+1])``
+    as dead lanes, which carry INF candidates and can never win a commit.
+    """
+    if parts < 1:
+        raise ValueError(f"need at least 1 partition, requested {parts}")
+    if total < 0:
+        raise ValueError(f"negative lane total {total}")
+    base, rem = divmod(int(total), parts)
+    sizes = np.full(parts, base, np.int64)
+    sizes[:rem] += 1
+    offs = np.zeros(parts + 1, np.int64)
+    np.cumsum(sizes, out=offs[1:])
+    return offs
+
+
+# ------------------------------------------------------------ mesh helpers --
 
 def _axis_size(mesh, axes) -> int:
     if axes is None:

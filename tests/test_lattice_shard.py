@@ -1,0 +1,344 @@
+"""Intra-query lattice sharding: device-emulated differential + property suite.
+
+``tests/conftest.py`` forces 4 emulated CPU devices, so this file can pin
+``core.lattice`` — one query's DP lane space partitioned over the mesh —
+**bit-identical** to the single-device engines at every device count, for
+all three lane spaces (dpsub / mpdp_tree / mpdp_general), sync and
+pipelined, vector and Pallas-interpret.  It also pins the structural
+contracts: the lane partitioner's disjoint exact cover, memo replicas
+identical after every commit (inert/padded lanes never win), collectives
+only at level commit (count == n - 1), zero retraces on repeated shapes,
+the dispatcher/service admission policy, and the single shard_map shim.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import engine, service
+from repro.core.batch import NMAX_BATCH, BatchEngine, optimize_many
+from repro.core.lattice import (NMAX_LATTICE, LatticeShardedEngine,
+                                lattice_bucket, optimize_lattice)
+from repro.core.plan import validate_plan
+from repro.distributed import collectives as coll
+from repro.distributed.sharding import partition_lanes
+from repro.workloads import generators as gen
+from tests.helpers import rand_graph, given, settings, st
+
+NDEV = len(jax.devices())
+
+
+def needs(d):
+    return pytest.param(d, marks=pytest.mark.skipif(
+        NDEV < d, reason=f"needs {d} devices (have {NDEV}; conftest asks "
+                         "for 4 emulated CPU devices)"))
+
+
+def plan_shape(p):
+    if p.is_leaf:
+        return p.rel_set
+    return (p.rel_set, plan_shape(p.left), plan_shape(p.right))
+
+
+# small graphs (one nmax-8 bucket) keep the compile count bounded; the
+# lattice engine's per-query statics are shared across every test below
+def tree_graphs():
+    return [gen.chain(6, 1), gen.star(7, 2), gen.snowflake(8, 3)]
+
+
+def mixed_graphs():
+    return [gen.chain(6, 1), gen.cycle(7, 2), rand_graph(8, 3, 4)]
+
+
+def graphs_for(space):
+    return tree_graphs() if space == "mpdp_tree" else mixed_graphs()
+
+
+@pytest.fixture(scope="module")
+def oracle():
+    """Per-space sequential results (the bit-identity reference)."""
+    return {space: [engine.optimize(g, space) for g in graphs_for(space)]
+            for space in ("dpsub", "mpdp_tree", "mpdp_general")}
+
+
+# ======================================================= lane partitioner ==
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 5000), st.integers(1, 4))
+def test_partition_lanes_properties(total, parts):
+    offs = partition_lanes(total, parts)
+    assert offs.shape == (parts + 1,)
+    assert offs[0] == 0 and offs[-1] == total          # exact cover
+    sizes = np.diff(offs)
+    assert (sizes >= 0).all()                          # monotone: disjoint
+    assert sizes.max() - sizes.min() <= 1              # balanced
+    # contiguity: concatenating the ranges IS [0, total)
+    got = np.concatenate([np.arange(offs[d], offs[d + 1])
+                          for d in range(parts)])
+    assert np.array_equal(got, np.arange(total))
+
+
+def test_partition_lanes_rejects_bad_inputs():
+    with pytest.raises(ValueError):
+        partition_lanes(10, 0)
+    with pytest.raises(ValueError):
+        partition_lanes(-1, 2)
+
+
+def test_lattice_bucket():
+    assert lattice_bucket(6) == 8
+    assert lattice_bucket(16) == 16                    # == nmax_bucket here
+    assert lattice_bucket(17) == 18                    # finer than the 24 jump
+    assert lattice_bucket(NMAX_LATTICE) == NMAX_LATTICE
+    with pytest.raises(ValueError):
+        lattice_bucket(NMAX_LATTICE + 1)
+
+
+# ================================================ differential: lane spaces ==
+
+@pytest.mark.parametrize("devices", [needs(1), needs(2), needs(4)])
+@pytest.mark.parametrize("space", ["dpsub", "mpdp_tree", "mpdp_general"])
+def test_lattice_bit_identical(space, devices, oracle):
+    for g, s in zip(graphs_for(space), oracle[space]):
+        b = BatchEngine([g], algorithm=space).run()[0]
+        eng = LatticeShardedEngine(g, devices, algorithm=space)
+        r = eng.run()[0]
+        assert r.cost == s.cost              # bit-identical, not approximate
+        assert plan_shape(r.plan) == plan_shape(s.plan)
+        validate_plan(r.plan, g)
+        assert r.algorithm == f"lattice_{space}"
+        # evaluated-lane counters: the partition is an exact cover, so the
+        # per-device counts must SUM to the single-device batched figures
+        assert r.counters.evaluated == b.counters.evaluated
+        assert r.counters.ccp == b.counters.ccp
+        # replication invariant: every commit left all memo replicas equal
+        # (a padded/dead lane winning anywhere would break this)
+        mc, ml = eng.memo_replicas()
+        for d in range(1, eng.D):
+            assert (mc[d] == mc[0]).all()
+            assert (ml[d] == ml[0]).all()
+
+
+@pytest.mark.parametrize("devices", [needs(2), needs(4)])
+def test_lattice_pipelined_bit_identical(devices, oracle):
+    for space in ("dpsub", "mpdp_tree", "mpdp_general"):
+        g = graphs_for(space)[0]
+        s = oracle[space][0]
+        r = LatticeShardedEngine(g, devices, algorithm=space,
+                                 pipeline=True).run()[0]
+        assert r.cost == s.cost
+        assert plan_shape(r.plan) == plan_shape(s.plan)
+
+
+@pytest.mark.parametrize("devices", [needs(2)])
+def test_lattice_pallas_interpret(devices, monkeypatch, oracle):
+    monkeypatch.setenv("REPRO_PALLAS", "1")
+    for space in ("dpsub", "mpdp_tree", "mpdp_general"):
+        g = graphs_for(space)[1]
+        s = oracle[space][1]
+        eng = LatticeShardedEngine(g, devices, algorithm=space)
+        assert eng.pallas
+        r = eng.run()[0]
+        assert r.cost == s.cost
+        assert plan_shape(r.plan) == plan_shape(s.plan)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(4, 9), st.integers(0, 3), st.integers(1, 3),
+       st.integers(0, 10_000))
+def test_lattice_random_graphs_property(n, extra, devices, seed):
+    """Uneven lane counts / random topologies: lattice == solo, replicas
+    equal (inert lanes never win a commit) at any device count <= 3."""
+    if devices > NDEV:
+        devices = NDEV
+    g = rand_graph(n, extra, seed)
+    s = engine.optimize(g, "auto")
+    space = "mpdp_tree" if g.is_tree() else "mpdp_general"
+    eng = LatticeShardedEngine(g, devices, algorithm=space)
+    r = eng.run()[0]
+    assert r.cost == s.cost
+    mc, ml = eng.memo_replicas()
+    for d in range(1, eng.D):
+        assert (mc[d] == mc[0]).all()
+        assert (ml[d] == ml[0]).all()
+
+
+# =============================================== collectives + exec cache ==
+
+@pytest.mark.parametrize("devices", [needs(2), needs(4)])
+def test_collectives_only_at_level_commit(devices):
+    g = gen.chain(7, 11)
+    before = coll.STATS.snapshot()
+    eng = LatticeShardedEngine(g, devices, algorithm="mpdp_tree")
+    eng.run()
+    # connected graph: levels 2..n commit exactly once each
+    assert eng.collectives == g.n - 1
+    assert coll.STATS.snapshot() - before == g.n - 1
+
+
+@pytest.mark.parametrize("devices", [needs(2)])
+def test_lattice_zero_retraces_on_repeat(devices):
+    LatticeShardedEngine(gen.chain(6, 21), devices,
+                         algorithm="mpdp_tree").run()
+    eng = LatticeShardedEngine(gen.chain(6, 22), devices,
+                               algorithm="mpdp_tree")
+    eng.run()
+    st2 = eng.stats
+    assert st2["retraces"] == 0, st2
+    assert st2["compiles"]                 # the keys exist and were counted
+
+
+def test_shard_map_shim_single_source():
+    """Satellite 3: every import site resolves to the one compat shim."""
+    from repro.core import shard as core_shard
+    from repro.distributed import compat
+    assert coll.shard_map_compat is compat.shard_map_compat
+    assert core_shard.shard_map_compat is compat.shard_map_compat
+
+
+# ========================================================== frontier: n=17 ==
+
+@pytest.mark.parametrize("devices", [needs(4)])
+def test_frontier_exact_beyond_batch_cap(devices):
+    """The acceptance headline: an NMAX-18 query (beyond the batched path's
+    hard cap) solves exactly on the 4-device mesh, bit-identical to the
+    memory-hungry solo oracle."""
+    g = gen.snowflake(17, seed=3)
+    assert g.is_tree()
+    with pytest.raises(ValueError, match="nmax <= 16"):
+        BatchEngine([g], algorithm="mpdp_tree")
+    rs = optimize_many([g], devices=devices)
+    assert rs[0].algorithm == "lattice_mpdp_tree"
+    s = engine.optimize(g, "auto")         # solo oracle: 2^24 memo
+    assert rs[0].cost == s.cost
+    assert plan_shape(rs[0].plan) == plan_shape(s.plan)
+    validate_plan(rs[0].plan, g)
+
+
+# ============================================================== dispatcher ==
+
+@pytest.mark.parametrize("devices", [needs(2)])
+def test_dispatcher_small_queries_keep_batch_path(devices, oracle):
+    """Small queries must ride the batch path byte-for-byte even when a
+    mesh (and thus the lattice route) is available."""
+    graphs = mixed_graphs()
+    rs = optimize_many(graphs, algorithm="mpdp_general", devices=devices)
+    for r, s in zip(rs, oracle["mpdp_general"]):
+        assert r.algorithm == "batch_mpdp_general"
+        assert r.cost == s.cost
+
+
+def test_dispatcher_no_mesh_keeps_solo_path():
+    """Without a mesh the oversized query stays on per-query optimize —
+    the lattice path is mesh-only."""
+    g = gen.snowflake(17, seed=3)
+    rs = optimize_many([g])
+    assert rs[0].algorithm == "mpdp_tree"
+
+
+@pytest.mark.parametrize("devices", [needs(2)])
+def test_engine_optimize_lattice_kwarg(devices, oracle):
+    g = graphs_for("mpdp_tree")[0]
+    r = engine.optimize(g, "auto", lattice_devices=devices)
+    assert r.algorithm == "lattice_mpdp_tree"
+    assert r.cost == oracle["mpdp_tree"][0].cost
+
+
+def test_optimize_lattice_rejects_spaceless_algorithms():
+    with pytest.raises(ValueError, match="lane space"):
+        optimize_lattice(gen.cycle(5, 1), algorithm="mpdp_tree", devices=1)
+    with pytest.raises(ValueError, match="lane space"):
+        optimize_lattice(gen.chain(5, 1), algorithm="dpsize", devices=1)
+
+
+# ================================================= service admission tests ==
+
+class _SpyLattice:
+    """Engine spy: records the admission call, returns a canned result."""
+    calls: list = []
+
+    def __init__(self, g, mesh=None, chunk=None, algorithm=None,
+                 pipeline=None):
+        self.g = g
+        type(self).calls.append((g.n, algorithm))
+        self._res = engine.optimize(g, "auto")
+        self._res.algorithm = f"lattice_{algorithm}"
+
+    def run_levels(self):
+        pass
+
+    def collect(self):
+        return [self._res]
+
+
+@pytest.mark.parametrize("devices", [needs(2)])
+def test_service_admits_oversized_to_lattice_flight(devices, monkeypatch):
+    """Satellite 6: an above-exact-limit query is admitted to an exact
+    lattice flight (spy engine) and StreamReport records the lattice path."""
+    from repro.core import lattice as lat
+    _SpyLattice.calls = []
+    monkeypatch.setattr(lat, "LatticeShardedEngine", _SpyLattice)
+    big = gen.snowflake(17, seed=3)
+    graphs = [gen.chain(6, 1), big, gen.star(5, 2)]
+    res, rep = service.optimize_stream(graphs, devices=devices)
+    assert _SpyLattice.calls == [(17, "mpdp_tree")]
+    assert rep.lattice == 1
+    latt_flights = [f for f in rep.flights if f.lattice]
+    assert len(latt_flights) == 1
+    assert latt_flights[0].nmax == lattice_bucket(17)
+    assert latt_flights[0].queries == [1]
+    assert res[1].algorithm == "lattice_mpdp_tree"
+    # small queries rode ordinary batch flights
+    assert res[0].algorithm == "batch_mpdp_tree"
+    assert all(not f.lattice for f in rep.flights if f is not latt_flights[0])
+
+
+@pytest.mark.parametrize("devices", [needs(2)])
+def test_service_below_limit_byte_identical(devices, monkeypatch):
+    """Below-limit streams must never touch the lattice path and must stay
+    byte-for-byte equal to ``optimize_many`` over the same stream."""
+    from repro.core import lattice as lat
+
+    class _Boom:
+        def __init__(self, *a, **k):
+            raise AssertionError("lattice engine spawned for a small query")
+
+    monkeypatch.setattr(lat, "LatticeShardedEngine", _Boom)
+    graphs = [gen.chain(6, 1), gen.cycle(6, 2), gen.star(5, 3)]
+    res, rep = service.optimize_stream(graphs, devices=devices)
+    assert rep.lattice == 0
+    many = optimize_many(graphs, devices=devices)
+    for r, m in zip(res, many):
+        assert r.cost == m.cost
+        assert plan_shape(r.plan) == plan_shape(m.plan)
+        assert r.algorithm == m.algorithm
+
+
+# =========================================== heuristic composite threading ==
+
+@pytest.mark.parametrize("devices", [needs(4)])
+def test_uniondp_composite_routes_lattice(devices, monkeypatch):
+    """UnionDP subproblems above NMAX_BATCH ride the lattice automatically:
+    its rounds call ``optimize_many(devices=...)``, whose dispatcher routes
+    oversized blocks through ``LatticeShardedEngine``."""
+    from repro.core import lattice as lat
+    from repro.heuristics import uniondp
+    spawned = []
+    real = lat.LatticeShardedEngine
+
+    class _Counting(real):
+        def __init__(self, g, *a, **k):
+            spawned.append(g.n)
+            super().__init__(g, *a, **k)
+
+    monkeypatch.setattr(lat, "LatticeShardedEngine", _Counting)
+    # n == k: UnionDP's final whole-graph solve IS the oversized block
+    g = gen.snowflake(17, seed=3)
+    r = uniondp.solve(g, k=17, devices=devices, reopt_rounds=0)
+    validate_plan(r.plan, g)
+    assert spawned and all(NMAX_BATCH < n <= NMAX_LATTICE for n in spawned)
+    # the lattice-backed block must pick exactly the plan solo exact DP
+    # picks (UnionDP re-costs plans in f64, so compare plans, then the
+    # f64-re-costed costs against the mesh-free UnionDP run byte-for-byte)
+    assert plan_shape(r.plan) == plan_shape(engine.optimize(g, "auto").plan)
+    assert r.cost == uniondp.solve(g, k=17, reopt_rounds=0).cost
