@@ -68,15 +68,8 @@ BATCH_ALGOS = ("dpsub", "mpdp")
 
 
 def make_stream(nq: int, seed: int = 0):
-    from repro.workloads import generators as gen
-    sizes = [8, 9, 10, 11, 12, 13, 14]
-    graphs = []
-    s = seed
-    while len(graphs) < nq:
-        n = sizes[len(graphs) % len(sizes)]
-        graphs.append(gen.musicbrainz_query(n, seed=100 + s))
-        s += 1
-    return graphs
+    from repro.workloads.generators import mixed_stream
+    return mixed_stream(nq, seed)
 
 
 def _lanes(results):

@@ -62,6 +62,16 @@ generator seeds, cost ratios, no timing):
   * ``pipeline_costs_equal`` must be true (the re-optimization loop is
     bit-identical under the pipelined engines).
 
+When the baseline carries a ``daemon`` section (from
+``benchmarks/bench_daemon.py``), the cross-process daemon is gated on its
+deterministic invariants: every phase's costs bit-identical to the
+in-process ``optimize_many`` replay, compile deltas on the warm /
+second-process / fresh phases at or under the committed baseline (zero),
+at least one cross-client plan-cache hit, and a clean SIGTERM drain.
+Open-loop load latency percentiles and shed counts are reported, never
+gated.  A report may carry *only* a ``daemon`` section (bench_daemon
+output) — all other checks then skip cleanly.
+
     python benchmarks/check_regression.py BENCH_batch.json \
         benchmarks/BENCH_baseline.json [--tolerance 0.25]
 
@@ -76,9 +86,14 @@ import sys
 
 def check(current: dict, baseline: dict, tolerance: float = 0.25) -> list[str]:
     errors: list[str] = []
-    for algo, base in baseline["algorithms"].items():
-        cur = current["algorithms"].get(algo)
+    # a report may carry only one section (e.g. bench_daemon produces just
+    # "daemon"); every per-section check skips cleanly when its section is
+    # absent from either side
+    for algo, base in (baseline.get("algorithms") or {}).items():
+        cur = (current.get("algorithms") or {}).get(algo)
         if cur is None:
+            if "algorithms" not in current:
+                break                  # daemon-only (or similar) report
             errors.append(f"[{algo}] missing from current report")
             continue
         if cur["evaluated_lanes"] > base["evaluated_lanes"]:
@@ -91,7 +106,7 @@ def check(current: dict, baseline: dict, tolerance: float = 0.25) -> list[str]:
                 f"[{algo}] queries/sec regressed >{tolerance:.0%}: speedup "
                 f"{cur['speedup']:.2f}x < {floor:.2f}x "
                 f"(baseline {base['speedup']:.2f}x)")
-    algos = current["algorithms"]
+    algos = current.get("algorithms") or {}
     if ("mpdp" in algos and "dpsub" in algos
             and algos["mpdp"]["evaluated_lanes"] >= algos["dpsub"]["evaluated_lanes"]):
         errors.append(
@@ -102,6 +117,75 @@ def check(current: dict, baseline: dict, tolerance: float = 0.25) -> list[str]:
     errors += check_pipeline(current, baseline)
     errors += check_lattice(current, baseline)
     errors += check_uniondp(current, baseline)
+    errors += check_daemon(current, baseline)
+    return errors
+
+
+def check_daemon(current: dict, baseline: dict) -> list[str]:
+    """Deterministic daemon gates (from ``bench_daemon.py``): every phase's
+    costs bit-identical to the in-process replay, zero executable compiles
+    on the warm / second-process / fresh phases beyond the committed
+    baseline deltas, at least one cross-client plan-cache hit from the
+    second client process, and a clean SIGTERM drain (exit 0 + loadable
+    checkpoint).  Latency percentiles and shed counts under the open-loop
+    Poisson load are reported, never gated."""
+    base_d = baseline.get("daemon")
+    cur_d = current.get("daemon")
+    if base_d is None:
+        if cur_d is not None:
+            print("note: current report has a daemon section but the "
+                  "baseline does not — daemon gates are vacuous until the "
+                  "baseline is refreshed with bench_daemon --json")
+        return []
+    if cur_d is None:
+        print("note: baseline has a daemon section but the current report "
+              "was not produced by bench_daemon; daemon checks skipped "
+              "(the daemon-smoke CI job runs the gating configuration)")
+        return []
+    errors: list[str] = []
+    for phase in ("cold", "warm", "proc2", "fresh"):
+        if not cur_d.get(f"costs_equal_{phase}", False):
+            errors.append(
+                f"[daemon:{phase}] costs diverged from the in-process "
+                "optimize_many replay (the daemon may reuse warm state, "
+                "never change results)")
+    for phase in ("warm", "proc2"):
+        allowed = base_d.get(f"{phase}_compile_delta", 0)
+        got = cur_d.get(f"{phase}_compile_delta", -1)
+        if got > allowed:
+            errors.append(
+                f"[daemon:{phase}] executable compiles after warmup: "
+                f"{got} > baseline {allowed} (warmed bucket shapes must hit "
+                "the shared executable cache with zero retraces)")
+    if cur_d.get("fresh_retrace_delta", -1) > \
+            base_d.get("fresh_retrace_delta", 0):
+        errors.append(
+            f"[daemon:fresh] warmed bucket shapes re-traced on a fresh "
+            f"stream: retrace delta {cur_d.get('fresh_retrace_delta')} > "
+            f"baseline {base_d.get('fresh_retrace_delta', 0)}")
+    # new-KEY compiles on a fresh stream are legitimate (first compile of a
+    # genuinely new bucket shape) but their count is deterministic per
+    # stream shape — gate it only when the shapes match
+    if cur_d.get("queries") == base_d.get("queries") and \
+            cur_d.get("fresh_compile_delta", 0) > \
+            base_d.get("fresh_compile_delta", 0):
+        errors.append(
+            f"[daemon:fresh] new-key compile count grew: "
+            f"{cur_d['fresh_compile_delta']} > baseline "
+            f"{base_d['fresh_compile_delta']} (bucket-shape quantization "
+            "regressed — more shapes now miss the warmed executables)")
+    min_hits = base_d.get("min_proc2_cache_hits", 1)
+    if cur_d.get("proc2_cache_hits", 0) < min_hits:
+        errors.append(
+            f"[daemon:proc2] cross-client plan-cache hits "
+            f"{cur_d.get('proc2_cache_hits', 0)} < {min_hits} (a second "
+            "client on a warm daemon must see the first client's plans)")
+    if not cur_d.get("drain_clean", False):
+        errors.append(
+            f"[daemon:drain] unclean shutdown: exit code "
+            f"{cur_d.get('drain_exit_code')} / checkpoint "
+            f"{cur_d.get('checkpoint_entries')} entries (SIGTERM must "
+            "drain, checkpoint atomically, and exit 0)")
     return errors
 
 
@@ -262,7 +346,7 @@ def main() -> int:
               f"vs baseline {baseline.get('queries')}q/seed "
               f"{baseline.get('seed')}); lane comparison may be vacuous")
     errors = check(current, baseline, args.tolerance)
-    for algo, a in sorted(current["algorithms"].items()):
+    for algo, a in sorted((current.get("algorithms") or {}).items()):
         print(f"[{algo}] qps {a['qps']:.2f} speedup {a['speedup']:.2f}x "
               f"lanes {a['evaluated_lanes']}")
     if "sharded" in current:
@@ -295,6 +379,21 @@ def main() -> int:
               f"geomean improvement {u['geomean_improvement_skewed']:.2f}x "
               f"pipeline_equal {u['pipeline_costs_equal']} "
               f"({len(u['queries'])} queries)")
+    if "daemon" in current:
+        d = current["daemon"]
+        print(f"[daemon] cold {d.get('cold_wall_s', 0):.2f}s warm "
+              f"{d.get('warm_wall_s', 0)*1e3:.1f}ms; compile deltas "
+              f"warm/proc2/fresh {d.get('warm_compile_delta')}/"
+              f"{d.get('proc2_compile_delta')}/"
+              f"{d.get('fresh_compile_delta')} "
+              f"(fresh retraces {d.get('fresh_retrace_delta')}); "
+              f"proc2 hits {d.get('proc2_cache_hits')}; "
+              f"drain_clean {d.get('drain_clean')}")
+        ld = d.get("load", {})
+        if ld:
+            print(f"[daemon:load] {ld['completed']}/{ld['arrivals']} "
+                  f"completed, {ld['shed']} shed; p99 "
+                  f"{ld['latency_s']['p99']*1e3:.1f}ms (reported only)")
     if errors:
         print("\nBENCHMARK REGRESSION:")
         for e in errors:

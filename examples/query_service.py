@@ -54,15 +54,17 @@ def optimize_stream(graphs, cache, devices=None, pipeline=None):
     ``devices`` shards both batched tiers, ``pipeline`` overlaps host and
     device work inside every engine.  Returns (results, StreamReport)."""
     from repro.core import service
+    from repro.core.config import OptimizerConfig
     from repro.heuristics import uniondp
     results = [None] * len(graphs)
     limit = EXACT_LIMIT_LATTICE if devices else EXACT_LIMIT
     exact_idx = [i for i, g in enumerate(graphs) if g.n <= limit]
     report = None
     if exact_idx:
+        cfg = OptimizerConfig(cache=cache, devices=devices,
+                              pipeline=pipeline)
         rs, report = service.optimize_stream(
-            [graphs[i] for i in exact_idx], algorithm="auto", cache=cache,
-            devices=devices, pipeline=pipeline)
+            [graphs[i] for i in exact_idx], config=cfg)
         for i, r in zip(exact_idx, rs):
             results[i] = r
     for i, g in enumerate(graphs):

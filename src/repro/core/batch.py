@@ -77,6 +77,8 @@ from . import bitset as bs
 from . import blocks as bl
 from . import cost as cm
 from . import unrank as ur
+from .config import (MAX_FLIGHT, UNSET, OptimizerConfig, alias_kwarg,
+                     resolve_config)
 from .engine import (CHUNK, CYC_CAP_DEFAULT, INF, _cap, _merge_best,
                      _merge_scattered, _prune, _scatter_f32, _scatter_i32,
                      _use_pallas, _use_pipeline)
@@ -85,7 +87,8 @@ from .joingraph import JoinGraph
 from .plan import Counters, OptimizeResult, extract_plan, leaf_plan
 
 NMAX_BATCH = 16          # memo is (bcap << NMAX): past 16 fall back to solo
-MAX_BATCH = 32           # sub-batch cap: bounds memo memory + recompiles
+MAX_BATCH = MAX_FLIGHT   # sub-batch cap: bounds memo memory + recompiles
+                         # (canonical name: ``config.MAX_FLIGHT``)
 _CLIP = 1 << 30          # offset clip (same trick as the general kernel)
 PEND_WINDOW = 8          # in-flight chunks per level: dispatching a level
                          # queues at most this many un-fetched chunk results
@@ -930,12 +933,16 @@ def resolve_deferred(graphs, results, cache, deferred, dup_rep) -> None:
         results[qi] = hit
 
 
-def optimize_many(graphs: list[JoinGraph], algorithm: str = "auto",
-                  chunk: int = CHUNK, cache=None,
-                  max_batch: int = MAX_BATCH, devices=None,
-                  mesh=None, pipeline: bool | None = None
+def optimize_many(graphs: list[JoinGraph], algorithm=UNSET, chunk=UNSET,
+                  cache=UNSET, max_flight=UNSET, devices=UNSET, mesh=UNSET,
+                  pipeline=UNSET, max_batch=UNSET, *,
+                  config: OptimizerConfig | None = None
                   ) -> list[OptimizeResult]:
     """Optimize a stream of queries, batching compatible ones per device pass.
+
+    All knobs can be passed as one ``config=OptimizerConfig(...)`` instead
+    of the legacy kwargs (never both; ``max_batch=`` is the deprecated
+    alias of the canonical ``max_flight=``).
 
     * ``cache``: optional ``plancache.PlanCache`` consulted first; computed
       plans are inserted back.
@@ -965,10 +972,17 @@ def optimize_many(graphs: list[JoinGraph], algorithm: str = "auto",
     Results are returned in input order.
     """
     from . import engine as _eng
+    max_flight = alias_kwarg(max_flight, max_batch, "max_batch", "max_flight")
+    cfg = resolve_config(config, algorithm=algorithm, chunk=chunk,
+                         cache=cache, max_flight=max_flight, devices=devices,
+                         mesh=mesh, pipeline=pipeline)
+    algorithm, chunk, cache = cfg.algorithm, cfg.chunk, cfg.cache
+    pipeline = cfg.pipeline
     shard_mesh = None
-    if mesh is not None or devices is not None:
+    if cfg.mesh is not None or cfg.devices is not None:
         from . import shard as _shard
-        shard_mesh = _shard.batch_mesh(mesh if mesh is not None else devices)
+        shard_mesh = _shard.batch_mesh(
+            cfg.mesh if cfg.mesh is not None else cfg.devices)
     results: list[OptimizeResult | None] = [None] * len(graphs)
     pending = probe_stream(graphs, results, cache, algorithm)
     pending, deferred, dup_rep = dedup_pending(graphs, pending, cache)
@@ -977,9 +991,9 @@ def optimize_many(graphs: list[JoinGraph], algorithm: str = "auto",
     if shard_mesh is not None:
         lattice, solo = lattice_pending(graphs, solo, algorithm)
 
-    # sub-batch step: per-shard sub-batches stay capped at max_batch
-    step = max_batch if shard_mesh is None else \
-        max_batch * _shard.mesh_size(shard_mesh)
+    # sub-batch step: per-shard sub-batches stay capped at max_flight
+    step = cfg.max_flight if shard_mesh is None else \
+        cfg.max_flight * _shard.mesh_size(shard_mesh)
     for (b, space), idxs in sorted(buckets.items()):
         for s0 in range(0, len(idxs), step):
             group = idxs[s0: s0 + step]

@@ -1,0 +1,182 @@
+"""Unified optimizer configuration: one frozen object for every entry point.
+
+Five public entry points run the same engines — ``engine.optimize``,
+``engine.optimize_many``, ``batch.optimize_many``,
+``service.StreamOptimizer``/``optimize_stream`` and
+``lattice.optimize_lattice`` — and they historically each grew their own
+kwarg spelling of the same knobs (``max_batch`` vs ``max_flight``,
+``lattice_devices=`` vs ``devices=``, a conditional kw-dict forward in
+``engine.optimize_many``).  ``OptimizerConfig`` is the one canonical
+spelling: every entry point accepts ``config=`` and consumes the fields
+relevant to it; the legacy kwargs remain as a back-compat shim that builds
+the config (``resolve_config``), differentially tested byte-identical to
+the config path in ``tests/test_config.py``.
+
+Field consumption per entry point (unlisted fields are ignored — a single
+config object is meant to be shared across calls):
+
+    optimize           algorithm, chunk, cyc_cap, enum; with ``lattice=True``
+                       also devices/mesh/pipeline (routes to the
+                       lattice-sharded engine)
+    optimize_many      algorithm, chunk, cache, max_flight, devices, mesh,
+                       pipeline
+    StreamOptimizer    algorithm, chunk, cache, max_flight, devices, mesh,
+                       pipeline
+    optimize_lattice   algorithm, chunk, cyc_cap, devices, mesh, pipeline
+
+``cache`` and ``mesh`` are process-local live objects (a ``PlanCache``, a
+jax ``Mesh``); everything else is a pure literal.  The daemon wire protocol
+(``repro.daemon``) serializes exactly this object via ``to_wire()`` /
+``from_wire()`` — the literal fields only, in the same pickle-free
+discipline as ``PlanCache.save`` — so a request's config round-trips
+bit-exactly while the daemon substitutes its *own* shared cache and mesh.
+
+This module is the root of the core constant DAG (``CHUNK``,
+``CYC_CAP_DEFAULT``, ``MAX_FLIGHT``): it imports nothing from the engine
+modules, which re-export the constants for back compatibility.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+
+CHUNK = 1 << 15          # lanes per evaluate/filter chunk
+CYC_CAP_DEFAULT = 24     # max cyclomatic number handled by the vector path
+MAX_FLIGHT = 32          # per-shard sub-batch / flight cap: bounds memo
+                         # memory + recompiles (``batch.MAX_BATCH`` is the
+                         # legacy alias)
+
+
+class _Unset:
+    """Sentinel distinguishing "kwarg not passed" from every real value
+    (``None`` is a meaningful value for devices/mesh/cache/pipeline)."""
+
+    _instance = None
+
+    def __new__(cls):
+        if cls._instance is None:
+            cls._instance = super().__new__(cls)
+        return cls._instance
+
+    def __repr__(self) -> str:
+        return "<unset>"
+
+
+UNSET = _Unset()
+
+# Fields that cross the daemon wire.  ``cache``/``mesh`` are process-local
+# and deliberately excluded: a config carrying either cannot serialize
+# (``to_wire`` raises) — the daemon owns its own shared cache and mesh.
+_WIRE_FIELDS = ("algorithm", "chunk", "devices", "pipeline", "max_flight",
+                "cyc_cap", "enum", "lattice")
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    """Canonical knob set for every optimizer entry point.
+
+    * ``algorithm`` — {auto, mpdp, mpdp_tree, mpdp_general, dpsub, dpsize,
+      dpccp}; ``auto``/``mpdp`` dispatch by topology.
+    * ``chunk`` — lanes per evaluate/filter chunk (a jit static).
+    * ``cache`` — optional ``plancache.PlanCache`` probed before any device
+      work; computed plans are inserted back.  Process-local, never wired.
+    * ``devices`` / ``mesh`` — 1-D device mesh for the sharded paths
+      (``devices=N`` builds one over the first N devices; ``mesh=`` supplies
+      a prebuilt jax Mesh, process-local, never wired).
+    * ``pipeline`` — pipelined level loops (``None`` defers to the
+      ``REPRO_PIPELINE`` env flag).
+    * ``max_flight`` — canonical sub-batch / flight size cap per shard (the
+      name ``batch.optimize_many(max_batch=)`` is the deprecated alias).
+    * ``cyc_cap`` — max cyclomatic number for the MPDP-general block pass.
+    * ``enum`` — level enumeration: "unrank" (paper Alg.5) | "expand".
+    * ``lattice`` — route single-query ``optimize`` through the intra-query
+      lattice-sharded engine on ``devices``/``mesh`` (the old
+      ``optimize(lattice_devices=...)`` spelling).
+    """
+
+    algorithm: str = "auto"
+    chunk: int = CHUNK
+    cache: object | None = None
+    devices: int | None = None
+    mesh: object | None = None
+    pipeline: bool | None = None
+    max_flight: int = MAX_FLIGHT
+    cyc_cap: int = CYC_CAP_DEFAULT
+    enum: str = "unrank"
+    lattice: bool = False
+
+    def __post_init__(self):
+        if self.chunk <= 0:
+            raise ValueError(f"chunk must be positive, got {self.chunk}")
+        if self.max_flight <= 0:
+            raise ValueError(
+                f"max_flight must be positive, got {self.max_flight}")
+        if self.enum not in ("unrank", "expand"):
+            raise ValueError(f"unknown enum mode {self.enum!r} "
+                             "(expected 'unrank' or 'expand')")
+        if self.devices is not None and self.mesh is not None:
+            raise ValueError("pass devices= or mesh=, not both")
+
+    def replace(self, **changes) -> "OptimizerConfig":
+        return dataclasses.replace(self, **changes)
+
+    # ------------------------------------------------------------- wire ----
+    def to_wire(self) -> dict:
+        """Pure-literal dict of the wire fields (the daemon request form).
+
+        Raises when ``cache`` or ``mesh`` is set: both are live process-local
+        objects with no wire form — the daemon substitutes its own.
+        """
+        if self.cache is not None:
+            raise ValueError("OptimizerConfig.cache is process-local and "
+                             "cannot be wired; the daemon owns the shared "
+                             "plan cache")
+        if self.mesh is not None:
+            raise ValueError("OptimizerConfig.mesh is process-local and "
+                             "cannot be wired; pass devices=N instead")
+        return {f: getattr(self, f) for f in _WIRE_FIELDS}
+
+    @staticmethod
+    def from_wire(d: dict) -> "OptimizerConfig":
+        """Inverse of ``to_wire`` (unknown keys raise — a version-skewed
+        client must fail loudly, not silently drop knobs)."""
+        unknown = set(d) - set(_WIRE_FIELDS)
+        if unknown:
+            raise ValueError(
+                f"unknown OptimizerConfig wire fields: {sorted(unknown)}")
+        return OptimizerConfig(**{f: d[f] for f in _WIRE_FIELDS if f in d})
+
+
+def resolve_config(config: OptimizerConfig | None, **legacy) -> OptimizerConfig:
+    """Normalize an entry point's (config=, legacy kwargs) pair.
+
+    ``legacy`` values equal to ``UNSET`` were not passed by the caller.  With
+    ``config=None`` the passed legacy kwargs build a fresh config (the
+    back-compat shim); with a config given, passing any legacy kwarg is a
+    conflict and raises — silently preferring one spelling over the other
+    would make the shim's differential guarantee unverifiable.
+    """
+    passed = {k: v for k, v in legacy.items() if v is not UNSET}
+    if config is not None:
+        if passed:
+            raise ValueError(
+                "pass config= or the legacy kwargs, not both "
+                f"(got config plus {sorted(passed)})")
+        if not isinstance(config, OptimizerConfig):
+            raise TypeError(f"config must be an OptimizerConfig, "
+                            f"got {type(config).__name__}")
+        return config
+    return OptimizerConfig(**passed)
+
+
+def alias_kwarg(new, old, old_name: str, new_name: str):
+    """Resolve a deprecated-alias pair: returns the effective value, warning
+    on the old spelling and raising when both were passed."""
+    if old is UNSET:
+        return new
+    if new is not UNSET:
+        raise ValueError(f"pass {new_name}= or the deprecated {old_name}=, "
+                         "not both")
+    warnings.warn(f"{old_name}= is deprecated; use {new_name}=",
+                  DeprecationWarning, stacklevel=3)
+    return old

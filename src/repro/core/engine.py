@@ -34,12 +34,14 @@ from . import bitset as bs
 from . import blocks as bl
 from . import cost as cm
 from . import unrank as ur
+# CHUNK / CYC_CAP_DEFAULT live in core.config (the root of the constant
+# DAG) and are re-exported here for the historical import path
+from .config import (CHUNK, CYC_CAP_DEFAULT, UNSET, OptimizerConfig,
+                     alias_kwarg, resolve_config)
 from .joingraph import DeviceGraph, JoinGraph
 from .plan import Counters, OptimizeResult, extract_plan
 
-CHUNK = 1 << 15          # lanes per evaluate/filter chunk
 INF = np.float32(np.inf)
-CYC_CAP_DEFAULT = 24     # max cyclomatic number handled by the vector path
 
 
 def _use_pallas() -> bool:
@@ -572,26 +574,43 @@ class ExactEngine:
                               wall_s=time.perf_counter() - t0, levels=self.n)
 
 
-def optimize(g: JoinGraph, algorithm: str = "auto", chunk: int = CHUNK,
-             cyc_cap: int = CYC_CAP_DEFAULT, enum: str = "unrank",
-             lattice_devices=None, lattice_mesh=None) -> OptimizeResult:
+def optimize(g: JoinGraph, algorithm=UNSET, chunk=UNSET, cyc_cap=UNSET,
+             enum=UNSET, lattice_devices=UNSET, lattice_mesh=UNSET, *,
+             config: OptimizerConfig | None = None) -> OptimizeResult:
     """Exact join-order optimization.  algorithm in
     {auto, mpdp, mpdp_tree, mpdp_general, dpsub, dpsize, dpccp};
     enum in {unrank (paper Alg.5), expand (beyond-paper frontier growth)}.
 
-    ``lattice_devices=N`` (or ``lattice_mesh=``) shards this one query's DP
-    lane space across a 1-D device mesh (``core.lattice``): the memo drops
-    from one ``1 << nmax_bucket(n)`` table to a replicated
+    All knobs can be passed as one ``config=OptimizerConfig(...)`` instead
+    of the legacy kwargs (never both; see ``core.config``).  With
+    ``config.lattice=True`` the query's DP lane space is sharded across the
+    config's ``devices``/``mesh`` (``core.lattice``): the memo drops from
+    one ``1 << nmax_bucket(n)`` table to a replicated
     ``1 << lattice_bucket(n)`` table per device and each device evaluates
     only its lane slice — bit-identical costs/plans, with exactly one
     collective per committed level.  Supported for the dpsub / mpdp_tree /
-    mpdp_general lane spaces (``auto``/``mpdp`` resolve by topology)."""
+    mpdp_general lane spaces (``auto``/``mpdp`` resolve by topology).
+    ``lattice_devices=``/``lattice_mesh=`` are the deprecated kwarg
+    spelling of ``devices``/``mesh`` + ``lattice=True``."""
     from . import dpccp as _dpccp
-    if lattice_devices is not None or lattice_mesh is not None:
+    devices = mesh = UNSET
+    lattice = UNSET
+    if lattice_devices is not UNSET or lattice_mesh is not UNSET:
+        devices = alias_kwarg(UNSET, lattice_devices,
+                              "lattice_devices", "config.devices")
+        mesh = alias_kwarg(UNSET, lattice_mesh,
+                           "lattice_mesh", "config.mesh")
+        # the old kwargs passed None to mean "no lattice": preserve that
+        if (devices is not UNSET and devices is not None) or \
+                (mesh is not UNSET and mesh is not None):
+            lattice = True
+    cfg = resolve_config(config, algorithm=algorithm, chunk=chunk,
+                         cyc_cap=cyc_cap, enum=enum, devices=devices,
+                         mesh=mesh, lattice=lattice)
+    if cfg.lattice:
         from . import lattice as _lat
-        return _lat.optimize_lattice(g, algorithm=algorithm, chunk=chunk,
-                                     cyc_cap=cyc_cap, devices=lattice_devices,
-                                     mesh=lattice_mesh)
+        return _lat.optimize_lattice(g, config=cfg.replace(lattice=False))
+    algorithm, chunk = cfg.algorithm, cfg.chunk
     if algorithm == "dpccp":
         return _dpccp.solve(g)
     if g.n == 1:
@@ -600,7 +619,7 @@ def optimize(g: JoinGraph, algorithm: str = "auto", chunk: int = CHUNK,
         return OptimizeResult(plan=p, cost=p.cost, counters=Counters(),
                               algorithm=algorithm, levels=1)
     t0 = time.perf_counter()
-    eng = ExactEngine(g, chunk=chunk, cyc_cap=cyc_cap, enum=enum)
+    eng = ExactEngine(g, chunk=chunk, cyc_cap=cfg.cyc_cap, enum=cfg.enum)
     algo = algorithm
     if algorithm in ("auto", "mpdp"):
         algo = "mpdp_tree" if g.is_tree() else "mpdp_general"
@@ -619,9 +638,10 @@ def optimize(g: JoinGraph, algorithm: str = "auto", chunk: int = CHUNK,
     return res
 
 
-def optimize_many(graphs, algorithm: str = "auto", chunk: int = CHUNK,
-                  cache=None, max_batch: int | None = None, devices=None,
-                  mesh=None, pipeline: bool | None = None):
+def optimize_many(graphs, algorithm=UNSET, chunk=UNSET, cache=UNSET,
+                  max_flight=UNSET, devices=UNSET, mesh=UNSET,
+                  pipeline=UNSET, max_batch=UNSET, *,
+                  config: OptimizerConfig | None = None):
     """Batched multi-query optimization — see ``batch.optimize_many``.
 
     Pads compatible queries into one (NMAX, EMAX, CHUNK) bucket and runs the
@@ -647,9 +667,14 @@ def optimize_many(graphs, algorithm: str = "auto", chunk: int = CHUNK,
     ``devices``/``mesh``/``pipeline`` compose with the heuristics for free,
     and the bit-identity guarantee extends to their whole search
     (``tests/test_uniondp_quality.py`` gates it end to end).
+
+    ``max_flight`` is the canonical sub-batch cap (``max_batch=`` is the
+    deprecated alias); all knobs can be passed as one
+    ``config=OptimizerConfig(...)`` instead of the kwargs (never both).
     """
     from . import batch as _batch
-    kw = {} if max_batch is None else {"max_batch": max_batch}
-    return _batch.optimize_many(graphs, algorithm=algorithm, chunk=chunk,
-                                cache=cache, devices=devices, mesh=mesh,
-                                pipeline=pipeline, **kw)
+    max_flight = alias_kwarg(max_flight, max_batch, "max_batch", "max_flight")
+    cfg = resolve_config(config, algorithm=algorithm, chunk=chunk,
+                         cache=cache, max_flight=max_flight, devices=devices,
+                         mesh=mesh, pipeline=pipeline)
+    return _batch.optimize_many(graphs, config=cfg)

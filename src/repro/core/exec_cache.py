@@ -89,6 +89,17 @@ class ExecutableCache:
         with self._lock:
             return sum(self._compiles.values())
 
+    def totals(self) -> dict:
+        """Whole-process summary for service/daemon telemetry: executable
+        count, total traces, and re-traces (traces beyond each key's first).
+        The daemon's STATS response reports the *delta* of ``compiles``
+        since serving started — zero after warmup is the contract."""
+        with self._lock:
+            compiles = sum(self._compiles.values())
+            return {"keys": len(self._compiles),
+                    "compiles": compiles,
+                    "retraces": compiles - len(self._compiles)}
+
     def stats_for(self, keys, *, pipeline: bool | None = None) -> dict:
         """Per-engine stats view: compile counts for the engine's keys plus
         the number of *re*-traces (every trace beyond a key's first)."""

@@ -71,6 +71,7 @@ from . import unrank as ur
 from .batch import (PEND_WINDOW, _CLIP, _LevelLoop, _beval_dpsub_chunk,
                     _beval_general_chunk, _beval_tree_chunk, _bfilter_chunk,
                     _lane_space)
+from .config import UNSET, OptimizerConfig, resolve_config
 from .engine import (CHUNK, CYC_CAP_DEFAULT, INF, _cap, _merge_best,
                      _merge_scattered, _use_pallas, _use_pipeline)
 from .exec_cache import EXEC
@@ -545,30 +546,36 @@ class LatticeShardedEngine(_LevelLoop):
 
 # ============================================================ public entry ==
 
-def optimize_lattice(g: JoinGraph, algorithm: str = "auto",
-                     chunk: int = CHUNK, cyc_cap: int = CYC_CAP_DEFAULT,
-                     devices=None, mesh=None,
-                     pipeline: bool | None = None) -> OptimizeResult:
+def optimize_lattice(g: JoinGraph, algorithm=UNSET, chunk=UNSET,
+                     cyc_cap=UNSET, devices=UNSET, mesh=UNSET,
+                     pipeline=UNSET, *,
+                     config: OptimizerConfig | None = None) -> OptimizeResult:
     """Exact optimization of one query with its lane space sharded over a
-    device mesh (``engine.optimize(..., lattice_devices=N)`` lands here).
+    device mesh (``engine.optimize(config.lattice=True)`` lands here).
 
     ``algorithm`` resolves through the shared ``batch._lane_space`` dispatch
     (``auto``/``mpdp`` -> tree lanes on acyclic queries, general otherwise);
     spaces with no lattice form (``dpsize``, ``dpccp``, forced ``mpdp_tree``
-    on a cyclic query) raise.  ``devices``/``mesh`` as in ``optimize_many``.
+    on a cyclic query) raise.  ``devices``/``mesh`` as in ``optimize_many``;
+    all knobs can be passed as one ``config=OptimizerConfig(...)`` instead
+    of the legacy kwargs (never both).
     """
+    cfg = resolve_config(config, algorithm=algorithm, chunk=chunk,
+                         cyc_cap=cyc_cap, devices=devices, mesh=mesh,
+                         pipeline=pipeline)
     if g.n == 1:
         from .plan import leaf_plan
         p = leaf_plan(0, g)
         return OptimizeResult(plan=p, cost=p.cost, counters=Counters(),
-                              algorithm=algorithm, levels=1)
-    space = _lane_space(g, algorithm)
+                              algorithm=cfg.algorithm, levels=1)
+    space = _lane_space(g, cfg.algorithm)
     if space is None:
         raise ValueError(
-            f"algorithm {algorithm!r} has no lattice-sharded lane space "
+            f"algorithm {cfg.algorithm!r} has no lattice-sharded lane space "
             "for this query (lattice supports dpsub / mpdp_tree / "
             "mpdp_general)")
     eng = LatticeShardedEngine(
-        g, mesh if mesh is not None else devices, chunk=chunk,
-        algorithm=space, cyc_cap=cyc_cap, pipeline=pipeline)
+        g, cfg.mesh if cfg.mesh is not None else cfg.devices,
+        chunk=cfg.chunk, algorithm=space, cyc_cap=cfg.cyc_cap,
+        pipeline=cfg.pipeline)
     return eng.run()[0]

@@ -58,9 +58,9 @@ import time
 
 import numpy as np
 
-from .batch import (MAX_BATCH, BatchEngine, bucket_pending, dedup_pending,
+from .batch import (BatchEngine, bucket_pending, dedup_pending,
                     lattice_pending, probe_stream, resolve_deferred)
-from .engine import CHUNK
+from .config import UNSET, OptimizerConfig, resolve_config
 from .joingraph import JoinGraph
 from .plan import OptimizeResult
 
@@ -101,21 +101,30 @@ class StreamOptimizer:
     """Admission-controlled, flight-pipelined optimizer for query streams.
 
     Parameters mirror ``optimize_many``; ``max_flight`` is the per-shard
-    flight size cap (multiplied by the mesh size when sharding).
+    flight size cap (multiplied by the mesh size when sharding).  All knobs
+    can be passed as one ``config=OptimizerConfig(...)`` instead of the
+    legacy kwargs (never both); the resolved config is kept on
+    ``self.config`` — the daemon (``repro.daemon``) builds one
+    ``StreamOptimizer`` per request from the wire config this way.
     """
 
-    def __init__(self, algorithm: str = "auto", chunk: int = CHUNK,
-                 cache=None, devices=None, mesh=None,
-                 pipeline: bool | None = None, max_flight: int = MAX_BATCH):
-        self.algorithm = algorithm
-        self.chunk = chunk
-        self.cache = cache
-        self.pipeline = pipeline
-        self.max_flight = max_flight
+    def __init__(self, algorithm=UNSET, chunk=UNSET, cache=UNSET,
+                 devices=UNSET, mesh=UNSET, pipeline=UNSET, max_flight=UNSET,
+                 *, config: OptimizerConfig | None = None):
+        cfg = resolve_config(config, algorithm=algorithm, chunk=chunk,
+                             cache=cache, devices=devices, mesh=mesh,
+                             pipeline=pipeline, max_flight=max_flight)
+        self.config = cfg
+        self.algorithm = cfg.algorithm
+        self.chunk = cfg.chunk
+        self.cache = cfg.cache
+        self.pipeline = cfg.pipeline
+        self.max_flight = cfg.max_flight
         self.mesh = None
-        if mesh is not None or devices is not None:
+        if cfg.mesh is not None or cfg.devices is not None:
             from . import shard as _shard
-            self.mesh = _shard.batch_mesh(mesh if mesh is not None else devices)
+            self.mesh = _shard.batch_mesh(
+                cfg.mesh if cfg.mesh is not None else cfg.devices)
 
     # -------------------------------------------------------- admission ----
     def admit(self, graphs: list[JoinGraph], idxs: list[int]
@@ -228,13 +237,13 @@ class StreamOptimizer:
         return results, report
 
 
-def optimize_stream(graphs: list[JoinGraph], algorithm: str = "auto",
-                    chunk: int = CHUNK, cache=None, devices=None, mesh=None,
-                    pipeline: bool | None = None,
-                    max_flight: int = MAX_BATCH
+def optimize_stream(graphs: list[JoinGraph], algorithm=UNSET, chunk=UNSET,
+                    cache=UNSET, devices=UNSET, mesh=UNSET, pipeline=UNSET,
+                    max_flight=UNSET, *,
+                    config: OptimizerConfig | None = None
                     ) -> tuple[list[OptimizeResult], StreamReport]:
     """One-shot convenience wrapper around ``StreamOptimizer``."""
-    opt = StreamOptimizer(algorithm=algorithm, chunk=chunk, cache=cache,
-                          devices=devices, mesh=mesh, pipeline=pipeline,
-                          max_flight=max_flight)
-    return opt.optimize_stream(graphs)
+    cfg = resolve_config(config, algorithm=algorithm, chunk=chunk,
+                         cache=cache, devices=devices, mesh=mesh,
+                         pipeline=pipeline, max_flight=max_flight)
+    return StreamOptimizer(config=cfg).optimize_stream(graphs)

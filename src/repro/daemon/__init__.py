@@ -1,0 +1,33 @@
+"""Cross-process optimizer daemon: a persistent, multi-tenant front-end for
+the streaming optimizer (``core.service.StreamOptimizer``).
+
+In-process use pays JIT warmup per process and starts with a cold
+``PlanCache``; the daemon keeps both warm for every client — the
+process-wide executable cache (``core.exec_cache.EXEC``) serves repeated
+bucket shapes with zero retraces across *all* tenants, and one shared
+``PlanCache`` (periodically checkpointed to disk, pickle-free) turns one
+client's optimized queries into every other client's cache hits.
+
+    python -m repro.daemon --socket /tmp/repro.sock --cache-file plans.plancache
+
+Layout:
+
+  * ``protocol`` — length-prefixed JSON framing + pure-literal wire codecs
+    for join graphs, configs (``OptimizerConfig.to_wire``) and results;
+  * ``server`` — ``OptimizerDaemon``: socket accept loop, bounded request
+    queue with per-tenant admission control and SHED backpressure, single
+    optimizer worker thread, periodic atomic cache checkpoints, STATS
+    telemetry, graceful SIGTERM drain;
+  * ``client`` — ``DaemonClient`` library + a one-shot CLI
+    (``python -m repro.daemon.client``) used by the benchmark's
+    second-process phase.
+
+See ``docs/daemon.md`` for the protocol and deployment recipe, and
+``benchmarks/bench_daemon.py`` for the load-generator benchmark whose
+deterministic gates (bit-identical results, zero compiles after warmup,
+cross-client cache hits, clean drain) run in CI.
+"""
+from .client import DaemonClient, DaemonError, DaemonShed
+from .server import OptimizerDaemon
+
+__all__ = ["DaemonClient", "DaemonError", "DaemonShed", "OptimizerDaemon"]

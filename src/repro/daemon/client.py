@@ -1,0 +1,172 @@
+"""``DaemonClient``: the client library + one-shot CLI for the daemon.
+
+Library use::
+
+    from repro.daemon import DaemonClient
+    with DaemonClient(socket_path="/tmp/repro.sock", tenant="svc-a") as c:
+        results = c.optimize(graphs)                  # list[OptimizeResult]
+        results = c.optimize(graphs, config=OptimizerConfig(devices=4))
+        c.stats()["exec"]["compiles"]                 # daemon telemetry
+
+``optimize`` raises ``DaemonShed`` when admission control rejects the
+request (bounded queue full, or this tenant already has its in-flight cap
+admitted) — the caller should back off and retry — and ``DaemonError`` for
+request-level failures.  Both leave the connection usable.  Results are
+decoded against the *local* graphs (plan shapes re-costed via
+``cost_plan``), so ``OptimizeResult.cost`` is bit-identical to what an
+in-process ``optimize_many`` over the same request sequence would return.
+
+The CLI (``python -m repro.daemon.client``) drives one optimize request
+over the canonical ``mixed_stream`` workload and prints a JSON report to
+stdout — ``benchmarks/bench_daemon.py`` and the CI smoke job use it as the
+genuinely-separate second client *process*.  The client never runs device
+work: it needs only sockets, the graph builders and the plan re-coster.
+"""
+from __future__ import annotations
+
+import socket
+import time
+
+from . import protocol as proto
+
+
+class DaemonError(RuntimeError):
+    """Request-level failure reported by the daemon (connection stays up)."""
+
+
+class DaemonShed(DaemonError):
+    """Admission control rejected the request; back off and retry.
+
+    ``reason`` is ``"queue"`` (bounded request queue full) or ``"tenant"``
+    (this tenant already has its in-flight cap admitted).
+    """
+
+    def __init__(self, reason: str):
+        super().__init__(f"request shed by daemon ({reason})")
+        self.reason = reason
+
+
+class DaemonClient:
+    """One connection to an ``OptimizerDaemon`` (unix socket or TCP).
+
+    ``connect_timeout`` bounds the initial connect retry loop — daemon
+    startup races (socket not bound yet) are retried, not errors.
+    """
+
+    def __init__(self, socket_path: str | None = None,
+                 host: str | None = None, port: int | None = None,
+                 tenant: str = "default", connect_timeout: float = 10.0):
+        if socket_path is None and host is None:
+            raise ValueError("pass socket_path= (unix) or host=/port= (tcp)")
+        self.tenant = tenant
+        self.last_meta: dict | None = None     # wall_s/flights/cache_hits of
+        deadline = time.monotonic() + connect_timeout   # the last optimize
+        while True:
+            try:
+                if socket_path is not None:
+                    self._sock = socket.socket(socket.AF_UNIX,
+                                               socket.SOCK_STREAM)
+                    self._sock.connect(socket_path)
+                else:
+                    self._sock = socket.create_connection((host, port))
+                return
+            except OSError:
+                if time.monotonic() >= deadline:
+                    raise
+                time.sleep(0.05)
+
+    # --------------------------------------------------------------- plumbing
+    def _call(self, msg: dict) -> dict:
+        proto.send_msg(self._sock, msg)
+        reply = proto.recv_msg(self._sock)
+        if reply is None:
+            raise DaemonError("daemon closed the connection")
+        if not reply.get("ok"):
+            if reply.get("shed"):
+                raise DaemonShed(reply.get("reason", "?"))
+            raise DaemonError(reply.get("error", "unknown daemon error"))
+        return reply
+
+    # ------------------------------------------------------------------- api
+    def optimize(self, graphs, config=None) -> list:
+        """Optimize ``graphs`` on the daemon; returns ``OptimizeResult``\\ s
+        in input order (plans re-costed locally — bit-identical to
+        in-process).  Request-level metadata lands on ``self.last_meta``."""
+        msg = {"op": "optimize", "tenant": self.tenant,
+               "graphs": [proto.graph_to_wire(g) for g in graphs]}
+        if config is not None:
+            msg["config"] = config.to_wire()
+        reply = self._call(msg)
+        self.last_meta = {k: reply[k] for k in
+                          ("wall_s", "flights", "lattice", "solo",
+                           "cache_hits") if k in reply}
+        return [proto.result_from_wire(d, g)
+                for d, g in zip(reply["results"], graphs)]
+
+    def stats(self) -> dict:
+        return self._call({"op": "stats"})
+
+    def ping(self) -> bool:
+        return bool(self._call({"op": "ping"}).get("pong"))
+
+    def drain(self) -> None:
+        """Ask the daemon to shut down gracefully (drain + checkpoint)."""
+        self._call({"op": "drain"})
+
+    def close(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+def main(argv=None) -> int:
+    """One-shot client: optimize the canonical ``mixed_stream`` workload
+    and print a JSON report (costs + daemon stats) to stdout."""
+    import argparse
+    import json
+    ap = argparse.ArgumentParser(
+        prog="repro.daemon.client",
+        description="one-shot daemon client over the canonical mixed stream")
+    ap.add_argument("--socket", type=str, default=None)
+    ap.add_argument("--tcp", type=str, default=None, metavar="HOST:PORT")
+    ap.add_argument("--queries", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tenant", type=str, default="cli")
+    ap.add_argument("--repeat", type=int, default=1,
+                    help="send the same request this many times")
+    ap.add_argument("--stats", action="store_true",
+                    help="include a daemon STATS snapshot in the report")
+    args = ap.parse_args(argv)
+    if (args.socket is None) == (args.tcp is None):
+        ap.error("exactly one of --socket / --tcp is required")
+
+    from repro.workloads.generators import mixed_stream
+    graphs = mixed_stream(args.queries, args.seed)
+    host = port = None
+    if args.tcp is not None:
+        host, _, port = args.tcp.rpartition(":")
+        port = int(port)
+    report = {"queries": args.queries, "seed": args.seed,
+              "tenant": args.tenant, "rounds": []}
+    with DaemonClient(socket_path=args.socket, host=host, port=port,
+                      tenant=args.tenant) as c:
+        for _ in range(args.repeat):
+            results = c.optimize(graphs)
+            report["rounds"].append(dict(
+                c.last_meta, costs=[float(r.cost) for r in results]))
+        if args.stats:
+            report["stats"] = c.stats()
+    print(json.dumps(report))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -231,3 +231,18 @@ TOPOLOGIES = {
     "star": star, "snowflake": snowflake, "chain": chain, "cycle": cycle,
     "clique": clique, "job": job_like, "musicbrainz": musicbrainz_query,
 }
+
+
+def mixed_stream(nq: int, seed: int = 0, sizes=(8, 9, 10, 11, 12, 13, 14)):
+    """The canonical mixed-size benchmark stream: ``nq`` musicbrainz random
+    walks cycling through ``sizes``, seeds ``100 + seed, 100 + seed + 1,
+    ...`` — deterministic, so two processes given the same ``(nq, seed)``
+    build bit-identical graphs.  Shared by ``benchmarks/bench_batch.py``,
+    ``benchmarks/bench_daemon.py`` and the daemon client CLI
+    (``python -m repro.daemon.client``)."""
+    graphs, s = [], seed
+    while len(graphs) < nq:
+        n = sizes[len(graphs) % len(sizes)]
+        graphs.append(musicbrainz_query(n, seed=100 + s))
+        s += 1
+    return graphs

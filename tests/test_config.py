@@ -1,0 +1,196 @@
+"""``OptimizerConfig``: validation, wire round-trip, legacy-kwarg shim.
+
+The differential tests are the satellite's acceptance criterion: every
+entry point called through ``config=`` must return **byte-identical**
+results to the same call through the legacy kwargs (same plan shapes, same
+f32 costs — not approximately, exactly).
+"""
+import pytest
+
+from repro.core.config import (CHUNK, MAX_FLIGHT, OptimizerConfig,
+                               alias_kwarg, resolve_config)
+from repro.core import engine
+from repro.core.plancache import PlanCache
+from repro.workloads import generators as gen
+
+
+def plan_shape(p):
+    if p.is_leaf:
+        return p.rel_set
+    return (p.rel_set, plan_shape(p.left), plan_shape(p.right))
+
+
+def fingerprint(results):
+    return [(float(r.cost), plan_shape(r.plan), r.algorithm)
+            for r in results]
+
+
+SMALL = [gen.chain(6, 1), gen.star(7, 2), gen.cycle(8, 3),
+         gen.musicbrainz_query(9, 4)]
+
+
+# ============================================================ the dataclass
+
+class TestOptimizerConfig:
+    def test_defaults(self):
+        cfg = OptimizerConfig()
+        assert cfg.algorithm == "auto" and cfg.chunk == CHUNK
+        assert cfg.max_flight == MAX_FLIGHT and cfg.enum == "unrank"
+        assert cfg.cache is None and cfg.devices is None and cfg.mesh is None
+
+    def test_frozen(self):
+        cfg = OptimizerConfig()
+        with pytest.raises(Exception):
+            cfg.chunk = 1
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            OptimizerConfig(chunk=0)
+        with pytest.raises(ValueError):
+            OptimizerConfig(max_flight=0)
+        with pytest.raises(ValueError):
+            OptimizerConfig(enum="nope")
+        with pytest.raises(ValueError):
+            OptimizerConfig(devices=2, mesh=object())
+
+    def test_replace(self):
+        cfg = OptimizerConfig().replace(devices=2, algorithm="mpdp")
+        assert (cfg.devices, cfg.algorithm) == (2, "mpdp")
+        assert cfg.chunk == CHUNK          # untouched fields keep defaults
+
+    def test_wire_roundtrip(self):
+        cfg = OptimizerConfig(algorithm="dpsub", chunk=1024, devices=4,
+                              pipeline=True, max_flight=8, cyc_cap=20,
+                              enum="expand", lattice=True)
+        assert OptimizerConfig.from_wire(cfg.to_wire()) == cfg
+
+    def test_wire_rejects_process_local_state(self):
+        with pytest.raises(ValueError):
+            OptimizerConfig(cache=PlanCache()).to_wire()
+        with pytest.raises(ValueError):
+            OptimizerConfig(mesh=object()).to_wire()
+
+    def test_wire_rejects_unknown_keys(self):
+        with pytest.raises(ValueError):
+            OptimizerConfig.from_wire({"algorithm": "auto", "bogus": 1})
+
+    def test_wire_is_json_literal(self):
+        import json
+        wire = OptimizerConfig(devices=2).to_wire()
+        assert json.loads(json.dumps(wire)) == wire
+
+
+# ================================================================= the shim
+
+class TestResolveConfig:
+    def test_kwargs_only(self):
+        cfg = resolve_config(None, algorithm="mpdp", chunk=64)
+        assert (cfg.algorithm, cfg.chunk) == ("mpdp", 64)
+
+    def test_config_only(self):
+        src = OptimizerConfig(algorithm="dpsub")
+        assert resolve_config(src) is src
+
+    def test_conflict_raises(self):
+        with pytest.raises(ValueError, match="not both"):
+            resolve_config(OptimizerConfig(), algorithm="mpdp")
+
+    def test_none_is_a_passed_value(self):
+        # None is meaningful for cache/devices/mesh/pipeline — passing it
+        # alongside config= must still conflict
+        with pytest.raises(ValueError, match="not both"):
+            resolve_config(OptimizerConfig(), cache=None)
+
+    def test_wrong_type(self):
+        with pytest.raises(TypeError):
+            resolve_config({"algorithm": "auto"})
+
+    def test_alias_kwarg(self):
+        from repro.core.config import UNSET
+        with pytest.warns(DeprecationWarning, match="max_batch"):
+            assert alias_kwarg(UNSET, 7, "max_batch", "max_flight") == 7
+        assert alias_kwarg(5, UNSET, "max_batch", "max_flight") == 5
+        with pytest.raises(ValueError):
+            alias_kwarg(5, 7, "max_batch", "max_flight")
+
+
+# ==================================== differential: config= == legacy kwargs
+
+class TestEntryPointParity:
+    def test_optimize(self):
+        g = gen.musicbrainz_query(9, 4)
+        legacy = engine.optimize(g, algorithm="mpdp", chunk=4096)
+        via_cfg = engine.optimize(
+            g, config=OptimizerConfig(algorithm="mpdp", chunk=4096))
+        assert fingerprint([legacy]) == fingerprint([via_cfg])
+
+    def test_optimize_many(self):
+        legacy = engine.optimize_many(SMALL, algorithm="auto", max_flight=2)
+        via_cfg = engine.optimize_many(
+            SMALL, config=OptimizerConfig(max_flight=2))
+        assert fingerprint(legacy) == fingerprint(via_cfg)
+
+    def test_batch_optimize_many(self):
+        from repro.core import batch
+        legacy = batch.optimize_many(SMALL, algorithm="dpsub")
+        via_cfg = batch.optimize_many(
+            SMALL, config=OptimizerConfig(algorithm="dpsub"))
+        assert fingerprint(legacy) == fingerprint(via_cfg)
+
+    def test_optimize_stream(self):
+        from repro.core.service import optimize_stream
+        legacy, _ = optimize_stream(SMALL, max_flight=2)
+        via_cfg, _ = optimize_stream(SMALL,
+                                     config=OptimizerConfig(max_flight=2))
+        assert fingerprint(legacy) == fingerprint(via_cfg)
+
+    def test_stream_optimizer_keeps_config(self):
+        from repro.core.service import StreamOptimizer
+        cfg = OptimizerConfig(max_flight=3)
+        s = StreamOptimizer(config=cfg)
+        assert s.config == cfg and s.max_flight == 3
+
+    def test_optimize_lattice(self):
+        from repro.core.lattice import optimize_lattice
+        g = gen.musicbrainz_query(9, 4)
+        legacy = optimize_lattice(g, devices=2)
+        via_cfg = optimize_lattice(g, config=OptimizerConfig(devices=2))
+        assert fingerprint([legacy]) == fingerprint([via_cfg])
+
+    def test_optimize_lattice_routing_flag(self):
+        # optimize(lattice_devices=N) == optimize(config=(devices=N,
+        # lattice=True)) — the explicit routing flag replaces the implicit
+        # kwarg-name dispatch
+        g = gen.musicbrainz_query(9, 4)
+        legacy = engine.optimize(g, lattice_devices=2)
+        via_cfg = engine.optimize(
+            g, config=OptimizerConfig(devices=2, lattice=True))
+        assert fingerprint([legacy]) == fingerprint([via_cfg])
+
+    def test_conflict_raises_at_entry(self):
+        g = gen.chain(5, 0)
+        with pytest.raises(ValueError, match="not both"):
+            engine.optimize(g, algorithm="mpdp",
+                            config=OptimizerConfig())
+        with pytest.raises(ValueError, match="not both"):
+            engine.optimize_many([g], max_flight=2,
+                                 config=OptimizerConfig())
+
+    def test_max_batch_alias_deprecated(self):
+        with pytest.warns(DeprecationWarning, match="max_batch"):
+            legacy = engine.optimize_many(SMALL[:2], max_batch=2)
+        canonical = engine.optimize_many(SMALL[:2], max_flight=2)
+        assert fingerprint(legacy) == fingerprint(canonical)
+
+    def test_lattice_devices_alias_deprecated(self):
+        g = gen.musicbrainz_query(9, 4)
+        with pytest.warns(DeprecationWarning, match="lattice_devices"):
+            engine.optimize(g, lattice_devices=2)
+
+    def test_cache_threads_through_config(self):
+        cache = PlanCache()
+        engine.optimize_many(SMALL, config=OptimizerConfig(cache=cache))
+        assert len(cache) == len(SMALL)
+        r2 = engine.optimize_many(SMALL, config=OptimizerConfig(cache=cache))
+        assert cache.stats.hits == len(SMALL)
+        assert len(r2) == len(SMALL)

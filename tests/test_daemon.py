@@ -1,0 +1,288 @@
+"""Daemon: protocol framing, wire codecs, end-to-end bit-identity,
+admission control / SHED backpressure, drain, checkpoint-under-load."""
+import json
+import os
+import socket
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core.config import OptimizerConfig
+from repro.core.plancache import PlanCache
+from repro.daemon import DaemonClient, DaemonShed, OptimizerDaemon
+from repro.daemon import protocol as proto
+from repro.workloads import generators as gen
+
+SMALL = [gen.chain(5, 1), gen.star(6, 2), gen.musicbrainz_query(8, 3)]
+
+
+def plan_shape(p):
+    if p.is_leaf:
+        return p.rel_set
+    return (p.rel_set, plan_shape(p.left), plan_shape(p.right))
+
+
+def fingerprint(results):
+    return [(float(r.cost), plan_shape(r.plan)) for r in results]
+
+
+@pytest.fixture
+def daemon(tmp_path):
+    """A started daemon on a per-test unix socket; drained on teardown."""
+    d = OptimizerDaemon(socket_path=str(tmp_path / "d.sock"),
+                        checkpoint_every=10_000)
+    d.start()
+    yield d
+    d.drain()
+    assert d._stopped.wait(10)
+
+
+# ================================================================== framing
+
+class TestFraming:
+    def test_roundtrip(self):
+        a, b = socket.socketpair()
+        with a, b:
+            proto.send_msg(a, {"op": "ping", "x": [1, 2.5, "s", None]})
+            assert proto.recv_msg(b) == {"op": "ping",
+                                         "x": [1, 2.5, "s", None]}
+
+    def test_clean_eof_is_none(self):
+        a, b = socket.socketpair()
+        with b:
+            a.close()
+            assert proto.recv_msg(b) is None
+
+    def test_mid_frame_eof_raises(self):
+        a, b = socket.socketpair()
+        with b:
+            a.sendall(b"\x00\x00\x00\xff{1")   # promises 255 bytes, sends 2
+            a.close()
+            with pytest.raises(proto.ProtocolError):
+                proto.recv_msg(b)
+
+    def test_oversize_frame_rejected(self):
+        a, b = socket.socketpair()
+        with a, b:
+            a.sendall(b"\xff\xff\xff\xff")     # 4 GiB length prefix
+            with pytest.raises(proto.ProtocolError):
+                proto.recv_msg(b)
+
+    def test_multiple_frames_on_one_connection(self):
+        a, b = socket.socketpair()
+        with a, b:
+            for i in range(5):
+                proto.send_msg(a, {"i": i})
+            assert [proto.recv_msg(b)["i"] for _ in range(5)] == list(range(5))
+
+
+# =================================================================== codecs
+
+class TestCodecs:
+    def test_graph_roundtrip_bit_identical(self):
+        for g in SMALL:
+            wire = json.loads(json.dumps(proto.graph_to_wire(g)))
+            g2 = proto.graph_from_wire(wire)
+            np.testing.assert_array_equal(g.log2_card, g2.log2_card)
+            np.testing.assert_array_equal(g.log2_sel, g2.log2_sel)
+            assert list(g.edges) == list(g2.edges)
+            assert tuple(g.names) == tuple(g2.names)
+
+    def test_result_roundtrip(self):
+        g = SMALL[0]
+        r = engine.optimize(g)
+        wire = json.loads(json.dumps(proto.result_to_wire(r)))
+        r2 = proto.result_from_wire(wire, g)
+        assert float(r2.cost) == float(r.cost)
+        assert plan_shape(r2.plan) == plan_shape(r.plan)
+        assert r2.algorithm == r.algorithm
+        assert (r2.counters.evaluated, r2.counters.ccp) == \
+            (r.counters.evaluated, r.counters.ccp)
+
+
+# =============================================================== end to end
+
+class TestDaemonEndToEnd:
+    def test_bit_identical_and_warm_hits(self, daemon):
+        with DaemonClient(socket_path=daemon.address, tenant="t1") as c:
+            assert c.ping()
+            cold = c.optimize(SMALL)
+            ref_cache = PlanCache()
+            ref_cold = engine.optimize_many(SMALL, cache=ref_cache)
+            assert fingerprint(cold) == fingerprint(ref_cold)
+            warm = c.optimize(SMALL)
+            ref_warm = engine.optimize_many(SMALL, cache=ref_cache)
+            assert fingerprint(warm) == fingerprint(ref_warm)
+            assert c.last_meta["cache_hits"] == len(SMALL)
+
+    def test_cross_tenant_plan_cache(self, daemon):
+        with DaemonClient(socket_path=daemon.address, tenant="a") as ca:
+            ca.optimize(SMALL)
+        with DaemonClient(socket_path=daemon.address, tenant="b") as cb:
+            cb.optimize(SMALL)
+            assert cb.last_meta["cache_hits"] == len(SMALL)
+
+    def test_config_over_the_wire(self, daemon):
+        g = SMALL[0]
+        with DaemonClient(socket_path=daemon.address) as c:
+            res = c.optimize([g], config=OptimizerConfig(algorithm="dpsub"))
+            assert res[0].algorithm.startswith("batch_dpsub")
+
+    def test_stats_shape(self, daemon):
+        with DaemonClient(socket_path=daemon.address, tenant="s") as c:
+            c.optimize(SMALL[:1])
+            st = c.stats()
+            assert st["requests"] >= 1 and st["queries"] >= 1
+            assert st["tenants"]["s"]["requests"] == 1
+            assert {"keys", "compiles", "retraces"} <= set(st["exec"])
+            assert {"entries", "hits", "misses"} <= set(st["plancache"])
+            for k in ("p50", "p95", "p99"):
+                assert st["request_wall_s"][k] >= 0.0
+
+    def test_unknown_op_keeps_connection_usable(self, daemon):
+        with DaemonClient(socket_path=daemon.address) as c:
+            with pytest.raises(Exception, match="unknown op"):
+                c._call({"op": "bogus"})
+            assert c.ping()
+
+    def test_malformed_graph_is_request_error(self, daemon):
+        from repro.daemon.client import DaemonError
+        with DaemonClient(socket_path=daemon.address) as c:
+            proto.send_msg(c._sock, {"op": "optimize",
+                                     "graphs": [{"n": 3}]})  # missing keys
+            reply = proto.recv_msg(c._sock)
+            assert reply["ok"] is False and "error" in reply
+            assert c.ping()                    # connection survived
+            with pytest.raises(DaemonError):
+                raise DaemonError(reply["error"])
+
+
+# ============================================================= backpressure
+
+class TestBackpressure:
+    def test_shed_reasons(self, tmp_path):
+        gate = threading.Event()                   # worker parked until set
+        d = OptimizerDaemon(socket_path=str(tmp_path / "bp.sock"),
+                            queue_depth=1, tenant_inflight=1,
+                            worker_gate=gate)
+        d.start()
+        seeded = PlanCache()
+        ref = engine.optimize_many(SMALL[:1], cache=seeded)
+        # tenant b's request lands second, so on the daemon it's a
+        # plan-cache hit — its reference is the warm replay, not the cold
+        ref_warm = engine.optimize_many(SMALL[:1], cache=seeded)
+        outcomes: dict[str, object] = {}
+
+        def send(name: str, tenant: str):
+            try:
+                with DaemonClient(socket_path=d.address,
+                                  tenant=tenant) as c:
+                    outcomes[name] = fingerprint(c.optimize(SMALL[:1]))
+            except DaemonShed as e:
+                outcomes[name] = ("shed", e.reason)
+
+        try:
+            t1 = threading.Thread(target=send, args=("first", "a"))
+            t1.start()
+            # wait until the worker has dequeued t1's job and parked on the
+            # gate (queue empty, tenant a in flight)
+            deadline = time.monotonic() + 10
+            while time.monotonic() < deadline:
+                with d._lock:
+                    if d._tenant_inflight.get("a") == 1 and d._queue.empty():
+                        break
+                time.sleep(0.005)
+            else:
+                pytest.fail("worker never picked up the first job")
+            send("same_tenant", "a")               # a's cap (1) is taken
+            assert outcomes["same_tenant"] == ("shed", "tenant")
+            t3 = threading.Thread(target=send, args=("queued", "b"))
+            t3.start()
+            deadline = time.monotonic() + 10       # b's job fills the queue
+            while d._queue.qsize() < 1 and time.monotonic() < deadline:
+                time.sleep(0.005)
+            send("overflow", "c")                  # bounded queue is full
+            assert outcomes["overflow"] == ("shed", "queue")
+            gate.set()                             # release the worker
+            t1.join(timeout=60)
+            t3.join(timeout=60)
+            assert outcomes["first"] == fingerprint(ref)
+            assert outcomes["queued"] == fingerprint(ref_warm)
+        finally:
+            gate.set()
+            d.drain()
+            assert d._stopped.wait(10)
+
+
+# ==================================================== drain and checkpoints
+
+class TestDrainAndCheckpoint:
+    def test_drain_request_checkpoints_and_closes(self, tmp_path):
+        ckpt = str(tmp_path / "plans.plancache")
+        sockp = str(tmp_path / "dr.sock")
+        d = OptimizerDaemon(socket_path=sockp, cache_file=ckpt,
+                            checkpoint_every=10_000)
+        d.start()
+        c = DaemonClient(socket_path=sockp)
+        c.optimize(SMALL)
+        c.drain()
+        c.close()
+        assert d._stopped.wait(10)
+        assert not os.path.exists(sockp)
+        loaded = PlanCache.load(ckpt)
+        assert not loaded.stale_load and len(loaded) == len(SMALL)
+
+    def test_draining_daemon_rejects_new_work(self, tmp_path):
+        # admission is checked under the lock before anything enqueues; a
+        # request arriving after the drain flag flips gets an explicit
+        # error, not a hang (exercised directly — going through the socket
+        # would race the watcher closing it)
+        d = OptimizerDaemon(socket_path=str(tmp_path / "rj.sock"))
+        d.start()
+        d._draining.set()                          # as if SIGTERM landed
+        reply = d._optimize_request({"op": "optimize", "tenant": "x",
+                                     "graphs": []})
+        assert reply["ok"] is False and "draining" in reply["error"]
+        assert d._stopped.wait(10)                 # watcher finishes drain
+
+    def test_checkpoint_under_load_is_atomic(self, tmp_path):
+        """Readers loading the cache file while the daemon checkpoints after
+        every request must only ever see complete, non-stale files."""
+        ckpt = str(tmp_path / "hot.plancache")
+        d = OptimizerDaemon(socket_path=str(tmp_path / "at.sock"),
+                            cache_file=ckpt, checkpoint_every=1)
+        d.start()
+        stop = threading.Event()
+        bad: list[str] = []
+        seen: list[int] = []
+
+        def reader():
+            while not stop.is_set():
+                if os.path.exists(ckpt):
+                    loaded = PlanCache.load(ckpt)
+                    if loaded.stale_load:
+                        bad.append("stale/torn checkpoint observed")
+                        return
+                    seen.append(len(loaded))
+                time.sleep(0.001)
+
+        t = threading.Thread(target=reader, daemon=True)
+        t.start()
+        try:
+            with DaemonClient(socket_path=d.address) as c:
+                for g in SMALL:
+                    c.optimize([g])
+        finally:
+            stop.set()
+            t.join(timeout=10)
+            d.drain()
+            assert d._stopped.wait(10)
+        # the reader's job is torn-read detection; how many intermediate
+        # checkpoint versions it catches is timing-dependent (with a warm
+        # executable cache all three requests can finish in milliseconds)
+        assert not bad
+        final = PlanCache.load(ckpt)
+        assert not final.stale_load and len(final) == len(SMALL)

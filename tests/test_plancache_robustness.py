@@ -1,0 +1,140 @@
+"""``PlanCache`` persistence robustness: corrupt, truncated, hostile and
+concurrently-rewritten cache files must never crash, never serve wrong-key
+hits, and never execute code — a bad file degrades to a cold cache with
+``stale_load`` set.  The daemon shares its checkpoint file across
+processes, so these are load-bearing guarantees, not defensive polish."""
+import os
+import threading
+
+import pytest
+
+from repro.core import engine
+from repro.core.plancache import CACHE_FILE_VERSION, PlanCache
+from repro.workloads import generators as gen
+
+GRAPHS = [gen.chain(5, 1), gen.star(6, 2)]
+
+
+@pytest.fixture(scope="module")
+def warm_cache():
+    cache = PlanCache()
+    engine.optimize_many(GRAPHS, cache=cache)
+    assert len(cache) == len(GRAPHS)
+    return cache
+
+
+def test_good_file_roundtrips(warm_cache, tmp_path):
+    path = str(tmp_path / "good.plancache")
+    warm_cache.save(path)
+    loaded = PlanCache.load(path)
+    assert not loaded.stale_load
+    assert len(loaded) == len(warm_cache)
+    # and the loaded entries actually resolve: a fresh probe of the same
+    # graphs is all hits
+    res = engine.optimize_many(GRAPHS, cache=loaded)
+    assert loaded.stats.hits == len(GRAPHS) and len(res) == len(GRAPHS)
+
+
+def test_missing_file_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        PlanCache.load(str(tmp_path / "nope.plancache"))
+
+
+@pytest.mark.parametrize("garbage", [
+    b"",                                        # empty file
+    b"\x00\x01\x02 not a literal at all",       # binary junk
+    b"{'header': ",                             # unterminated literal
+    b"[1, 2, 3]",                               # valid literal, wrong shape
+    b"{'header': {'version': 999}}",            # missing keys
+    b"__import__('os').system('true')",         # code, not a literal:
+], ids=["empty", "binary", "unterminated",     # literal_eval must refuse
+        "wrong-shape", "missing-keys", "code-injection"])
+def test_corrupt_file_degrades_to_cold(tmp_path, garbage):
+    path = str(tmp_path / "bad.plancache")
+    with open(path, "wb") as f:
+        f.write(garbage)
+    loaded = PlanCache.load(path)
+    assert loaded.stale_load and len(loaded) == 0
+
+
+def test_truncated_file_degrades_to_cold(warm_cache, tmp_path):
+    path = str(tmp_path / "trunc.plancache")
+    warm_cache.save(path)
+    size = os.path.getsize(path)
+    for frac in (0.25, 0.5, 0.9):
+        with open(path, "rb") as f:
+            head = f.read(int(size * frac))
+        tpath = str(tmp_path / f"trunc{frac}.plancache")
+        with open(tpath, "wb") as f:
+            f.write(head)
+        loaded = PlanCache.load(tpath)
+        assert loaded.stale_load and len(loaded) == 0, f"frac={frac}"
+
+
+def test_version_drift_invalidates_whole_file(warm_cache, tmp_path):
+    path = str(tmp_path / "ver.plancache")
+    warm_cache.save(path)
+    text = open(path).read()
+    bumped = text.replace(f"'version': {CACHE_FILE_VERSION}",
+                          f"'version': {CACHE_FILE_VERSION + 1}", 1)
+    assert bumped != text
+    with open(path, "w") as f:
+        f.write(bumped)
+    loaded = PlanCache.load(path)
+    assert loaded.stale_load and len(loaded) == 0
+
+
+def test_tampered_entry_payload_degrades_to_cold(warm_cache, tmp_path):
+    # valid literal file whose entries have the right envelope but a
+    # mangled payload: the whole file is rejected, not half-loaded
+    path = str(tmp_path / "tamper.plancache")
+    warm_cache.save(path)
+    text = open(path).read()
+    with open(path, "w") as f:
+        f.write(text.replace("'entries': [(", "'entries': [(None, ", 1))
+    loaded = PlanCache.load(path)
+    assert loaded.stale_load and len(loaded) == 0
+
+
+def test_concurrent_rewrite_never_tears(warm_cache, tmp_path):
+    """``save`` is write-to-temp + ``os.replace``: a reader racing the
+    writer sees either the old or the new complete file, never a torn mix —
+    the invariant the daemon's checkpoint-under-load relies on."""
+    path = str(tmp_path / "race.plancache")
+    warm_cache.save(path)
+    stop = threading.Event()
+    failures: list[str] = []
+
+    def writer():
+        while not stop.is_set():
+            warm_cache.save(path)
+
+    w = threading.Thread(target=writer, daemon=True)
+    w.start()
+    try:
+        for _ in range(200):
+            loaded = PlanCache.load(path)
+            if loaded.stale_load or len(loaded) != len(warm_cache):
+                failures.append(
+                    f"torn read: stale={loaded.stale_load} "
+                    f"entries={len(loaded)}")
+                break
+    finally:
+        stop.set()
+        w.join(timeout=10)
+    assert not failures, failures[0]
+
+
+def test_save_leaves_no_temp_droppings(warm_cache, tmp_path):
+    path = str(tmp_path / "tidy.plancache")
+    for _ in range(3):
+        warm_cache.save(path)
+    assert os.listdir(tmp_path) == ["tidy.plancache"]
+
+
+def test_stale_load_capped_entries(warm_cache, tmp_path):
+    # max_entries caps what load admits (most recent entries win)
+    path = str(tmp_path / "cap.plancache")
+    warm_cache.save(path)
+    loaded = PlanCache.load(path, max_entries=1)
+    assert not loaded.stale_load and len(loaded) == 1
