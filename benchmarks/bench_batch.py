@@ -53,6 +53,18 @@ to the solo oracle *and* to the degenerate 1-device lattice run, exactly one
 collective per committed DP level, zero retraces across the timed repeats.
 The frontier speedup vs the solo oracle is reported, never gated.
 
+``--policy`` additionally runs the **learned-policy** benchmark: a
+``repro.core.policy.PolicyTable`` learns its (NMAX bucket, lane space)
+dispatch from flight telemetry over ``POLICY_WARMUP`` full-stream passes,
+is frozen, and the frozen table's dispatch is timed against the static
+defaults on the same stream.  ``check_regression.py`` gates the safety
+half deterministically — learned costs bit-identical to static, the
+policy-off run's lane counts equal to the plain batched run's (the policy
+machinery must be a no-op when absent), zero retraces in the timed
+repeats — and the throughput half against a conservative noise floor
+(the learned dispatch must not *lose* to the static defaults it was
+trained against).
+
 ``--json`` writes the machine-readable report consumed by
 ``benchmarks/check_regression.py`` (the CI bench-regression gate; the
 ``devices-4`` CI job adds the sharded section to the gated report);
@@ -80,7 +92,7 @@ def _lanes(results):
 def bench(nq: int = 32, repeat: int = 3, seed: int = 0,
           devices: int | None = None, pipeline: bool = False,
           uniondp: bool = False, lattice: bool = False,
-          smoke: bool = False) -> dict:
+          policy: bool = False, smoke: bool = False) -> dict:
     from repro.core import engine
     graphs = make_stream(nq, seed)
 
@@ -141,6 +153,8 @@ def bench(nq: int = 32, repeat: int = 3, seed: int = 0,
                                        devices, out["algorithms"])
     if pipeline:
         out["pipeline"] = bench_pipeline(graphs, repeat)
+    if policy:
+        out["policy"] = bench_policy(graphs, repeat)
     if uniondp:
         out["uniondp_quality"] = bench_uniondp_quality(smoke)
     if lattice:
@@ -294,6 +308,104 @@ def bench_pipeline(graphs, repeat) -> dict:
     }
 
 
+# full-stream learning passes before the table is frozen: every (nmax,
+# space) bucket must clear its explore phase (up to 3 candidate arms x
+# EXPLORE_FLIGHTS flights on tree buckets) and settle its wall-per-query
+# EMAs, so the frozen table exploits a converged estimate, not a coin flip
+POLICY_WARMUP = 8
+
+
+def bench_policy(graphs, repeat) -> dict:
+    """Learned-policy dispatch vs the static defaults on the same stream.
+
+    A fresh ``PolicyTable`` learns over ``POLICY_WARMUP`` full-stream
+    passes (exploring every candidate lane space per bucket, folding
+    flight telemetry into its EMAs), is frozen, and one uncounted frozen
+    pass compiles whatever (space, chunk, pend-window) configuration the
+    table now chooses.  The timed repeats then interleave nothing new:
+
+      * ``costs_equal`` — learned dispatch and static dispatch must return
+        bit-identical costs (a policy can only move lanes between spaces
+        that enumerate the same CCP minima, never change plans);
+      * ``off_evaluated_lanes`` — the policy-off run timed here must match
+        the plain batched run's lane count exactly (``check_regression``
+        compares it to the report's ``algorithms.mpdp`` figure: passing
+        ``policy=None`` must be byte-for-byte the static path);
+      * ``retraces`` — the timed repeats must hit the executable cache
+        (the frozen table replays one fixed dispatch; zero compiles);
+      * ``speedup_vs_static`` — gated against a conservative noise floor:
+        the learned dispatch must not lose to the defaults it was trained
+        against.  On CPU containers the win comes from buckets where
+        batched DPSUB out-runs the MPDP spaces wall-clock despite
+        evaluating more lanes; the learned lane counts are reported, never
+        gated (trading lanes for wall time is the point).
+    """
+    from repro.core import engine
+    from repro.core.exec_cache import EXEC
+    from repro.core.policy import PolicyTable
+    algo = "mpdp"
+    # static warm: the defaults' compiles land here (bench() already warmed
+    # this path, but keep the section self-contained)
+    engine.optimize_many(graphs, algorithm=algo)
+
+    pol = PolicyTable()
+    learn_costs_equal = True
+    ref_costs = None
+    for _ in range(POLICY_WARMUP):
+        rs = engine.optimize_many(graphs, algorithm=algo, policy=pol)
+        costs = [r.cost for r in rs]
+        if ref_costs is None:
+            ref_costs = costs
+        learn_costs_equal = learn_costs_equal and costs == ref_costs
+    pol.freeze()
+    # uncounted frozen pass: compiles the chosen configuration so the timed
+    # repeats below can be gated on zero retraces
+    engine.optimize_many(graphs, algorithm=algo, policy=pol)
+
+    compiles0 = EXEC.total()
+    t_off, off = [], None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        off = engine.optimize_many(graphs, algorithm=algo)
+        t_off.append(time.perf_counter() - t0)
+    t_on, on = [], None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        on = engine.optimize_many(graphs, algorithm=algo, policy=pol)
+        t_on.append(time.perf_counter() - t0)
+    retraces = EXEC.total() - compiles0
+    off_costs = [r.cost for r in off]
+    on_costs = [r.cost for r in on]
+    # recorded, not asserted: a divergence must still land in the JSON
+    # report so check_regression fails with the gate message instead of
+    # this script dying before writing the artifact
+    costs_equal = (off_costs == on_costs == ref_costs
+                   and learn_costs_equal)
+    if not costs_equal:
+        print("# WARNING: learned-policy costs diverged from static")
+    off_ev, off_ccp = _lanes(off)
+    on_ev, on_ccp = _lanes(on)
+    nq = len(graphs)
+    return {
+        "algorithm": algo,
+        "warmup_passes": POLICY_WARMUP,
+        "costs_equal": costs_equal,
+        "off_s": min(t_off),
+        "on_s": min(t_on),
+        "qps": nq / min(t_on),
+        "qps_static": nq / min(t_off),
+        "speedup_vs_static": min(t_off) / min(t_on),
+        "off_evaluated_lanes": off_ev,
+        "off_ccp_lanes": off_ccp,
+        "on_evaluated_lanes": on_ev,
+        "on_ccp_lanes": on_ccp,
+        "spaces_static": sorted({r.algorithm for r in off}),
+        "spaces_learned": sorted({r.algorithm for r in on}),
+        "retraces": retraces,
+        "table": pol.summary(),
+    }
+
+
 UNIONDP_K = 10
 # deterministic quality gates, written into every report so a baseline
 # refresh (commit the fresh report verbatim) preserves them: <= GOO per
@@ -440,6 +552,11 @@ def main() -> None:
                          "deterministic: costs equal solo + 1-device, one "
                          "collective per level, zero retraces); needs "
                          "--devices >= 2")
+    ap.add_argument("--policy", action="store_true",
+                    help="also bench the learned PolicyTable dispatch vs "
+                         "the static defaults (costs bit-identical + "
+                         "policy-off lane identity + zero-retrace gates; "
+                         "throughput gated against a noise floor)")
     ap.add_argument("--smoke", action="store_true",
                     help="trimmed CI mode (16 queries, min-of-2 repeats)")
     ap.add_argument("--json", type=str, default=None,
@@ -458,7 +575,7 @@ def main() -> None:
         nq, repeat = min(nq, 16), 2
     r = bench(nq, repeat, args.seed, devices=args.devices,
               pipeline=args.pipeline, uniondp=args.uniondp,
-              lattice=args.lattice, smoke=args.smoke)
+              lattice=args.lattice, policy=args.policy, smoke=args.smoke)
     print("mode,queries,wall_s,queries_per_s,evaluated_lanes")
     print(f"sequential,{r['queries']},{r['seq_s']:.3f},{r['seq_qps']:.2f},-")
     for algo, a in r["algorithms"].items():
@@ -488,6 +605,18 @@ def main() -> None:
         print(f"# pipelined[{p['algorithm']}] {p['speedup_vs_sync']:.2f}x vs "
               f"synchronous ({p['qps']:.2f} vs {p['qps_sync']:.2f} q/s), "
               f"costs bit-identical, {p['retraces']} retraces in timed runs")
+    if "policy" in r:
+        p = r["policy"]
+        print(f"policy[{p['algorithm']}],{r['queries']},{p['on_s']:.3f},"
+              f"{p['qps']:.2f},{p['on_evaluated_lanes']}")
+        print(f"# policy[{p['algorithm']}] {p['speedup_vs_static']:.2f}x vs "
+              f"static defaults ({p['qps']:.2f} vs {p['qps_static']:.2f} "
+              f"q/s) after {p['warmup_passes']} learning passes; costs "
+              f"bit-identical: {p['costs_equal']}, lanes "
+              f"{p['on_evaluated_lanes']} (static {p['off_evaluated_lanes']}),"
+              f" {p['retraces']} retraces in timed runs; table "
+              f"{p['table']['entries']} entries / "
+              f"{p['table']['space_overrides']} space overrides")
     if "lattice" in r:
         lat = r["lattice"]
         d = lat["devices"]

@@ -38,6 +38,17 @@ must serve every repeated bucket shape).  The pipelined-vs-sync speedup is
 reported, never gated — on a 2-core CI container the overlap has nothing to
 hide behind.
 
+When the baseline carries a ``policy`` section (from ``bench_batch
+--policy``), the learned-dispatch path is gated on three deterministic
+invariants plus one conservative throughput floor: learned costs must equal
+the static defaults' bit-for-bit (a policy may move lanes between spaces,
+never change plans), the policy-off run's lane count must equal the plain
+batched run's (``policy=None`` must be byte-for-byte the static path), the
+timed repeats must trigger zero retraces (a frozen table replays one fixed
+dispatch), and the learned-vs-static speedup must clear the baseline's
+``speedup_floor`` (default 0.95 — the learned dispatch must not lose to the
+defaults it was trained against; its upside is reported, never gated).
+
 When the baseline carries a ``lattice`` section (from ``bench_batch
 --lattice --devices N``), the intra-query lattice path is gated on its
 deterministic invariants only: the D-device lattice cost must equal both the
@@ -115,6 +126,7 @@ def check(current: dict, baseline: dict, tolerance: float = 0.25) -> list[str]:
             f"{algos['dpsub']['evaluated_lanes']}")
     errors += check_sharded(current, baseline, tolerance)
     errors += check_pipeline(current, baseline)
+    errors += check_policy(current, baseline)
     errors += check_lattice(current, baseline)
     errors += check_uniondp(current, baseline)
     errors += check_daemon(current, baseline)
@@ -264,6 +276,53 @@ def check_uniondp(current: dict, baseline: dict) -> list[str]:
     return errors
 
 
+def check_policy(current: dict, baseline: dict) -> list[str]:
+    """Learned-policy gates: safety is deterministic (costs bit-identical
+    to static, policy-off lane identity, zero retraces from the frozen
+    table), throughput is a conservative floor (the learned dispatch must
+    not lose to the static defaults; its upside is reported only)."""
+    base_p = baseline.get("policy")
+    cur_p = current.get("policy")
+    if base_p is None:
+        if cur_p is not None:
+            print("note: current report has a policy section but the "
+                  "baseline does not — policy gates are vacuous until the "
+                  "baseline is refreshed with bench_batch --policy")
+        return []
+    if cur_p is None:
+        print("note: baseline has a policy section but the current report "
+              "was benched without --policy; policy checks skipped "
+              "(the bench-regression CI job runs the gating configuration)")
+        return []
+    errors: list[str] = []
+    if not cur_p.get("costs_equal", False):
+        errors.append("[policy] learned-dispatch costs diverged from the "
+                      "static defaults (a policy may move lanes between "
+                      "spaces, never change plans)")
+    uns = (current.get("algorithms") or {}).get(cur_p.get("algorithm"))
+    if uns is not None and \
+            cur_p.get("off_evaluated_lanes") != uns["evaluated_lanes"]:
+        errors.append(
+            f"[policy] policy-off lane count diverged from the plain "
+            f"batched run: {cur_p.get('off_evaluated_lanes')} != "
+            f"{uns['evaluated_lanes']} (passing policy=None must be "
+            "byte-for-byte the static path)")
+    if cur_p.get("retraces", 0) > base_p.get("retraces", 0):
+        errors.append(
+            f"[policy] timed repeats retraced kernels: "
+            f"{cur_p['retraces']} > baseline {base_p['retraces']} "
+            "(a frozen table replays one fixed dispatch — the uncounted "
+            "post-freeze pass must have compiled everything)")
+    floor = base_p.get("speedup_floor", 0.95)
+    if cur_p.get("speedup_vs_static", 0.0) < floor:
+        errors.append(
+            f"[policy] learned dispatch lost to the static defaults: "
+            f"{cur_p.get('speedup_vs_static', 0.0):.2f}x < floor {floor} "
+            "(after warmup the table must at least replay the static "
+            "choice; losing means the wall-clock EMAs steer wrong)")
+    return errors
+
+
 def check_pipeline(current: dict, baseline: dict) -> list[str]:
     """Deterministic pipeline gates: pipelined costs equal the synchronous
     path bit-for-bit, and the timed repeats compile nothing (the executable
@@ -361,6 +420,13 @@ def main() -> int:
         print(f"[pipeline:{p['algorithm']}] qps {p['qps']:.2f} "
               f"({p['speedup_vs_sync']:.2f}x vs sync) "
               f"costs_equal {p['costs_equal']} retraces {p['retraces']}")
+    if "policy" in current:
+        p = current["policy"]
+        print(f"[policy:{p['algorithm']}] qps {p['qps']:.2f} "
+              f"({p['speedup_vs_static']:.2f}x vs static) "
+              f"costs_equal {p['costs_equal']} retraces {p['retraces']} "
+              f"lanes on/off {p['on_evaluated_lanes']}/"
+              f"{p['off_evaluated_lanes']}")
     if "lattice" in current:
         lat = current["lattice"]
         d = lat["devices"]

@@ -48,21 +48,28 @@ EXACT_LIMIT_LATTICE = 18   # with a mesh: lattice flights shard one query's
                            # lane space, so exact DP reaches further
 
 
-def optimize_stream(graphs, cache, devices=None, pipeline=None):
+def optimize_stream(graphs, cache, devices=None, pipeline=None, policy=None,
+                    budget_s=None):
     """Optimize the whole stream: exact-tier queries through the streaming
     service (admission-controlled flights), large queries through UnionDP;
     ``devices`` shards both batched tiers, ``pipeline`` overlaps host and
-    device work inside every engine.  Returns (results, StreamReport)."""
+    device work inside every engine.  With a ``policy.PolicyTable`` the
+    static exact limit is replaced by the learned one
+    (``policy.exact_limit``: the largest observed NMAX bucket whose
+    wall-per-query EMA fits ``budget_s``) and both tiers learn their
+    dispatch from flight telemetry.  Returns (results, StreamReport)."""
     from repro.core import service
     from repro.core.config import OptimizerConfig
     from repro.heuristics import uniondp
     results = [None] * len(graphs)
     limit = EXACT_LIMIT_LATTICE if devices else EXACT_LIMIT
+    if policy is not None and budget_s is not None:
+        limit = policy.exact_limit(limit, budget_s)
     exact_idx = [i for i, g in enumerate(graphs) if g.n <= limit]
     report = None
     if exact_idx:
         cfg = OptimizerConfig(cache=cache, devices=devices,
-                              pipeline=pipeline)
+                              pipeline=pipeline, policy=policy)
         rs, report = service.optimize_stream(
             [graphs[i] for i in exact_idx], config=cfg)
         for i, r in zip(exact_idx, rs):
@@ -70,7 +77,7 @@ def optimize_stream(graphs, cache, devices=None, pipeline=None):
     for i, g in enumerate(graphs):
         if results[i] is None:
             results[i] = uniondp.solve(g, k=10, devices=devices,
-                                       pipeline=pipeline)
+                                       pipeline=pipeline, policy=policy)
     return results, report
 
 

@@ -365,7 +365,8 @@ class BatchEngine(_LevelLoop):
 
     def __init__(self, graphs: list[JoinGraph], chunk: int = CHUNK,
                  algorithm: str = "dpsub", cyc_cap: int = CYC_CAP_DEFAULT,
-                 pipeline: bool | None = None):
+                 pipeline: bool | None = None,
+                 pend_window: int | None = None):
         if not graphs:
             raise ValueError("empty batch")
         if algorithm not in ("dpsub", "mpdp_tree", "mpdp_general"):
@@ -383,6 +384,13 @@ class BatchEngine(_LevelLoop):
         self.cyc_cap = cyc_cap
         self.pallas = _use_pallas()        # read per engine; static jit arg
         self.pipeline = _use_pipeline() if pipeline is None else bool(pipeline)
+        # drain-window override (learned policies shrink it for flights
+        # whose levels dispatch few chunks) + host-side dispatch tally for
+        # telemetry; neither touches device values, so results are
+        # bit-identical for any pend_window >= 0
+        self.pend_window = (PEND_WINDOW if pend_window is None
+                            else int(pend_window))
+        self.chunks_dispatched = 0
         self._exec_keys: set[tuple] = set()
         self._wall = 0.0
         self.B = len(graphs)
@@ -519,7 +527,8 @@ class BatchEngine(_LevelLoop):
             fpad[: self.B + 1] = fl
             ctx["pend"].append(kf(jnp.asarray(fpad), jnp.int32(i),
                                   self.binom, self.adj_b))
-            self._filter_drain(ctx, PEND_WINDOW)
+            self.chunks_dispatched += 1
+            self._filter_drain(ctx, self.pend_window)
         self.timings["filter"] = (self.timings.get("filter", 0.0)
                                   + time.perf_counter() - t0)
         return ctx
@@ -646,7 +655,8 @@ class BatchEngine(_LevelLoop):
                              jnp.int32(seg0), jnp.int32(i), self.adj_b,
                              self.memo_cost, self.memo_rows)
             ctx["pend"].append((seg0, out))
-            self._eval_drain(ctx, PEND_WINDOW)
+            self.chunks_dispatched += 1
+            self._eval_drain(ctx, self.pend_window)
         self.timings["evaluate"] = (self.timings.get("evaluate", 0.0)
                                     + time.perf_counter() - t0)
         return ctx
@@ -746,7 +756,8 @@ class BatchEngine(_LevelLoop):
                          jnp.int32(lane1 - lane0), self.adj_b,
                          self.memo_cost, self.memo_rows)
             ctx["pend"].append((p0, npair, out))
-            self._eval_general_drain(ctx, PEND_WINDOW)
+            self.chunks_dispatched += 1
+            self._eval_general_drain(ctx, self.pend_window)
         self.timings["evaluate"] = (self.timings.get("evaluate", 0.0)
                                     + time.perf_counter() - t0)
         return ctx
@@ -935,7 +946,7 @@ def resolve_deferred(graphs, results, cache, deferred, dup_rep) -> None:
 
 def optimize_many(graphs: list[JoinGraph], algorithm=UNSET, chunk=UNSET,
                   cache=UNSET, max_flight=UNSET, devices=UNSET, mesh=UNSET,
-                  pipeline=UNSET, max_batch=UNSET, *,
+                  pipeline=UNSET, max_batch=UNSET, policy=UNSET, *,
                   config: OptimizerConfig | None = None
                   ) -> list[OptimizeResult]:
     """Optimize a stream of queries, batching compatible ones per device pass.
@@ -966,6 +977,11 @@ def optimize_many(graphs: list[JoinGraph], algorithm=UNSET, chunk=UNSET,
     * ``pipeline``: run the batched engines pipelined (host compaction of
       level i+1 under device evaluate of level i; bit-identical results).
       ``None`` defers to the ``REPRO_PIPELINE`` env flag.
+    * ``policy``: optional ``policy.PolicyTable``.  Under ``auto``/``mpdp``
+      dispatch it may swap a bucket's lane space for a learned-faster one
+      and shrink the chunk / drain window; every flight's telemetry is fed
+      back.  All spaces enumerate the same CCP minima, so costs and plans
+      are identical either way; ``None`` (default) is the static path.
     * queries with ``nmax_bucket(n) > NMAX_BATCH`` (memo would not fit the
       stacked layout) and single-relation queries are handled per query.
 
@@ -975,9 +991,12 @@ def optimize_many(graphs: list[JoinGraph], algorithm=UNSET, chunk=UNSET,
     max_flight = alias_kwarg(max_flight, max_batch, "max_batch", "max_flight")
     cfg = resolve_config(config, algorithm=algorithm, chunk=chunk,
                          cache=cache, max_flight=max_flight, devices=devices,
-                         mesh=mesh, pipeline=pipeline)
+                         mesh=mesh, pipeline=pipeline, policy=policy)
     algorithm, chunk, cache = cfg.algorithm, cfg.chunk, cfg.cache
     pipeline = cfg.pipeline
+    # learned policies only steer the auto dispatcher: an explicit lane
+    # space is a user decision the policy must not override
+    adaptive = cfg.policy if algorithm in ("auto", "mpdp") else None
     shard_mesh = None
     if cfg.mesh is not None or cfg.devices is not None:
         from . import shard as _shard
@@ -997,14 +1016,32 @@ def optimize_many(graphs: list[JoinGraph], algorithm=UNSET, chunk=UNSET,
     for (b, space), idxs in sorted(buckets.items()):
         for s0 in range(0, len(idxs), step):
             group = idxs[s0: s0 + step]
+            run_space, run_chunk, run_kw = space, chunk, {}
+            if adaptive is not None:
+                dec = adaptive.choose(b, space, default_chunk=chunk,
+                                      default_pend=PEND_WINDOW)
+                if dec.space is not None:
+                    run_space = dec.space
+                if dec.chunk is not None:
+                    run_chunk = dec.chunk
+                if dec.pend_window is not None:
+                    run_kw["pend_window"] = dec.pend_window
+                t_fl = time.perf_counter()
             if shard_mesh is None:
-                eng = BatchEngine([graphs[qi] for qi in group], chunk=chunk,
-                                  algorithm=space, pipeline=pipeline)
+                eng = BatchEngine([graphs[qi] for qi in group],
+                                  chunk=run_chunk, algorithm=run_space,
+                                  pipeline=pipeline, **run_kw)
             else:
                 eng = _shard.ShardedBatchEngine(
-                    [graphs[qi] for qi in group], shard_mesh, chunk=chunk,
-                    algorithm=space, pipeline=pipeline)
-            for qi, r in zip(group, eng.run()):
+                    [graphs[qi] for qi in group], shard_mesh, chunk=run_chunk,
+                    algorithm=run_space, pipeline=pipeline, **run_kw)
+            rs = eng.run()
+            if adaptive is not None:
+                from . import telemetry as _tele
+                adaptive.observe(b, space, run_space, _tele.capture(
+                    eng, rs, nmax=b, queries=len(group),
+                    wall_s=time.perf_counter() - t_fl))
+            for qi, r in zip(group, rs):
                 results[qi] = r
                 if cache is not None:
                     cache.put(graphs[qi], r)

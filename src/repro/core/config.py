@@ -24,8 +24,9 @@ config object is meant to be shared across calls):
                        pipeline
     optimize_lattice   algorithm, chunk, cyc_cap, devices, mesh, pipeline
 
-``cache`` and ``mesh`` are process-local live objects (a ``PlanCache``, a
-jax ``Mesh``); everything else is a pure literal.  The daemon wire protocol
+``cache``, ``mesh`` and ``policy`` are process-local live objects (a
+``PlanCache``, a jax ``Mesh``, a ``policy.PolicyTable``); everything else
+is a pure literal.  The daemon wire protocol
 (``repro.daemon``) serializes exactly this object via ``to_wire()`` /
 ``from_wire()`` — the literal fields only, in the same pickle-free
 discipline as ``PlanCache.save`` — so a request's config round-trips
@@ -64,9 +65,10 @@ class _Unset:
 
 UNSET = _Unset()
 
-# Fields that cross the daemon wire.  ``cache``/``mesh`` are process-local
-# and deliberately excluded: a config carrying either cannot serialize
-# (``to_wire`` raises) — the daemon owns its own shared cache and mesh.
+# Fields that cross the daemon wire.  ``cache``/``mesh``/``policy`` are
+# process-local and deliberately excluded: a config carrying any of them
+# cannot serialize (``to_wire`` raises) — the daemon owns its own shared
+# cache, mesh and policy table.
 _WIRE_FIELDS = ("algorithm", "chunk", "devices", "pipeline", "max_flight",
                 "cyc_cap", "enum", "lattice")
 
@@ -92,6 +94,11 @@ class OptimizerConfig:
     * ``lattice`` — route single-query ``optimize`` through the intra-query
       lattice-sharded engine on ``devices``/``mesh`` (the old
       ``optimize(lattice_devices=...)`` spelling).
+    * ``policy`` — optional ``policy.PolicyTable`` consulted by the
+      batched/streaming dispatchers for learned lane-space, chunk and
+      drain-window choices, and fed each flight's telemetry.  ``None``
+      (the default) means every dispatch takes the static path,
+      byte-identical to a policy-free build.  Process-local, never wired.
     """
 
     algorithm: str = "auto"
@@ -104,6 +111,7 @@ class OptimizerConfig:
     cyc_cap: int = CYC_CAP_DEFAULT
     enum: str = "unrank"
     lattice: bool = False
+    policy: object | None = None
 
     def __post_init__(self):
         if self.chunk <= 0:
@@ -134,6 +142,10 @@ class OptimizerConfig:
         if self.mesh is not None:
             raise ValueError("OptimizerConfig.mesh is process-local and "
                              "cannot be wired; pass devices=N instead")
+        if self.policy is not None:
+            raise ValueError("OptimizerConfig.policy is process-local and "
+                             "cannot be wired; the daemon owns the shared "
+                             "policy table")
         return {f: getattr(self, f) for f in _WIRE_FIELDS}
 
     @staticmethod

@@ -142,6 +142,32 @@ def np_rows_for_sets(sets_np: np.ndarray, g) -> np.ndarray:
     return out
 
 
+def np_corrected_graph(g, rows_l2: dict):
+    """``g`` with per-relation log2 cardinalities replaced by learned values.
+
+    ``rows_l2`` maps relation name -> corrected log2 rows — typically
+    ``policy.PolicyTable.drift_rows()``, the EMA of *observed* execution
+    cardinalities.  Relations not named are trusted unchanged; with no
+    matching name ``g`` itself is returned (same object, so callers can
+    test identity to skip re-optimization).  Edge selectivities are left
+    alone: per-relation row feedback is what executions actually measure,
+    and a changed base card already moves every memo row containing it
+    (``np_rows_for_sets`` sums membership @ log2_card).
+    """
+    import dataclasses
+    new = np.array(g.log2_card, np.float32, copy=True)
+    changed = False
+    for v, name in enumerate(g.names):
+        if name in rows_l2:
+            val = np.float32(max(float(rows_l2[name]), 0.0))
+            if val != new[v]:
+                new[v] = val
+                changed = True
+    if not changed:
+        return g
+    return dataclasses.replace(g, log2_card=new)
+
+
 def np_rows_log2(s: int, g) -> np.float32:
     """log2 rows of the join over relation set ``s`` (host; JoinGraph g)."""
     out = np.float32(0.0)

@@ -640,7 +640,7 @@ def optimize(g: JoinGraph, algorithm=UNSET, chunk=UNSET, cyc_cap=UNSET,
 
 def optimize_many(graphs, algorithm=UNSET, chunk=UNSET, cache=UNSET,
                   max_flight=UNSET, devices=UNSET, mesh=UNSET,
-                  pipeline=UNSET, max_batch=UNSET, *,
+                  pipeline=UNSET, max_batch=UNSET, policy=UNSET, *,
                   config: OptimizerConfig | None = None):
     """Batched multi-query optimization — see ``batch.optimize_many``.
 
@@ -669,12 +669,15 @@ def optimize_many(graphs, algorithm=UNSET, chunk=UNSET, cache=UNSET,
     (``tests/test_uniondp_quality.py`` gates it end to end).
 
     ``max_flight`` is the canonical sub-batch cap (``max_batch=`` is the
-    deprecated alias); all knobs can be passed as one
-    ``config=OptimizerConfig(...)`` instead of the kwargs (never both).
+    deprecated alias); ``policy=`` takes a ``policy.PolicyTable`` for
+    learned lane-space/chunk/drain-window dispatch (default ``None``:
+    static dispatch, byte-identical to a policy-free build); all knobs can
+    be passed as one ``config=OptimizerConfig(...)`` instead of the kwargs
+    (never both).
     """
     from . import batch as _batch
     max_flight = alias_kwarg(max_flight, max_batch, "max_batch", "max_flight")
     cfg = resolve_config(config, algorithm=algorithm, chunk=chunk,
                          cache=cache, max_flight=max_flight, devices=devices,
-                         mesh=mesh, pipeline=pipeline)
+                         mesh=mesh, pipeline=pipeline, policy=policy)
     return _batch.optimize_many(graphs, config=cfg)

@@ -132,6 +132,7 @@ class LatticeShardedEngine(_LevelLoop):
         self.nmax = lattice_bucket(g.n)
         self.flat = 1 << self.nmax         # bcap = 1: one query per region
         self.collectives = 0               # min_left_commit dispatches
+        self.chunks_dispatched = 0         # telemetry: chunk dispatch tally
         self._exec_keys: set[tuple] = set()
         self._wall = 0.0
         self.counters = [Counters()]
@@ -290,6 +291,7 @@ class LatticeShardedEngine(_LevelLoop):
             fpad = np.clip(fl, -_CLIP, _CLIP).astype(np.int32)
             ctx["pend"].append(kf(jnp.asarray(fpad), k_arr, self.binom_b,
                                   self.adj_b))
+            self.chunks_dispatched += 1
             self._filter_drain(ctx, PEND_WINDOW)
         self.timings["filter"] = (self.timings.get("filter", 0.0)
                                   + time.perf_counter() - t0)
@@ -374,6 +376,7 @@ class LatticeShardedEngine(_LevelLoop):
                              seg0_d, i_arr, self.adj_b, self.memo_cost,
                              self.memo_rows)
             ctx["pend"].append((c0, seg0, out))
+            self.chunks_dispatched += 1
             self._eval_drain(ctx, PEND_WINDOW)
         self.timings["evaluate"] = (self.timings.get("evaluate", 0.0)
                                     + time.perf_counter() - t0)
@@ -476,6 +479,7 @@ class LatticeShardedEngine(_LevelLoop):
                 jnp.asarray(lane_cnt), self.adj_b, self.memo_cost,
                 self.memo_rows)
             ctx["pend"].append((p0s, npairs, out))
+            self.chunks_dispatched += 1
             self._eval_general_drain(ctx, PEND_WINDOW)
         self.timings["evaluate"] = (self.timings.get("evaluate", 0.0)
                                     + time.perf_counter() - t0)

@@ -58,7 +58,8 @@ import time
 
 import numpy as np
 
-from .batch import (BatchEngine, bucket_pending, dedup_pending,
+from . import telemetry as _telemetry
+from .batch import (PEND_WINDOW, BatchEngine, bucket_pending, dedup_pending,
                     lattice_pending, probe_stream, resolve_deferred)
 from .config import UNSET, OptimizerConfig, resolve_config
 from .joingraph import JoinGraph
@@ -74,6 +75,10 @@ class FlightReport:
     lattice: bool = False          # single-query intra-query lattice flight
     wall_s: float = 0.0            # run_levels dispatch -> finalize done
     finalize_s: float = 0.0        # host-only finalize share (overlappable)
+    # execution profile captured at finalize (telemetry.FlightTelemetry);
+    # ``space`` above is the ADMISSION space, ``telemetry.space`` the lane
+    # space actually executed (they differ only under a learned policy)
+    telemetry: object | None = None
 
     @property
     def key(self) -> tuple[int, str]:
@@ -96,6 +101,10 @@ class StreamReport:
         xs = np.asarray(self.latency_s, np.float64)
         return {p: float(np.percentile(xs, p)) for p in ps}
 
+    def telemetry_summary(self) -> dict:
+        """Stream-wide roll-up of the per-flight telemetry records."""
+        return _telemetry.aggregate(fl.telemetry for fl in self.flights)
+
 
 class StreamOptimizer:
     """Admission-controlled, flight-pipelined optimizer for query streams.
@@ -110,16 +119,21 @@ class StreamOptimizer:
 
     def __init__(self, algorithm=UNSET, chunk=UNSET, cache=UNSET,
                  devices=UNSET, mesh=UNSET, pipeline=UNSET, max_flight=UNSET,
-                 *, config: OptimizerConfig | None = None):
+                 policy=UNSET, *, config: OptimizerConfig | None = None):
         cfg = resolve_config(config, algorithm=algorithm, chunk=chunk,
                              cache=cache, devices=devices, mesh=mesh,
-                             pipeline=pipeline, max_flight=max_flight)
+                             pipeline=pipeline, max_flight=max_flight,
+                             policy=policy)
         self.config = cfg
         self.algorithm = cfg.algorithm
         self.chunk = cfg.chunk
         self.cache = cfg.cache
         self.pipeline = cfg.pipeline
         self.max_flight = cfg.max_flight
+        # learned policies steer only the auto dispatcher (an explicit lane
+        # space is a user decision); flights record telemetry either way
+        self.policy = (cfg.policy
+                       if cfg.algorithm in ("auto", "mpdp") else None)
         self.mesh = None
         if cfg.mesh is not None or cfg.devices is not None:
             from . import shard as _shard
@@ -152,22 +166,36 @@ class StreamOptimizer:
         return flights, solo
 
     def _spawn(self, graphs: list[JoinGraph], fl: FlightReport):
-        """Build the flight's engine and dispatch its level loop."""
+        """Build the flight's engine and dispatch its level loop.  With a
+        policy table the batched paths run under its learned lane-space /
+        chunk / drain-window decision (``fl.space`` stays the admission
+        space; the executed space lands in ``fl.telemetry``)."""
         members = [graphs[qi] for qi in fl.queries]
+        space, chunk, kw = fl.space, self.chunk, {}
+        if self.policy is not None and not fl.lattice:
+            dec = self.policy.choose(fl.nmax, fl.space,
+                                     default_chunk=self.chunk,
+                                     default_pend=PEND_WINDOW)
+            if dec.space is not None:
+                space = dec.space
+            if dec.chunk is not None:
+                chunk = dec.chunk
+            if dec.pend_window is not None:
+                kw["pend_window"] = dec.pend_window
         if fl.lattice:
             from .lattice import LatticeShardedEngine
             eng = LatticeShardedEngine(members[0], self.mesh,
                                        chunk=self.chunk, algorithm=fl.space,
                                        pipeline=self.pipeline)
         elif self.mesh is None:
-            eng = BatchEngine(members, chunk=self.chunk, algorithm=fl.space,
-                              pipeline=self.pipeline)
+            eng = BatchEngine(members, chunk=chunk, algorithm=space,
+                              pipeline=self.pipeline, **kw)
         else:
             from . import shard as _shard
             eng = _shard.ShardedBatchEngine(members, self.mesh,
-                                            chunk=self.chunk,
-                                            algorithm=fl.space,
-                                            pipeline=self.pipeline)
+                                            chunk=chunk,
+                                            algorithm=space,
+                                            pipeline=self.pipeline, **kw)
         eng.run_levels()
         return eng
 
@@ -176,13 +204,22 @@ class StreamOptimizer:
         """Host-only flight finalize: fetch + extract + cache insert.  Runs
         while the *next* flight's trailing device work is still in flight."""
         t0 = time.perf_counter()
-        for qi, r in zip(fl.queries, eng.collect()):
+        collected = eng.collect()
+        for qi, r in zip(fl.queries, collected):
             results[qi] = r
             if self.cache is not None:
                 self.cache.put(graphs[qi], r)
         done = time.perf_counter()
         fl.finalize_s = done - t0
         fl.wall_s = done - t_flight
+        # telemetry is pure host bookkeeping over counters the engine
+        # already kept — recorded unconditionally, policy on or off
+        fl.telemetry = _telemetry.capture(
+            eng, collected, nmax=fl.nmax, queries=len(fl.queries),
+            lattice=fl.lattice, wall_s=fl.wall_s, finalize_s=fl.finalize_s)
+        if self.policy is not None and not fl.lattice:
+            self.policy.observe(fl.nmax, fl.space, eng.algorithm,
+                                fl.telemetry)
         for qi in fl.queries:
             report.latency_s[qi] = done - t_stream
         if fl.lattice:
@@ -239,11 +276,12 @@ class StreamOptimizer:
 
 def optimize_stream(graphs: list[JoinGraph], algorithm=UNSET, chunk=UNSET,
                     cache=UNSET, devices=UNSET, mesh=UNSET, pipeline=UNSET,
-                    max_flight=UNSET, *,
+                    max_flight=UNSET, policy=UNSET, *,
                     config: OptimizerConfig | None = None
                     ) -> tuple[list[OptimizeResult], StreamReport]:
     """One-shot convenience wrapper around ``StreamOptimizer``."""
     cfg = resolve_config(config, algorithm=algorithm, chunk=chunk,
                          cache=cache, devices=devices, mesh=mesh,
-                         pipeline=pipeline, max_flight=max_flight)
+                         pipeline=pipeline, max_flight=max_flight,
+                         policy=policy)
     return StreamOptimizer(config=cfg).optimize_stream(graphs)

@@ -207,7 +207,8 @@ class ShardedBatchEngine(_LevelLoop):
     def __init__(self, graphs: list[JoinGraph], mesh: Mesh | None = None,
                  chunk: int = CHUNK, algorithm: str = "dpsub",
                  cyc_cap: int = CYC_CAP_DEFAULT,
-                 pipeline: bool | None = None):
+                 pipeline: bool | None = None,
+                 pend_window: int | None = None):
         if not graphs:
             raise ValueError("empty batch")
         if algorithm not in ("dpsub", "mpdp_tree", "mpdp_general"):
@@ -227,6 +228,11 @@ class ShardedBatchEngine(_LevelLoop):
         self.cyc_cap = cyc_cap
         self.pallas = _use_pallas()        # read per engine; static jit arg
         self.pipeline = _use_pipeline() if pipeline is None else bool(pipeline)
+        # see BatchEngine: drain-window override + telemetry dispatch tally,
+        # both host-only — results are bit-identical for any pend_window
+        self.pend_window = (PEND_WINDOW if pend_window is None
+                            else int(pend_window))
+        self.chunks_dispatched = 0
         self._exec_keys: set[tuple] = set()
         self._wall = 0.0
         self.B = len(graphs)
@@ -388,7 +394,8 @@ class ShardedBatchEngine(_LevelLoop):
             fpad[:, : Bs + 1] = fl
             ctx["pend"].append(kf(jnp.asarray(fpad), k_arr, self.binom_b,
                                   self.adj_b))
-            self._filter_drain(ctx, PEND_WINDOW)
+            self.chunks_dispatched += 1
+            self._filter_drain(ctx, self.pend_window)
         self.timings["filter"] = (self.timings.get("filter", 0.0)
                                   + time.perf_counter() - t0)
         return ctx
@@ -550,7 +557,8 @@ class ShardedBatchEngine(_LevelLoop):
                     self.all_sets, jnp.asarray(epad), loff_d, soff_d, seg0_d,
                     i_arr, self.adj_b, self.memo_cost, self.memo_rows)
             ctx["pend"].append((lane0, seg0, out))
-            self._eval_drain(ctx, PEND_WINDOW)
+            self.chunks_dispatched += 1
+            self._eval_drain(ctx, self.pend_window)
         self.timings["evaluate"] = (self.timings.get("evaluate", 0.0)
                                     + time.perf_counter() - t0)
         return ctx
@@ -670,7 +678,8 @@ class ShardedBatchEngine(_LevelLoop):
                 jnp.asarray(lane_cnt), self.adj_b, self.memo_cost,
                 self.memo_rows)
             ctx["pend"].append((p0s, npairs, out))
-            self._eval_general_drain(ctx, PEND_WINDOW)
+            self.chunks_dispatched += 1
+            self._eval_general_drain(ctx, self.pend_window)
         self.timings["evaluate"] = (self.timings.get("evaluate", 0.0)
                                     + time.perf_counter() - t0)
         return ctx

@@ -81,6 +81,7 @@ class OptimizerDaemon:
                  checkpoint_every: int = 32, queue_depth: int = 8,
                  tenant_inflight: int = 2, history: int = 4096,
                  devices: int | None = None, mesh=None,
+                 policy=None, policy_file: str | None = None,
                  worker_gate: threading.Event | None = None):
         if socket_path is None and host is None:
             raise ValueError("pass socket_path= (unix) or host=/port= (tcp)")
@@ -100,6 +101,19 @@ class OptimizerDaemon:
             else:
                 cache = PlanCache()
         self.cache = cache
+
+        # shared learned-policy table (same lifecycle as the plan cache:
+        # optional warm state, checkpointed alongside it).  ``policy=None``
+        # with no ``policy_file`` means learning is off and every request
+        # runs the static dispatch — bit-identical to a policy-free daemon.
+        self._policy_file = policy_file
+        if policy is None and policy_file:
+            from ..core.policy import PolicyTable
+            if os.path.exists(policy_file):
+                policy = PolicyTable.load(policy_file)
+            else:
+                policy = PolicyTable()
+        self.policy = policy
 
         self._queue: queue.Queue[_Job | None] = queue.Queue(maxsize=queue_depth)
         self._lock = threading.Lock()
@@ -123,6 +137,10 @@ class OptimizerDaemon:
         self._checkpoints = 0
         self._request_walls: deque[float] = deque(maxlen=history)
         self._flight_walls: deque[float] = deque(maxlen=history)
+        # flight-telemetry roll-up (telemetry.aggregate shape, summed
+        # across every finalized flight of every request)
+        self._telemetry = {"flights": 0, "queries": 0, "evaluated_lanes": 0,
+                           "ccp_lanes": 0, "chunks": 0, "retraces": 0}
 
     # ------------------------------------------------------------ lifecycle -
     def start(self) -> None:
@@ -297,19 +315,22 @@ class OptimizerDaemon:
         # substitute the daemon-owned shared state; a request that pins
         # devices= keeps its pin, otherwise the daemon's default mesh rules
         cfg = cfg.replace(
-            cache=self.cache, lattice=False,
+            cache=self.cache, lattice=False, policy=self.policy,
             mesh=self._mesh if cfg.devices is None else None,
             devices=cfg.devices if cfg.devices is not None
             else (self._devices if self._mesh is None else None))
         hits0 = self.cache.stats.hits
         results, report = StreamOptimizer(config=cfg).optimize_stream(graphs)
         wall = time.perf_counter() - t0
+        tele = report.telemetry_summary()
         with self._lock:
             self._requests += 1
             self._queries += len(graphs)
             self._flights += len(report.flights)
             self._request_walls.append(wall)
             self._flight_walls.extend(f.wall_s for f in report.flights)
+            for k in self._telemetry:
+                self._telemetry[k] += int(tele.get(k, 0))
             tt = self._tenant_totals.setdefault(
                 job.tenant, {"requests": 0, "queries": 0, "shed": 0})
             tt["requests"] += 1
@@ -325,10 +346,10 @@ class OptimizerDaemon:
                 "cache_hits": self.cache.stats.hits - hits0}
 
     def _checkpoint(self, force: bool = False) -> None:
-        """Atomic cache checkpoint (worker/drain only — ``PlanCache.save``
-        renames into place, so concurrent ``load``\\ s never see a torn
-        file)."""
-        if not self._cache_file:
+        """Atomic cache + policy checkpoint (worker/drain only — both
+        ``save``\\ s rename into place, so concurrent ``load``\\ s never
+        see a torn file)."""
+        if not (self._cache_file or self._policy_file):
             return
         with self._lock:
             due = force or self._since_checkpoint >= self._checkpoint_every
@@ -336,7 +357,10 @@ class OptimizerDaemon:
                 return
             self._since_checkpoint = 0
             self._checkpoints += 1
-        self.cache.save(self._cache_file)
+        if self._cache_file:
+            self.cache.save(self._cache_file)
+        if self._policy_file and self.policy is not None:
+            self.policy.save(self._policy_file)
 
     # ------------------------------------------------------------ telemetry -
     @staticmethod
@@ -372,7 +396,10 @@ class OptimizerDaemon:
                     "inserts": self.cache.stats.inserts,
                     "evictions": self.cache.stats.evictions,
                 },
+                "telemetry": dict(self._telemetry),
             }
+            if self.policy is not None:
+                out["policy"] = self.policy.summary()
         out["exec"] = EXEC.totals()
         return out
 
@@ -399,6 +426,10 @@ def main(argv=None) -> int:
     ap.add_argument("--devices", type=int, default=None,
                     help="default mesh size for sharded passes (emulated "
                          "on CPU; injected before jax initializes)")
+    ap.add_argument("--policy-file", type=str, default=None,
+                    help="persisted PolicyTable path: enables learned "
+                         "dispatch policies, loaded when present and "
+                         "checkpointed atomically alongside the plan cache")
     args = ap.parse_args(argv)
     if (args.socket is None) == (args.tcp is None):
         ap.error("exactly one of --socket / --tcp is required")
@@ -415,6 +446,6 @@ def main(argv=None) -> int:
         socket_path=args.socket, host=host, port=port or 0,
         cache_file=args.cache_file, checkpoint_every=args.checkpoint_every,
         queue_depth=args.queue_depth, tenant_inflight=args.tenant_inflight,
-        devices=args.devices)
+        devices=args.devices, policy_file=args.policy_file)
     daemon.serve_forever()
     return 0

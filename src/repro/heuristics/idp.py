@@ -275,7 +275,7 @@ def _replace(root: _TNode, target: _TNode, leaf: _TNode) -> _TNode:
 def solve(g: JoinGraph, k: int = 15, subsolver: str = "mpdp",
           max_rounds: Optional[int] = None, batch: int = 4,
           devices=None, mesh=None,
-          pipeline: bool | None = None) -> OptimizeResult:
+          pipeline: bool | None = None, policy=None) -> OptimizeResult:
     t0 = time.perf_counter()
     counters = Counters()
     if subsolver == "lindp":
@@ -297,9 +297,10 @@ def solve(g: JoinGraph, k: int = 15, subsolver: str = "mpdp",
             # the block prefix-sum lanes (cheap spaces, identical costs);
             # devices/mesh shard the round's batch over a 1-D device mesh,
             # pipeline overlaps its host compaction with device evaluate —
-            # repeated round shapes hit the process-wide executable cache
+            # repeated round shapes hit the process-wide executable cache;
+            # a policy table learns per-bucket dispatch across the rounds
             rs = _e.optimize_many(jgs, algorithm=subsolver, devices=devices,
-                                  mesh=mesh, pipeline=pipeline)
+                                  mesh=mesh, pipeline=pipeline, policy=policy)
             for r in rs:
                 counters.evaluated += r.counters.evaluated
                 counters.ccp += r.counters.ccp

@@ -233,18 +233,23 @@ def solve(g: JoinGraph, k: int = 15, subsolver: str = "mpdp",
           goo_floor: bool = False, partition: str = "cost",
           reopt_rounds: int = 4, reopt_batch: int = 4,
           devices=None, mesh=None,
-          pipeline: bool | None = None) -> OptimizeResult:
+          pipeline: bool | None = None, policy=None) -> OptimizeResult:
     t0 = time.perf_counter()
     counters = Counters()
     from ..core import engine as _e
+    if policy is not None:
+        # learned re-optimization budget: one past the EMA of passes that
+        # historically improved the plan (cold table -> static default)
+        reopt_rounds = policy.reopt_rounds_for(reopt_rounds)
 
     def batch_solve(jgs):
         """Disjoint subproblems -> one batched device pass ("mpdp" lands in
         the per-bucket tree/general lane spaces, not DPSUB; ``devices``/
         ``mesh`` shard the round's batch across a 1-D device mesh,
-        ``pipeline`` overlaps host compaction with device evaluate)."""
+        ``pipeline`` overlaps host compaction with device evaluate;
+        ``policy`` learns per-bucket dispatch across the rounds)."""
         rs = _e.optimize_many(jgs, algorithm=subsolver, devices=devices,
-                              mesh=mesh, pipeline=pipeline)
+                              mesh=mesh, pipeline=pipeline, policy=policy)
         for r in rs:
             counters.evaluated += r.counters.evaluated
             counters.ccp += r.counters.ccp
@@ -282,6 +287,9 @@ def solve(g: JoinGraph, k: int = 15, subsolver: str = "mpdp",
         p, info["round_costs"] = _reoptimize(g, p, k, batch_solve,
                                              reopt_batch, reopt_rounds)
         algo += "+reopt"
+        if policy is not None:
+            # accepted passes = improvements beyond the initial cost
+            policy.observe_reopt(len(info["round_costs"]) - 1)
     else:
         info["round_costs"] = [p.cost]
     # opt-in serving guard, OFF by default: the cost-aware partitioner plus

@@ -78,7 +78,7 @@ def test_single_query_batch_and_leaf():
 
 def test_sub_batch_splitting_matches():
     graphs = [rand_graph(7 + (i % 4), i % 3, 20 + i) for i in range(9)]
-    split = optimize_many(graphs, max_batch=3)
+    split = optimize_many(graphs, max_flight=3)
     whole = optimize_many(graphs)
     assert [r.cost for r in split] == [r.cost for r in whole]
 

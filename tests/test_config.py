@@ -162,7 +162,8 @@ class TestEntryPointParity:
         # lattice=True)) — the explicit routing flag replaces the implicit
         # kwarg-name dispatch
         g = gen.musicbrainz_query(9, 4)
-        legacy = engine.optimize(g, lattice_devices=2)
+        with pytest.warns(DeprecationWarning, match="lattice_devices"):
+            legacy = engine.optimize(g, lattice_devices=2)
         via_cfg = engine.optimize(
             g, config=OptimizerConfig(devices=2, lattice=True))
         assert fingerprint([legacy]) == fingerprint([via_cfg])

@@ -239,7 +239,8 @@ def test_dispatcher_no_mesh_keeps_solo_path():
 @pytest.mark.parametrize("devices", [needs(2)])
 def test_engine_optimize_lattice_kwarg(devices, oracle):
     g = graphs_for("mpdp_tree")[0]
-    r = engine.optimize(g, "auto", lattice_devices=devices)
+    with pytest.warns(DeprecationWarning, match="lattice_devices"):
+        r = engine.optimize(g, "auto", lattice_devices=devices)
     assert r.algorithm == "lattice_mpdp_tree"
     assert r.cost == oracle["mpdp_tree"][0].cost
 

@@ -1,0 +1,173 @@
+"""Learned-policy safety: the differential suite.
+
+The policy layer's contract is that it can *never* change results — only
+where and how fast lanes run.  Three families of checks enforce it:
+
+* **Policy-off identity** (the satellite's acceptance criterion): with no
+  policy attached — or with a frozen cold table, which must emit all-None
+  decisions — every dispatcher returns byte-identical results, per-query
+  lane counters, and retrace counts across all three lane spaces,
+  sync + pipelined engines, and 1- vs 4-device meshes.
+* **Cost invariance while learning**: a live table explores every
+  candidate lane space over repeated passes; costs must stay bit-identical
+  to the static run on every pass, because all three spaces enumerate the
+  same CCP minima.
+* **Activation rule**: an explicit user lane space is never overridden,
+  and ``OptimizerConfig.policy`` is process-local (refuses to wire).
+"""
+import pytest
+
+from repro.core import engine
+from repro.core.config import OptimizerConfig
+from repro.core.exec_cache import EXEC
+from repro.core.policy import PolicyTable
+from repro.workloads import generators as gen
+
+
+def plan_shape(p):
+    if p.is_leaf:
+        return p.rel_set
+    return (p.rel_set, plan_shape(p.left), plan_shape(p.right))
+
+
+def fingerprint(results):
+    return [(float(r.cost), plan_shape(r.plan), r.algorithm)
+            for r in results]
+
+
+def lane_counts(results):
+    return [(int(r.counters.evaluated), int(r.counters.ccp))
+            for r in results]
+
+
+# mixed topologies so the auto dispatcher exercises every lane space:
+# trees (3-candidate buckets), a cycle (2-candidate), mixed nmax buckets
+STREAM = [gen.chain(6, 1), gen.star(7, 2), gen.cycle(8, 3),
+          gen.musicbrainz_query(9, 4), gen.snowflake(10, 5)]
+
+
+def frozen_cold_table():
+    t = PolicyTable()
+    t.freeze()
+    return t
+
+
+# ========================================== policy-off byte-identity matrix
+
+class TestPolicyOffIdentity:
+    """No-policy, explicit ``policy=None``, and a frozen cold table must be
+    three spellings of the same static dispatch."""
+
+    @pytest.mark.parametrize("algorithm", ["auto", "mpdp", "dpsub"])
+    @pytest.mark.parametrize("pipeline", [False, True],
+                             ids=["sync", "pipelined"])
+    @pytest.mark.parametrize("devices", [None, 4], ids=["1dev", "4dev"])
+    def test_matrix(self, algorithm, pipeline, devices):
+        kw = dict(algorithm=algorithm, pipeline=pipeline, devices=devices)
+        static = engine.optimize_many(STREAM, **kw)     # warm compiles too
+        compiles0 = EXEC.total()
+        again = engine.optimize_many(STREAM, **kw)
+        retr_static = EXEC.total() - compiles0
+        off = engine.optimize_many(STREAM, policy=None, **kw)
+        frozen = engine.optimize_many(STREAM, policy=frozen_cold_table(),
+                                      **kw)
+        retr_all = EXEC.total() - compiles0
+        assert fingerprint(static) == fingerprint(again) \
+            == fingerprint(off) == fingerprint(frozen)
+        assert lane_counts(static) == lane_counts(again) \
+            == lane_counts(off) == lane_counts(frozen)
+        # warmed repeats: the policy plumbing must add zero retraces
+        assert retr_static == 0 and retr_all == 0
+
+    def test_frozen_cold_table_emits_all_none(self):
+        dec = frozen_cold_table().choose(8, "mpdp_tree", default_chunk=1 << 15,
+                                         default_pend=8)
+        assert dec.space == "mpdp_tree"
+        assert dec.chunk is None and dec.pend_window is None
+
+    def test_stream_service_policy_off_identity(self):
+        from repro.core.service import optimize_stream
+        plain, rep_plain = optimize_stream(STREAM)
+        off, rep_off = optimize_stream(
+            STREAM, config=OptimizerConfig(policy=None))
+        assert fingerprint(plain) == fingerprint(off)
+        assert lane_counts(plain) == lane_counts(off)
+        # telemetry is recorded unconditionally — policy on or off
+        for rep in (rep_plain, rep_off):
+            tele = [fl.telemetry for fl in rep.flights]
+            assert all(t is not None for t in tele)
+            agg = rep.telemetry_summary()
+            assert agg["queries"] == len(STREAM)
+            assert agg["evaluated_lanes"] > 0
+            assert agg["flights"] == len(rep.flights)
+
+
+# =============================================== cost invariance (learning)
+
+class TestLearningInvariance:
+    def test_costs_identical_on_every_learning_pass(self):
+        static = fingerprint_costs = \
+            [r.cost for r in engine.optimize_many(STREAM)]
+        pol = PolicyTable()
+        explored_spaces = set()
+        for _ in range(8):      # enough passes to clear every explore phase
+            rs = engine.optimize_many(STREAM, policy=pol)
+            assert [r.cost for r in rs] == fingerprint_costs == static
+            explored_spaces.update(r.algorithm for r in rs)
+        # the table really learned: every bucket observed, detours taken
+        assert len(pol) > 0
+        assert pol.stats.observations > 0
+        assert pol.stats.space_overrides > 0
+        # explore detours ran at least one non-default space end to end
+        assert len(explored_spaces) > 2
+
+    def test_frozen_table_replays_one_dispatch(self):
+        pol = PolicyTable()
+        for _ in range(8):
+            engine.optimize_many(STREAM, policy=pol)
+        pol.freeze()
+        obs0 = pol.stats.observations
+        a = engine.optimize_many(STREAM, policy=pol)
+        b = engine.optimize_many(STREAM, policy=pol)
+        assert fingerprint(a) == fingerprint(b)
+        assert [r.algorithm for r in a] == [r.algorithm for r in b]
+        assert pol.stats.observations == obs0    # frozen: no updates
+
+    def test_stream_service_learning_costs_identical(self):
+        from repro.core.service import optimize_stream
+        plain, _ = optimize_stream(STREAM)
+        pol = PolicyTable()
+        for _ in range(6):
+            learned, rep = optimize_stream(
+                STREAM, config=OptimizerConfig(policy=pol))
+            assert [r.cost for r in learned] == [r.cost for r in plain]
+        assert pol.stats.observations > 0
+        # admitted space stays the bucketing key; the executed space lives
+        # in the telemetry record
+        for fl in rep.flights:
+            assert fl.telemetry.space is not None
+            assert fl.space in ("dpsub", "mpdp_tree", "mpdp_general")
+
+
+# ================================================ activation + wire safety
+
+class TestActivationRule:
+    def test_explicit_algorithm_never_overridden(self):
+        pol = PolicyTable()
+        for _ in range(8):      # table now has learned arms under auto
+            engine.optimize_many(STREAM, policy=pol)
+        decisions0 = pol.stats.decisions
+        rs = engine.optimize_many(STREAM, algorithm="dpsub", policy=pol)
+        assert all(r.algorithm == "batch_dpsub" for r in rs)
+        # the policy was never even consulted for an explicit space
+        assert pol.stats.decisions == decisions0
+
+    def test_policy_rejects_wire(self):
+        with pytest.raises(ValueError, match="process-local"):
+            OptimizerConfig(policy=PolicyTable()).to_wire()
+
+    def test_policy_threads_through_config_replace(self):
+        pol = PolicyTable()
+        cfg = OptimizerConfig().replace(policy=pol)
+        assert cfg.policy is pol
+        assert OptimizerConfig().policy is None

@@ -1,0 +1,307 @@
+"""``PolicyTable`` learning dynamics + checkpoint robustness.
+
+Property tests (via the ``tests.helpers`` hypothesis shim, so the suite is
+green with or without hypothesis installed):
+
+* EMA convergence: stationary feedback drives every learned estimate to
+  the observed value;
+* bounded updates: one ``record_execution`` observation can never move a
+  row estimate past ``MAX_STEP_L2`` in log2 space;
+* determinism: the table after a fixed telemetry sequence is a pure
+  function of that sequence — two tables fed the same records produce
+  byte-identical checkpoints and identical decisions.
+
+Persistence mirrors ``tests/test_plancache_robustness.py``: the checkpoint
+round-trips byte-exactly, and corrupt / truncated / tampered /
+version-drifted files degrade to a cold table with ``stale_load`` set —
+never a crash, never code execution.
+"""
+import math
+import os
+
+import pytest
+
+from repro.core import policy as pol
+from repro.core.policy import (MAX_STEP_L2, POLICY_FILE_VERSION, PolicyTable)
+from repro.core.telemetry import FlightTelemetry
+from repro.workloads import generators as gen
+from tests.helpers import given, settings, st
+
+
+def tele(nmax=8, space="mpdp_tree", queries=4, wall_s=0.1, lanes=500,
+         chunks=6):
+    return FlightTelemetry(nmax=nmax, space=space, queries=queries,
+                           evaluated_lanes=lanes, ccp_lanes=lanes,
+                           chunk=1 << 15, chunks=chunks, wall_s=wall_s)
+
+
+def learned_table():
+    """A table with entries in every sub-structure (arms, profiles, rows,
+    reopt) so persistence tests exercise the full blob."""
+    t = PolicyTable()
+    for i in range(6):
+        t.observe(8, "mpdp_tree", "mpdp_tree", tele(wall_s=0.1 + 0.01 * i))
+        t.observe(8, "mpdp_tree", "dpsub", tele(wall_s=0.05))
+        t.observe(16, "mpdp_general", "mpdp_general",
+                  tele(nmax=16, space="mpdp_general", wall_s=0.4,
+                       lanes=9000, chunks=20))
+    g = gen.musicbrainz_query(6, 3)
+    t.record_execution(g, {g.names[0]: 1e6, g.names[1]: 3.0})
+    t.observe_reopt(2)
+    t.observe_reopt(3)
+    return t
+
+
+# ================================================================ learning
+
+class TestLearningDynamics:
+    @given(st.floats(min_value=1e-4, max_value=10.0),
+           st.integers(min_value=20, max_value=60))
+    @settings(max_examples=25, deadline=None)
+    def test_ema_converges_under_stationary_feedback(self, wall, reps):
+        t = PolicyTable()
+        for _ in range(reps):
+            t.observe(8, "mpdp_tree", "mpdp_tree",
+                      tele(queries=1, wall_s=wall))
+        e = t._entries[(8, "mpdp_tree")]
+        # after >= 20 EMA steps at alpha=0.3 the residual is < 0.1% of the
+        # gap from any starting point
+        assert abs(e["wallq"] - wall) <= 1e-3 * max(wall, 1.0)
+        assert abs(e["arms"]["mpdp_tree"][0] - wall) <= 1e-3 * max(wall, 1.0)
+        assert e["arms"]["mpdp_tree"][1] == reps
+
+    @given(st.floats(min_value=0.0, max_value=60.0))
+    @settings(max_examples=25, deadline=None)
+    def test_row_update_bounded_per_observation(self, obs_l2):
+        g = gen.chain(5, 7)
+        name = g.names[2]
+        t = PolicyTable()
+        base = float(g.log2_card[2])
+        t.record_execution(g, {name: obs_l2}, log2=True)
+        moved = t.drift_rows()[name] - base
+        assert abs(moved) <= MAX_STEP_L2 + 1e-12
+        # and the step always points toward the observation
+        assert moved * (max(obs_l2, 0.0) - base) >= 0.0
+
+    @given(st.floats(min_value=0.0, max_value=60.0),
+           st.integers(min_value=1, max_value=200))
+    @settings(max_examples=25, deadline=None)
+    def test_row_corrections_converge_and_stay_clamped(self, obs_l2, reps):
+        g = gen.chain(5, 7)
+        name = g.names[2]
+        t = PolicyTable()
+        for _ in range(reps):
+            t.record_execution(g, {name: obs_l2}, log2=True)
+        learned = t.drift_rows()[name]
+        lo = min(float(g.log2_card[2]), max(obs_l2, 0.0)) - 1e-9
+        hi = max(float(g.log2_card[2]), max(obs_l2, 0.0)) + 1e-9
+        assert lo <= learned <= hi          # never overshoots either side
+        assert learned >= -1e-12            # log2 rows stay non-negative
+
+    @given(st.lists(st.tuples(st.integers(min_value=0, max_value=2),
+                              st.floats(min_value=1e-3, max_value=2.0),
+                              st.integers(min_value=100, max_value=5000)),
+                    min_size=1, max_size=30))
+    @settings(max_examples=25, deadline=None)
+    def test_table_is_pure_function_of_telemetry_sequence(self, seq):
+        spaces = ("mpdp_tree", "dpsub", "mpdp_general")
+        tables = [PolicyTable(), PolicyTable()]
+        for t in tables:
+            for arm_i, wall, lanes in seq:
+                t.observe(8, "mpdp_tree", spaces[arm_i],
+                          tele(wall_s=wall, lanes=lanes))
+        # bit-identical learned state (dict equality is exact on floats)
+        assert tables[0]._entries == tables[1]._entries
+        d0 = tables[0].choose(8, "mpdp_tree", default_chunk=1 << 15,
+                              default_pend=8)
+        d1 = tables[1].choose(8, "mpdp_tree", default_chunk=1 << 15,
+                              default_pend=8)
+        assert (d0.space, d0.chunk, d0.pend_window) == \
+            (d1.space, d1.chunk, d1.pend_window)
+
+    def test_same_sequence_saves_byte_identical_files(self, tmp_path):
+        t0, t1 = learned_table(), learned_table()
+        p0, p1 = str(tmp_path / "a.policy"), str(tmp_path / "b.policy")
+        t0.save(p0)
+        t1.save(p1)
+        assert open(p0).read() == open(p1).read()
+
+    def test_exploit_picks_fastest_arm(self):
+        t = PolicyTable()
+        for _ in range(4):      # clear the explore phase for all 3 arms
+            t.observe(8, "mpdp_tree", "mpdp_tree", tele(wall_s=0.5))
+            t.observe(8, "mpdp_tree", "dpsub", tele(wall_s=0.1))
+            t.observe(8, "mpdp_tree", "mpdp_general", tele(wall_s=0.3))
+        d = t.choose(8, "mpdp_tree", default_chunk=1 << 15)
+        assert d.space == "dpsub"
+
+    def test_chunk_rule_shrink_only(self):
+        t = PolicyTable()
+        for _ in range(5):
+            t.observe(8, "mpdp_tree", "mpdp_tree",
+                      tele(lanes=500, chunks=3))
+        d = t.choose(8, "mpdp_tree", default_chunk=1 << 15, default_pend=8)
+        assert d.chunk == pol.CHUNK_MIN        # pow2 ceil of 500, floored
+        assert d.pend_window == max(pol.PEND_MIN, 3)
+        # a default already below the learned profile is never raised
+        d2 = t.choose(8, "mpdp_tree", default_chunk=1 << 10, default_pend=2)
+        assert d2.chunk is None and d2.pend_window is None
+
+    def test_exact_limit_walks_observed_buckets(self):
+        t = PolicyTable()
+        for nmax, wall in ((8, 0.01), (12, 0.05), (16, 0.2), (18, 5.0)):
+            t.observe(nmax, "mpdp_tree", "mpdp_tree",
+                      tele(nmax=nmax, queries=1, wall_s=wall))
+        assert t.exact_limit(14, budget_s=1.0) == 16   # 16 fits, 18 blows
+        assert t.exact_limit(14, budget_s=10.0) == 18
+        assert t.exact_limit(14, budget_s=0.02) == 11  # capped below 12
+        assert PolicyTable().exact_limit(14, budget_s=1.0) == 14  # cold
+
+    def test_reopt_rounds_learned(self):
+        t = PolicyTable()
+        assert t.reopt_rounds_for(3) == 3              # cold -> static
+        for _ in range(10):
+            t.observe_reopt(1)
+        assert t.reopt_rounds_for(3) == 2              # EMA 1 -> probe 2
+        for _ in range(40):
+            t.observe_reopt(20)
+        assert t.reopt_rounds_for(3) == pol.REOPT_MAX  # clamped
+
+
+# ============================================================= persistence
+
+class TestPersistence:
+    def test_good_file_roundtrips_byte_exact(self, tmp_path):
+        t = learned_table()
+        p1, p2 = str(tmp_path / "a.policy"), str(tmp_path / "b.policy")
+        t.save(p1)
+        loaded = PolicyTable.load(p1)
+        assert not loaded.stale_load
+        assert len(loaded) == len(t)
+        loaded.save(p2)
+        assert open(p1).read() == open(p2).read()
+        # loaded state decides identically to the original
+        da = t.choose(8, "mpdp_tree", default_chunk=1 << 15, default_pend=8)
+        db = loaded.choose(8, "mpdp_tree", default_chunk=1 << 15,
+                           default_pend=8)
+        assert (da.space, da.chunk, da.pend_window) == \
+            (db.space, db.chunk, db.pend_window)
+        assert loaded.drift_rows() == t.drift_rows()
+        assert loaded.reopt_rounds_for(3) == t.reopt_rounds_for(3)
+
+    def test_missing_file_raises(self, tmp_path):
+        with pytest.raises(FileNotFoundError):
+            PolicyTable.load(str(tmp_path / "nope.policy"))
+
+    @pytest.mark.parametrize("garbage", [
+        b"",                                        # empty file
+        b"\x00\x01\x02 not a literal at all",       # binary junk
+        b"{'header': ",                             # unterminated literal
+        b"[1, 2, 3]",                               # valid literal, wrong shape
+        b"{'header': {'version': 999}}",            # missing keys
+        b"__import__('os').system('true')",         # code, not a literal:
+    ], ids=["empty", "binary", "unterminated",     # literal_eval must refuse
+            "wrong-shape", "missing-keys", "code-injection"])
+    def test_corrupt_file_degrades_to_cold(self, tmp_path, garbage):
+        path = str(tmp_path / "bad.policy")
+        with open(path, "wb") as f:
+            f.write(garbage)
+        loaded = PolicyTable.load(path)
+        assert loaded.stale_load and len(loaded) == 0
+        assert loaded.drift_rows() == {}
+
+    def test_truncated_file_degrades_to_cold(self, tmp_path):
+        path = str(tmp_path / "full.policy")
+        learned_table().save(path)
+        size = os.path.getsize(path)
+        for frac in (0.25, 0.5, 0.9):
+            head = open(path, "rb").read(int(size * frac))
+            tpath = str(tmp_path / f"trunc{frac}.policy")
+            with open(tpath, "wb") as f:
+                f.write(head)
+            loaded = PolicyTable.load(tpath)
+            assert loaded.stale_load and len(loaded) == 0, f"frac={frac}"
+
+    def test_version_drift_invalidates_whole_file(self, tmp_path):
+        path = str(tmp_path / "ver.policy")
+        learned_table().save(path)
+        text = open(path).read()
+        bumped = text.replace(f"'version': {POLICY_FILE_VERSION}",
+                              f"'version': {POLICY_FILE_VERSION + 1}", 1)
+        assert bumped != text
+        with open(path, "w") as f:
+            f.write(bumped)
+        loaded = PolicyTable.load(path)
+        assert loaded.stale_load and len(loaded) == 0
+
+    def test_hyperparameter_drift_invalidates(self, tmp_path):
+        # EMAs learned at one alpha are meaningless at another: loading
+        # with different hyperparameters must cold-start, not mix
+        path = str(tmp_path / "alpha.policy")
+        learned_table().save(path)
+        loaded = PolicyTable.load(path, alpha=0.9)
+        assert loaded.stale_load and len(loaded) == 0
+
+    def test_tampered_entry_payload_degrades_to_cold(self, tmp_path):
+        path = str(tmp_path / "tamper.policy")
+        learned_table().save(path)
+        text = open(path).read()
+        with open(path, "w") as f:
+            f.write(text.replace("'entries': [(", "'entries': [(None, ", 1))
+        loaded = PolicyTable.load(path)
+        assert loaded.stale_load and len(loaded) == 0
+
+    def test_save_leaves_no_temp_droppings(self, tmp_path):
+        path = str(tmp_path / "tidy.policy")
+        t = learned_table()
+        for _ in range(3):
+            t.save(path)
+        assert os.listdir(tmp_path) == ["tidy.policy"]
+
+
+# ============================================== cardinality feedback wiring
+
+class TestCardinalityFeedback:
+    def test_catalog_matching_stream_is_noop_correction(self):
+        g = gen.chain(6, 9)
+        t = PolicyTable()
+        obs = {name: float(2.0 ** g.log2_card[v])
+               for v, name in enumerate(g.names)}
+        t.record_execution(g, obs)
+        assert t.corrected(g) is g          # identity: nothing drifted
+
+    def test_corrected_graph_moves_toward_observation(self):
+        g = gen.chain(6, 9)
+        t = PolicyTable()
+        name = g.names[0]
+        for _ in range(30):
+            t.record_execution(g, {name: 2.0 ** (g.log2_card[0] + 0.5)},
+                               log2=False)
+        g2 = t.corrected(g)
+        assert g2 is not g
+        assert math.isclose(g2.log2_card[0], g.log2_card[0] + 0.5,
+                            abs_tol=1e-3)
+        # untouched relations keep their catalog stats bit-exactly
+        assert list(g2.log2_card[1:]) == list(g.log2_card[1:])
+
+    def test_drift_invalidates_cached_plans(self):
+        from repro.core import engine
+        from repro.core.plancache import PlanCache
+        g = gen.musicbrainz_query(8, 11)
+        cache = PlanCache()
+        engine.optimize_many([g], cache=cache)
+        assert len(cache) == 1
+        t = PolicyTable()
+        dropped = 0
+        for _ in range(20):    # drive the EMA far enough to cross the
+            dropped += t.record_execution(     # cache's drift threshold
+                g, {g.names[0]: 2.0 ** (float(g.log2_card[0]) + 6.0)},
+                cache=cache)
+        assert dropped >= 1 and len(cache) == 0
+
+    def test_frozen_table_ignores_feedback(self):
+        g = gen.chain(5, 3)
+        t = PolicyTable()
+        t.freeze()
+        t.record_execution(g, {g.names[0]: 12345.0})
+        assert t.drift_rows() == {} and t.stats.row_updates == 0

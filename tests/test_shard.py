@@ -192,13 +192,13 @@ def test_empty_and_leaf_streams_no_device_work():
 @pytest.mark.parametrize("devices", [needs(2)])
 def test_round_robin_deal_and_sub_batch_split(devices):
     """Round-robin keeps shard loads within one query of each other, and
-    sub-batch splitting (max_batch) composes with sharding."""
+    sub-batch splitting (max_flight) composes with sharding."""
     graphs = [rand_graph(6 + (i % 3), i % 2, 40 + i) for i in range(7)]
     eng = sh.ShardedBatchEngine(graphs, sh.batch_mesh(devices))
     sizes = [len(s) for s in eng.shard_graphs]
     assert len(set(sizes)) == 1              # padded to a device multiple
     assert sum(sizes) - len(graphs) < devices
-    split = optimize_many(graphs, devices=devices, max_batch=2)
+    split = optimize_many(graphs, devices=devices, max_flight=2)
     whole = optimize_many(graphs, devices=devices)
     assert [r.cost for r in split] == [r.cost for r in whole]
 
