@@ -234,6 +234,148 @@ def bench(nq: int = 32, seed: int = 0, devices: int | None = None,
     return {"queries": nq, "seed": seed, "daemon": rep}
 
 
+# Explicit, replayable chaos schedule (see docs/robustness.md).  Nth-call
+# indices are chosen so the injected worker crashes land on load-phase job
+# pickups (pickup 1 is the warmup request), the straggler chunks land
+# during warmup dispatch, and the socket stall hits a mid-run reply.  NO
+# cache_write corruption: the final drain checkpoint must load non-stale.
+CHAOS_FAULTS = ("worker@2:raise;worker@4:raise;"
+                "chunk@3:sleep:0.02;chunk@9:sleep:0.02;chunk@15:sleep:0.02;"
+                "socket_send@5:stall:0.2")
+
+
+def bench_chaos(nq: int = 4, seed: int = 0, requests: int = 6,
+                rate_hz: float = 4.0, drain_timeout: float = 20.0,
+                smoke: bool = False) -> dict:
+    """Chaos phase: the daemon runs under a fixed ``REPRO_FAULTS`` schedule
+    (worker crashes, straggler chunks, a mid-frame socket stall) and
+    ``--drain-timeout``; clients drive Poisson-ish load with per-request
+    timeouts + retries, plus one deadline-carrying request over fresh
+    queries.  Deterministic gates (``check_regression.py check_chaos``):
+    zero hung requests, degraded plans valid and no worse than GOO, the
+    worker supervisor restarted at least once, and a clean bounded drain
+    with a loadable checkpoint."""
+    del smoke                        # chaos phase is already CI-sized
+    from repro.core.config import OptimizerConfig
+    from repro.core.plan import validate_plan
+    from repro.core.plancache import PlanCache
+    from repro.daemon import DaemonClient, DaemonShed
+    from repro.heuristics import goo
+    from repro.workloads.generators import mixed_stream
+
+    graphs = mixed_stream(nq, seed)
+    deadline_graphs = mixed_stream(nq, seed + 101)   # must miss the plan
+    sockp = tempfile.mktemp(suffix=".sock")          # cache: fresh seeds
+    ckpt = tempfile.mktemp(suffix=".plancache")
+    cmd = [sys.executable, "-m", "repro.daemon", "--socket", sockp,
+           "--cache-file", ckpt, "--checkpoint-every", "1000",
+           "--queue-depth", "8", "--tenant-inflight", "2",
+           "--drain-timeout", str(drain_timeout)]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") \
+        + os.pathsep + env.get("PYTHONPATH", "")
+    env["REPRO_FAULTS"] = CHAOS_FAULTS
+    proc = subprocess.Popen(cmd, env=env)
+    ch: dict = {"fault_plan": CHAOS_FAULTS, "requests": 0, "completed": 0,
+                "shed": 0, "retried": 0, "failed": 0, "hung": 0}
+    lock = threading.Lock()
+
+    def robust_optimize(c, **kw):
+        """First try without retries (so injected failures are observed),
+        then retry with backoff — the documented client contract."""
+        try:
+            return c.optimize(graphs if "config" not in kw
+                              else deadline_graphs,
+                              timeout=kw.pop("timeout", 120.0),
+                              retries=0, **kw)
+        except Exception as e:
+            retryable = (isinstance(e, (DaemonShed, ConnectionResetError,
+                                        BrokenPipeError))
+                         or getattr(e, "retryable", False))
+            if not retryable:
+                raise
+            with lock:
+                ch["retried"] += 1
+            return c.optimize(graphs if "config" not in kw
+                              else deadline_graphs,
+                              timeout=120.0, retries=6, backoff_s=0.1, **kw)
+
+    try:
+        c = DaemonClient(socket_path=sockp, tenant="chaos",
+                         connect_timeout=180.0)
+        # warmup (worker pickup 1: no fault scheduled; pays JIT compile)
+        robust_optimize(c, timeout=None)
+        ch["requests"] += 1
+        ch["completed"] += 1
+
+        # Poisson-ish load: each arrival its own connection + thread; the
+        # injected worker crashes land on these pickups and the retry
+        # contract must absorb them — the gate is zero hung requests
+        def one_request(i: int):
+            try:
+                with DaemonClient(socket_path=sockp,
+                                  tenant=f"chaos-{i % 2}",
+                                  connect_timeout=60.0) as cc:
+                    robust_optimize(cc)
+                with lock:
+                    ch["completed"] += 1
+            except DaemonShed:
+                with lock:
+                    ch["shed"] += 1
+            except Exception:
+                with lock:
+                    ch["failed"] += 1
+
+        rng = random.Random(seed)
+        pending = []
+        for i in range(requests):
+            time.sleep(rng.expovariate(rate_hz))
+            t = threading.Thread(target=one_request, args=(i,), daemon=True)
+            t.start()
+            pending.append(t)
+        for t in pending:
+            t.join(timeout=300)
+            if t.is_alive():
+                with lock:
+                    ch["hung"] += 1
+        ch["requests"] += requests
+
+        # deadline-carrying request over fresh queries: must answer fast
+        # with degraded (anytime) plans, never hang
+        res = robust_optimize(c, config=OptimizerConfig(deadline_s=1e-4))
+        ch["requests"] += 1
+        ch["completed"] += 1
+        ch["degraded"] = sum(1 for r in res if "degraded" in r.info)
+        ok = True
+        for g, r in zip(deadline_graphs, res):
+            validate_plan(r.plan, g)
+            if float(r.cost) > float(goo.solve(g).cost) * (1 + 1e-6):
+                ok = False
+        ch["degraded_valid"] = ok
+
+        st = c.stats()
+        ch["worker_restarts"] = st["worker_restarts"]
+        ch["daemon_shed_total"] = st["shed"]
+        c.close()
+
+        # bounded drain: one SIGTERM; --drain-timeout caps the flush
+        proc.send_signal(signal.SIGTERM)
+        rc = proc.wait(timeout=120)
+        ch["drain_exit_code"] = rc
+        loaded = PlanCache.load(ckpt)
+        ch["checkpoint_entries"] = len(loaded)
+        ch["drain_clean"] = (rc == 0 and not loaded.stale_load
+                             and len(loaded) >= 1
+                             and not os.path.exists(sockp))
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+        for p in (ckpt, sockp):
+            if os.path.exists(p):
+                os.unlink(p)
+    return {"queries": nq, "seed": seed, "chaos": ch}
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--queries", type=int, default=32)
@@ -247,9 +389,38 @@ def main() -> int:
     ap.add_argument("--load-arrivals", type=int, default=60)
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run (8 queries, small load phase)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the fault-injection chaos phase instead of "
+                         "the standard six phases (seeded REPRO_FAULTS "
+                         "daemon, retrying clients, deadline request, "
+                         "bounded drain)")
     ap.add_argument("--json", type=str, default=None,
                     help="write the report here ('-' for stdout)")
     args = ap.parse_args()
+    if args.chaos:
+        rep = bench_chaos(seed=args.seed, smoke=args.smoke)
+        ch = rep["chaos"]
+        print(f"[chaos] {ch['completed']}/{ch['requests']} completed, "
+              f"{ch['shed']} shed, {ch['retried']} retried, "
+              f"{ch['failed']} failed, {ch['hung']} hung")
+        print(f"[chaos] degraded {ch.get('degraded')} valid "
+              f"{ch.get('degraded_valid')}; worker restarts "
+              f"{ch.get('worker_restarts')}")
+        print(f"[chaos] drain: exit {ch.get('drain_exit_code')} checkpoint "
+              f"{ch.get('checkpoint_entries')} entries clean "
+              f"{ch.get('drain_clean')}")
+        if args.json:
+            payload = json.dumps(rep, indent=2, sort_keys=True)
+            if args.json == "-":
+                print(payload)
+            else:
+                with open(args.json, "w") as f:
+                    f.write(payload + "\n")
+        ok = (ch["hung"] == 0 and ch["failed"] == 0
+              and ch.get("degraded", 0) >= 1 and ch.get("degraded_valid")
+              and ch.get("worker_restarts", 0) >= 1
+              and ch.get("drain_clean"))
+        return 0 if ok else 1
     rep = bench(nq=args.queries, seed=args.seed, devices=args.devices,
                 queue_depth=args.queue_depth,
                 tenant_inflight=args.tenant_inflight,

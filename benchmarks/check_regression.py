@@ -130,6 +130,65 @@ def check(current: dict, baseline: dict, tolerance: float = 0.25) -> list[str]:
     errors += check_lattice(current, baseline)
     errors += check_uniondp(current, baseline)
     errors += check_daemon(current, baseline)
+    errors += check_chaos(current, baseline)
+    return errors
+
+
+def check_chaos(current: dict, baseline: dict) -> list[str]:
+    """Deterministic chaos gates (from ``bench_daemon.py --chaos``): under
+    the seeded fault plan no request may hang or fail terminally (shed +
+    retry must absorb injected worker crashes and stalls), the deadline
+    request must return valid degraded plans no worse than GOO, the worker
+    supervisor must actually have restarted, and the bounded drain must
+    exit clean with a loadable checkpoint."""
+    base_c = baseline.get("chaos")
+    cur_c = current.get("chaos")
+    if base_c is None:
+        if cur_c is not None:
+            print("note: current report has a chaos section but the "
+                  "baseline does not — chaos gates are vacuous until the "
+                  "baseline is refreshed with bench_daemon --chaos --json")
+        return []
+    if cur_c is None:
+        print("note: baseline has a chaos section but the current report "
+              "was not produced by bench_daemon --chaos; chaos checks "
+              "skipped (the chaos-smoke CI job runs the gating "
+              "configuration)")
+        return []
+    errors: list[str] = []
+    if cur_c.get("hung", 1) != base_c.get("hung", 0):
+        errors.append(
+            f"[chaos] hung requests: {cur_c.get('hung')} (every request "
+            "must resolve — ok, shed, retried or failed — within its "
+            "bound)")
+    if cur_c.get("failed", 1) != 0:
+        errors.append(
+            f"[chaos] {cur_c.get('failed')} request(s) failed terminally "
+            "(the retry contract must absorb the injected faults)")
+    if cur_c.get("completed", 0) < base_c.get("min_completed", 1):
+        errors.append(
+            f"[chaos] only {cur_c.get('completed')} request(s) completed "
+            f"(< {base_c.get('min_completed', 1)})")
+    if cur_c.get("degraded", 0) < base_c.get("min_degraded", 1):
+        errors.append(
+            f"[chaos] deadline request produced {cur_c.get('degraded')} "
+            f"degraded plans (< {base_c.get('min_degraded', 1)}; the "
+            "anytime path did not engage)")
+    if not cur_c.get("degraded_valid", False):
+        errors.append(
+            "[chaos] a degraded plan failed validation or cost more than "
+            "plain GOO (the degradation ladder must floor at GOO)")
+    if cur_c.get("worker_restarts", 0) < base_c.get("min_worker_restarts", 1):
+        errors.append(
+            f"[chaos] worker restarts {cur_c.get('worker_restarts')} < "
+            f"{base_c.get('min_worker_restarts', 1)} (the injected crashes "
+            "never exercised the supervisor)")
+    if not cur_c.get("drain_clean", False):
+        errors.append(
+            f"[chaos] unclean bounded drain: exit "
+            f"{cur_c.get('drain_exit_code')} / checkpoint "
+            f"{cur_c.get('checkpoint_entries')} entries (SIGTERM under "
+            "--drain-timeout must checkpoint and exit 0)")
     return errors
 
 
@@ -460,6 +519,15 @@ def main() -> int:
             print(f"[daemon:load] {ld['completed']}/{ld['arrivals']} "
                   f"completed, {ld['shed']} shed; p99 "
                   f"{ld['latency_s']['p99']*1e3:.1f}ms (reported only)")
+    if "chaos" in current:
+        ch = current["chaos"]
+        print(f"[chaos] {ch.get('completed')}/{ch.get('requests')} "
+              f"completed, {ch.get('shed')} shed, {ch.get('retried')} "
+              f"retried, {ch.get('failed')} failed, {ch.get('hung')} hung; "
+              f"degraded {ch.get('degraded')} valid "
+              f"{ch.get('degraded_valid')}; worker restarts "
+              f"{ch.get('worker_restarts')}; drain_clean "
+              f"{ch.get('drain_clean')}")
     if errors:
         print("\nBENCHMARK REGRESSION:")
         for e in errors:

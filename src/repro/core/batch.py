@@ -76,6 +76,7 @@ import jax.numpy as jnp
 from . import bitset as bs
 from . import blocks as bl
 from . import cost as cm
+from . import faults
 from . import unrank as ur
 from .config import (MAX_FLIGHT, UNSET, OptimizerConfig, alias_kwarg,
                      resolve_config)
@@ -286,7 +287,28 @@ class _LevelLoop:
     drivers treat those containers as opaque, so the synchronous loop and
     the pipelined rotation live here exactly once — a fix to the overlap
     schedule cannot diverge between the sharded and unsharded engines.
+
+    Both drivers honor the engine's cooperative ``deadline_s``: the clock
+    (``faults.now``, monkeypatchable) is read once at ``run_levels`` start
+    and once at the top of every level; past the deadline the remaining
+    levels are abandoned and ``collect`` stitches best-effort plans from
+    the committed memo prefix (``self.degraded`` records why).
     """
+
+    def _arm_deadline(self) -> None:
+        self._deadline_at = (None if self.deadline_s is None
+                             else faults.now() + self.deadline_s)
+
+    def _expired(self, i: int, max_n: int) -> bool:
+        """One check per DP level; with ``deadline_s=None`` this is a single
+        attribute test — zero behavior change."""
+        if self._deadline_at is None:
+            return False
+        if faults.now() < self._deadline_at:
+            return False
+        self.degraded = {"reason": "deadline", "deadline_s": self.deadline_s,
+                         "levels_done": i - 1, "levels_total": max_n}
+        return True
 
     def run_levels(self) -> None:
         """Run the level-synchronous DP; the memo stays on device (fetch it
@@ -296,10 +318,13 @@ class _LevelLoop:
         t0 = time.perf_counter()
         max_n = max(g.n for g in self.graphs)
         general = self.algorithm == "mpdp_general"
+        self._arm_deadline()
         if self.pipeline:
             self._run_levels_pipelined(max_n, general)
         else:
             for i in range(2, max_n + 1):
+                if self._expired(i, max_n):
+                    break
                 sets = self._filter_collect(self._filter_dispatch(i))
                 self._register_level(i, sets)
                 if general:
@@ -326,6 +351,8 @@ class _LevelLoop:
         self._register_level(2, sets)
         pairs = self._pairs_level(sets) if general else None
         for i in range(2, max_n + 1):
+            if self._expired(i, max_n):
+                break
             fpend = self._filter_dispatch(i + 1) if i < max_n else None
             if general:
                 ctx = self._eval_general_dispatch(i, sets, pairs)
@@ -366,7 +393,8 @@ class BatchEngine(_LevelLoop):
     def __init__(self, graphs: list[JoinGraph], chunk: int = CHUNK,
                  algorithm: str = "dpsub", cyc_cap: int = CYC_CAP_DEFAULT,
                  pipeline: bool | None = None,
-                 pend_window: int | None = None):
+                 pend_window: int | None = None,
+                 deadline_s: float | None = None):
         if not graphs:
             raise ValueError("empty batch")
         if algorithm not in ("dpsub", "mpdp_tree", "mpdp_general"):
@@ -390,6 +418,9 @@ class BatchEngine(_LevelLoop):
         # bit-identical for any pend_window >= 0
         self.pend_window = (PEND_WINDOW if pend_window is None
                             else int(pend_window))
+        self.deadline_s = deadline_s
+        self._deadline_at: float | None = None
+        self.degraded: dict | None = None
         self.chunks_dispatched = 0
         self._exec_keys: set[tuple] = set()
         self._wall = 0.0
@@ -527,6 +558,7 @@ class BatchEngine(_LevelLoop):
             fpad[: self.B + 1] = fl
             ctx["pend"].append(kf(jnp.asarray(fpad), jnp.int32(i),
                                   self.binom, self.adj_b))
+            faults.fire("chunk")
             self.chunks_dispatched += 1
             self._filter_drain(ctx, self.pend_window)
         self.timings["filter"] = (self.timings.get("filter", 0.0)
@@ -655,6 +687,7 @@ class BatchEngine(_LevelLoop):
                              jnp.int32(seg0), jnp.int32(i), self.adj_b,
                              self.memo_cost, self.memo_rows)
             ctx["pend"].append((seg0, out))
+            faults.fire("chunk")
             self.chunks_dispatched += 1
             self._eval_drain(ctx, self.pend_window)
         self.timings["evaluate"] = (self.timings.get("evaluate", 0.0)
@@ -756,6 +789,7 @@ class BatchEngine(_LevelLoop):
                          jnp.int32(lane1 - lane0), self.adj_b,
                          self.memo_cost, self.memo_rows)
             ctx["pend"].append((p0, npair, out))
+            faults.fire("chunk")
             self.chunks_dispatched += 1
             self._eval_general_drain(ctx, self.pend_window)
         self.timings["evaluate"] = (self.timings.get("evaluate", 0.0)
@@ -808,12 +842,27 @@ class BatchEngine(_LevelLoop):
         for q, g in enumerate(self.graphs):
             base = q << self.nmax
             cost = float(cost_all[base + g.full_set])
-            if not np.isfinite(cost):
+            if np.isfinite(cost):
+                p = extract_plan(g.full_set, left_all[base: base + self.size],
+                                 g)
+                r = OptimizeResult(plan=p, cost=cost,
+                                   counters=self.counters[q],
+                                   algorithm=f"batch_{self.algorithm}",
+                                   wall_s=wall / self.B, levels=g.n)
+            elif self.degraded is not None:
+                # deadline expired mid-batch: anytime stitch over this
+                # query's committed memo prefix (exact islands + GOO finish)
+                from ..heuristics.idp import stitch_partial_memo
+                p, c, dinfo = stitch_partial_memo(
+                    g, cost_all[base: base + self.size],
+                    left_all[base: base + self.size])
+                r = OptimizeResult(plan=p, cost=c, counters=self.counters[q],
+                                   algorithm=f"batch_{self.algorithm}",
+                                   wall_s=wall / self.B,
+                                   levels=self.degraded["levels_done"])
+                r.info["degraded"] = {**self.degraded, **dinfo}
+            else:
                 raise RuntimeError(f"no plan found for batch query {q}")
-            p = extract_plan(g.full_set, left_all[base: base + self.size], g)
-            r = OptimizeResult(plan=p, cost=cost, counters=self.counters[q],
-                               algorithm=f"batch_{self.algorithm}",
-                               wall_s=wall / self.B, levels=g.n)
             r.timings = dict(self.timings)
             out.append(r)
         return out
@@ -1010,6 +1059,17 @@ def optimize_many(graphs: list[JoinGraph], algorithm=UNSET, chunk=UNSET,
     if shard_mesh is not None:
         lattice, solo = lattice_pending(graphs, solo, algorithm)
 
+    # one absolute deadline for the whole stream: each engine gets the time
+    # still remaining, so sequential buckets share the budget instead of
+    # each restarting it
+    deadline_at = (None if cfg.deadline_s is None
+                   else faults.now() + cfg.deadline_s)
+
+    def _left() -> float | None:
+        if deadline_at is None:
+            return None
+        return max(deadline_at - faults.now(), 1e-9)
+
     # sub-batch step: per-shard sub-batches stay capped at max_flight
     step = cfg.max_flight if shard_mesh is None else \
         cfg.max_flight * _shard.mesh_size(shard_mesh)
@@ -1030,32 +1090,59 @@ def optimize_many(graphs: list[JoinGraph], algorithm=UNSET, chunk=UNSET,
             if shard_mesh is None:
                 eng = BatchEngine([graphs[qi] for qi in group],
                                   chunk=run_chunk, algorithm=run_space,
-                                  pipeline=pipeline, **run_kw)
+                                  pipeline=pipeline, deadline_s=_left(),
+                                  **run_kw)
+                rs = eng.run()
+                redispatched = False
             else:
                 eng = _shard.ShardedBatchEngine(
                     [graphs[qi] for qi in group], shard_mesh, chunk=run_chunk,
-                    algorithm=run_space, pipeline=pipeline, **run_kw)
-            rs = eng.run()
+                    algorithm=run_space, pipeline=pipeline,
+                    deadline_s=_left(), **run_kw)
+                try:
+                    rs = eng.run()
+                    redispatched = False
+                except Exception:
+                    # device-execution failure on the mesh: re-dispatch the
+                    # bucket on the in-process single-device engine (the
+                    # degenerate 1-device case is proven bit-identical by
+                    # tests/test_shard.py)
+                    eng = BatchEngine([graphs[qi] for qi in group],
+                                      chunk=run_chunk, algorithm=run_space,
+                                      pipeline=pipeline, deadline_s=_left(),
+                                      **run_kw)
+                    rs = eng.run()
+                    redispatched = True
             if adaptive is not None:
                 from . import telemetry as _tele
                 adaptive.observe(b, space, run_space, _tele.capture(
                     eng, rs, nmax=b, queries=len(group),
                     wall_s=time.perf_counter() - t_fl))
             for qi, r in zip(group, rs):
+                if redispatched:
+                    r.info["redispatched"] = True
                 results[qi] = r
-                if cache is not None:
+                # degraded plans are best-effort, never cached: a later
+                # undegraded run must not hit a deadline-truncated plan
+                if cache is not None and "degraded" not in r.info:
                     cache.put(graphs[qi], r)
     for qi, space in lattice:
         from .lattice import LatticeShardedEngine
         r = LatticeShardedEngine(graphs[qi], shard_mesh, chunk=chunk,
-                                 algorithm=space, pipeline=pipeline).run()[0]
+                                 algorithm=space, pipeline=pipeline,
+                                 deadline_s=_left()).run()[0]
         results[qi] = r
-        if cache is not None:
+        if cache is not None and "degraded" not in r.info:
             cache.put(graphs[qi], r)
     for qi in solo:
-        r = _eng.optimize(graphs[qi], algorithm, chunk=chunk)
+        if cfg.deadline_s is None:
+            r = _eng.optimize(graphs[qi], algorithm, chunk=chunk)
+        else:
+            r = _eng.optimize(graphs[qi], config=OptimizerConfig(
+                algorithm=algorithm, chunk=chunk, cyc_cap=cfg.cyc_cap,
+                enum=cfg.enum, deadline_s=_left()))
         results[qi] = r
-        if cache is not None:
+        if cache is not None and "degraded" not in r.info:
             cache.put(graphs[qi], r)
     resolve_deferred(graphs, results, cache, deferred, dup_rep)
     return results

@@ -70,7 +70,7 @@ UNSET = _Unset()
 # cannot serialize (``to_wire`` raises) — the daemon owns its own shared
 # cache, mesh and policy table.
 _WIRE_FIELDS = ("algorithm", "chunk", "devices", "pipeline", "max_flight",
-                "cyc_cap", "enum", "lattice")
+                "cyc_cap", "enum", "lattice", "deadline_s")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,6 +99,12 @@ class OptimizerConfig:
       drain-window choices, and fed each flight's telemetry.  ``None``
       (the default) means every dispatch takes the static path,
       byte-identical to a policy-free build.  Process-local, never wired.
+    * ``deadline_s`` — cooperative anytime deadline in seconds.  Engines
+      check it at DP-level boundaries; on expiry the remaining levels are
+      abandoned and a best-effort plan is returned (complete memo levels
+      stitched with a GOO completion, cost ≤ plain GOO) with
+      ``OptimizeResult.info["degraded"]`` recording why.  ``None`` (the
+      default) disables the checks entirely — zero behavior change.
     """
 
     algorithm: str = "auto"
@@ -112,10 +118,14 @@ class OptimizerConfig:
     enum: str = "unrank"
     lattice: bool = False
     policy: object | None = None
+    deadline_s: float | None = None
 
     def __post_init__(self):
         if self.chunk <= 0:
             raise ValueError(f"chunk must be positive, got {self.chunk}")
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError(
+                f"deadline_s must be positive, got {self.deadline_s}")
         if self.max_flight <= 0:
             raise ValueError(
                 f"max_flight must be positive, got {self.max_flight}")

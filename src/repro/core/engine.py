@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from . import bitset as bs
 from . import blocks as bl
 from . import cost as cm
+from . import faults
 from . import unrank as ur
 # CHUNK / CYC_CAP_DEFAULT live in core.config (the root of the constant
 # DAG) and are re-exported here for the historical import path
@@ -272,10 +273,14 @@ class ExactEngine:
     """Runs one exact algorithm (dpsub / mpdp / dpsize) over a JoinGraph."""
 
     def __init__(self, g: JoinGraph, chunk: int = CHUNK,
-                 cyc_cap: int = CYC_CAP_DEFAULT, enum: str = "unrank"):
+                 cyc_cap: int = CYC_CAP_DEFAULT, enum: str = "unrank",
+                 deadline_s: float | None = None):
         if not g.is_connected():
             raise ValueError("query graph must be connected (no cross products)")
         self.g = g
+        self.deadline_s = deadline_s
+        self._deadline_at: float | None = None
+        self.degraded: dict | None = None
         self.enum = enum              # "unrank" (paper Alg.5) | "expand"
         self.dg = DeviceGraph.from_graph(g)
         self.n = g.n
@@ -403,9 +408,31 @@ class ExactEngine:
         fin = np.isfinite(best_cost)
         self._scatter(sets_np[fin], cost=best_cost[fin], left=best_left[fin])
 
+    # ---------------------------------------------------------- deadline ---
+    def _arm_deadline(self):
+        """Start the cooperative deadline clock (one ``faults.now()`` call;
+        no-op without ``deadline_s``)."""
+        self._deadline_at = (None if self.deadline_s is None
+                             else faults.now() + self.deadline_s)
+
+    def _expired(self, i: int) -> bool:
+        """Checked once at the top of every DP level: past the deadline the
+        run abandons levels >= i and ``result`` stitches a best-effort plan
+        from the committed memo prefix."""
+        if self._deadline_at is None:
+            return False
+        if faults.now() < self._deadline_at:
+            return False
+        self.degraded = {"reason": "deadline", "deadline_s": self.deadline_s,
+                         "levels_done": i - 1, "levels_total": self.n}
+        return True
+
     # -------------------------------------------------------------- DPSUB --
     def run_dpsub(self) -> None:
+        self._arm_deadline()
         for i in range(2, self.n + 1):
+            if self._expired(i):
+                break
             sets_np = self._level_sets(i)
             if not len(sets_np):
                 continue
@@ -432,7 +459,10 @@ class ExactEngine:
     # ---------------------------------------------------------- MPDP tree --
     def run_mpdp_tree(self) -> None:
         m = self.g.m
+        self._arm_deadline()
         for i in range(2, self.n + 1):
+            if self._expired(i):
+                break
             sets_np = self._level_sets(i)
             if not len(sets_np):
                 continue
@@ -470,7 +500,10 @@ class ExactEngine:
         return ps, pb
 
     def run_mpdp_general(self) -> None:
+        self._arm_deadline()
         for i in range(2, self.n + 1):
+            if self._expired(i):
+                break
             sets_np = self._level_sets(i)
             if not len(sets_np):
                 continue
@@ -523,7 +556,10 @@ class ExactEngine:
     # ------------------------------------------------------------- DPSIZE --
     def run_dpsize(self) -> None:
         level_sets: dict[int, np.ndarray] = {1: np.array([1 << v for v in range(self.n)], np.int32)}
+        self._arm_deadline()
         for i in range(2, self.n + 1):
+            if self._expired(i):
+                break
             sets_np = self._level_sets(i)
             level_sets[i] = sets_np
             t0 = time.perf_counter()
@@ -565,13 +601,26 @@ class ExactEngine:
     def result(self, algorithm: str, t0: float) -> OptimizeResult:
         full = self.g.full_set
         cost = float(np.asarray(self.memo_cost[full]))
-        if not np.isfinite(cost):
+        if np.isfinite(cost):
+            left_np = np.asarray(self.memo_left)
+            p = extract_plan(full, left_np, self.g)
+            return OptimizeResult(plan=p, cost=cost, counters=self.counters,
+                                  algorithm=algorithm,
+                                  wall_s=time.perf_counter() - t0,
+                                  levels=self.n)
+        if self.degraded is None:
             raise RuntimeError("no plan found — disconnected graph?")
-        left_np = np.asarray(self.memo_left)
-        p = extract_plan(full, left_np, self.g)
-        return OptimizeResult(plan=p, cost=cost, counters=self.counters,
-                              algorithm=algorithm,
-                              wall_s=time.perf_counter() - t0, levels=self.n)
+        # deadline expired before the full set was memoized: stitch the
+        # committed memo prefix with a GOO completion (anytime contract)
+        from ..heuristics.idp import stitch_partial_memo
+        p, c, dinfo = stitch_partial_memo(self.g, np.asarray(self.memo_cost),
+                                          np.asarray(self.memo_left))
+        r = OptimizeResult(plan=p, cost=c, counters=self.counters,
+                           algorithm=algorithm,
+                           wall_s=time.perf_counter() - t0,
+                           levels=self.degraded["levels_done"])
+        r.info["degraded"] = {**self.degraded, **dinfo}
+        return r
 
 
 def optimize(g: JoinGraph, algorithm=UNSET, chunk=UNSET, cyc_cap=UNSET,
@@ -619,7 +668,8 @@ def optimize(g: JoinGraph, algorithm=UNSET, chunk=UNSET, cyc_cap=UNSET,
         return OptimizeResult(plan=p, cost=p.cost, counters=Counters(),
                               algorithm=algorithm, levels=1)
     t0 = time.perf_counter()
-    eng = ExactEngine(g, chunk=chunk, cyc_cap=cfg.cyc_cap, enum=cfg.enum)
+    eng = ExactEngine(g, chunk=chunk, cyc_cap=cfg.cyc_cap, enum=cfg.enum,
+                      deadline_s=cfg.deadline_s)
     algo = algorithm
     if algorithm in ("auto", "mpdp"):
         algo = "mpdp_tree" if g.is_tree() else "mpdp_general"

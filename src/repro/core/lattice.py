@@ -67,6 +67,7 @@ from ..distributed.sharding import partition_lanes
 from . import bitset as bs
 from . import blocks as bl
 from . import cost as cm
+from . import faults
 from . import unrank as ur
 from .batch import (PEND_WINDOW, _CLIP, _LevelLoop, _beval_dpsub_chunk,
                     _beval_general_chunk, _beval_tree_chunk, _bfilter_chunk,
@@ -110,7 +111,8 @@ class LatticeShardedEngine(_LevelLoop):
     def __init__(self, g: JoinGraph, mesh=None, chunk: int = CHUNK,
                  algorithm: str = "mpdp_general",
                  cyc_cap: int = CYC_CAP_DEFAULT,
-                 pipeline: bool | None = None):
+                 pipeline: bool | None = None,
+                 deadline_s: float | None = None):
         if algorithm not in ("dpsub", "mpdp_tree", "mpdp_general"):
             raise ValueError(f"unknown lattice lane space {algorithm!r}")
         if g.n < 2:
@@ -131,6 +133,9 @@ class LatticeShardedEngine(_LevelLoop):
         self.pipeline = _use_pipeline() if pipeline is None else bool(pipeline)
         self.nmax = lattice_bucket(g.n)
         self.flat = 1 << self.nmax         # bcap = 1: one query per region
+        self.deadline_s = deadline_s
+        self._deadline_at: float | None = None
+        self.degraded: dict | None = None
         self.collectives = 0               # min_left_commit dispatches
         self.chunks_dispatched = 0         # telemetry: chunk dispatch tally
         self._exec_keys: set[tuple] = set()
@@ -291,6 +296,7 @@ class LatticeShardedEngine(_LevelLoop):
             fpad = np.clip(fl, -_CLIP, _CLIP).astype(np.int32)
             ctx["pend"].append(kf(jnp.asarray(fpad), k_arr, self.binom_b,
                                   self.adj_b))
+            faults.fire("chunk")
             self.chunks_dispatched += 1
             self._filter_drain(ctx, PEND_WINDOW)
         self.timings["filter"] = (self.timings.get("filter", 0.0)
@@ -376,6 +382,7 @@ class LatticeShardedEngine(_LevelLoop):
                              seg0_d, i_arr, self.adj_b, self.memo_cost,
                              self.memo_rows)
             ctx["pend"].append((c0, seg0, out))
+            faults.fire("chunk")
             self.chunks_dispatched += 1
             self._eval_drain(ctx, PEND_WINDOW)
         self.timings["evaluate"] = (self.timings.get("evaluate", 0.0)
@@ -479,6 +486,7 @@ class LatticeShardedEngine(_LevelLoop):
                 jnp.asarray(lane_cnt), self.adj_b, self.memo_cost,
                 self.memo_rows)
             ctx["pend"].append((p0s, npairs, out))
+            faults.fire("chunk")
             self.chunks_dispatched += 1
             self._eval_general_drain(ctx, PEND_WINDOW)
         self.timings["evaluate"] = (self.timings.get("evaluate", 0.0)
@@ -532,13 +540,24 @@ class LatticeShardedEngine(_LevelLoop):
         cost_all = np.asarray(self.memo_cost)
         left_all = np.asarray(self.memo_left)
         cost = float(cost_all[0, g.full_set])
-        if not np.isfinite(cost):
-            raise RuntimeError("no plan found for lattice-sharded query")
-        p = extract_plan(g.full_set, left_all[0], g)
         wall = self._wall + time.perf_counter() - t0
-        r = OptimizeResult(plan=p, cost=cost, counters=self.counters[0],
-                           algorithm=f"lattice_{self.algorithm}",
-                           wall_s=wall, levels=g.n)
+        if np.isfinite(cost):
+            p = extract_plan(g.full_set, left_all[0], g)
+            r = OptimizeResult(plan=p, cost=cost, counters=self.counters[0],
+                               algorithm=f"lattice_{self.algorithm}",
+                               wall_s=wall, levels=g.n)
+        elif self.degraded is not None:
+            # deadline expired: anytime stitch over the committed replicated
+            # memo prefix (see BatchEngine.collect)
+            from ..heuristics.idp import stitch_partial_memo
+            p, c, dinfo = stitch_partial_memo(g, cost_all[0], left_all[0])
+            r = OptimizeResult(plan=p, cost=c, counters=self.counters[0],
+                               algorithm=f"lattice_{self.algorithm}",
+                               wall_s=wall,
+                               levels=self.degraded["levels_done"])
+            r.info["degraded"] = {**self.degraded, **dinfo}
+        else:
+            raise RuntimeError("no plan found for lattice-sharded query")
         r.timings = dict(self.timings)
         return [r]
 
@@ -581,5 +600,5 @@ def optimize_lattice(g: JoinGraph, algorithm=UNSET, chunk=UNSET,
     eng = LatticeShardedEngine(
         g, cfg.mesh if cfg.mesh is not None else cfg.devices,
         chunk=cfg.chunk, algorithm=space, cyc_cap=cfg.cyc_cap,
-        pipeline=cfg.pipeline)
+        pipeline=cfg.pipeline, deadline_s=cfg.deadline_s)
     return eng.run()[0]

@@ -264,6 +264,14 @@ class PlanCache:
         tmp = f"{path}.tmp.{os.getpid()}"
         with open(tmp, "w") as f:
             f.write(repr(blob))
+        from . import faults
+        rule = faults.check("cache_write")
+        if rule is not None and rule.action == "corrupt":
+            # injected torn write: truncate the temp file mid-literal so the
+            # next load() self-invalidates (cold boot), never a wrong hit
+            text = repr(blob)
+            with open(tmp, "w") as f:
+                f.write(text[: len(text) // 3])
         os.replace(tmp, path)
 
     @classmethod

@@ -58,6 +58,7 @@ import time
 
 import numpy as np
 
+from . import faults
 from . import telemetry as _telemetry
 from .batch import (PEND_WINDOW, BatchEngine, bucket_pending, dedup_pending,
                     lattice_pending, probe_stream, resolve_deferred)
@@ -139,6 +140,15 @@ class StreamOptimizer:
             from . import shard as _shard
             self.mesh = _shard.batch_mesh(
                 cfg.mesh if cfg.mesh is not None else cfg.devices)
+        # armed per-stream: absolute expiry shared by every flight/solo so
+        # the whole stream answers within ~cfg.deadline_s (anytime results)
+        self._deadline_at: float | None = None
+
+    def _left(self) -> float | None:
+        """Remaining stream budget (None when no deadline is armed)."""
+        if self._deadline_at is None:
+            return None
+        return max(self._deadline_at - faults.now(), 1e-9)
 
     # -------------------------------------------------------- admission ----
     def admit(self, graphs: list[JoinGraph], idxs: list[int]
@@ -186,16 +196,31 @@ class StreamOptimizer:
             from .lattice import LatticeShardedEngine
             eng = LatticeShardedEngine(members[0], self.mesh,
                                        chunk=self.chunk, algorithm=fl.space,
-                                       pipeline=self.pipeline)
+                                       pipeline=self.pipeline,
+                                       deadline_s=self._left())
         elif self.mesh is None:
             eng = BatchEngine(members, chunk=chunk, algorithm=space,
-                              pipeline=self.pipeline, **kw)
+                              pipeline=self.pipeline,
+                              deadline_s=self._left(), **kw)
         else:
             from . import shard as _shard
             eng = _shard.ShardedBatchEngine(members, self.mesh,
                                             chunk=chunk,
                                             algorithm=space,
-                                            pipeline=self.pipeline, **kw)
+                                            pipeline=self.pipeline,
+                                            deadline_s=self._left(), **kw)
+            try:
+                eng.run_levels()
+            except Exception:
+                # device-execution failure: re-dispatch the whole flight on
+                # the degenerate single-device path (same members, same
+                # space — bit-identical costs), flag it at finalize
+                eng = BatchEngine(members, chunk=chunk, algorithm=space,
+                                  pipeline=self.pipeline,
+                                  deadline_s=self._left(), **kw)
+                eng.run_levels()
+                eng.redispatched = True
+            return eng
         eng.run_levels()
         return eng
 
@@ -206,8 +231,12 @@ class StreamOptimizer:
         t0 = time.perf_counter()
         collected = eng.collect()
         for qi, r in zip(fl.queries, collected):
+            if getattr(eng, "redispatched", False):
+                r.info["redispatched"] = True
             results[qi] = r
-            if self.cache is not None:
+            # degraded (deadline-stitched) plans are best-effort — never
+            # cached, so a later unhurried run recomputes the exact plan
+            if self.cache is not None and "degraded" not in r.info:
                 self.cache.put(graphs[qi], r)
         done = time.perf_counter()
         fl.finalize_s = done - t0
@@ -234,6 +263,8 @@ class StreamOptimizer:
         ``optimize_many`` over the same list."""
         from . import engine as _eng
         t_stream = time.perf_counter()
+        self._deadline_at = (None if self.config.deadline_s is None
+                             else faults.now() + self.config.deadline_s)
         report = StreamReport(latency_s=[0.0] * len(graphs))
         results: list[OptimizeResult | None] = [None] * len(graphs)
         # same probe/dedup stages as optimize_many (shared helpers)
@@ -261,10 +292,16 @@ class StreamOptimizer:
             self._finalize(graphs, *prev, t_stream, results, report)
 
         for qi in solo:
-            r = _eng.optimize(graphs[qi], self.algorithm, chunk=self.chunk)
+            if self.config.deadline_s is None:
+                r = _eng.optimize(graphs[qi], self.algorithm,
+                                  chunk=self.chunk)
+            else:
+                r = _eng.optimize(graphs[qi], config=OptimizerConfig(
+                    algorithm=self.algorithm, chunk=self.chunk,
+                    deadline_s=self._left()))
             results[qi] = r
             report.latency_s[qi] = time.perf_counter() - t_stream
-            if self.cache is not None:
+            if self.cache is not None and "degraded" not in r.info:
                 self.cache.put(graphs[qi], r)
         resolve_deferred(graphs, results, self.cache, deferred, dup_rep)
         for qi in deferred:

@@ -76,6 +76,7 @@ from ..distributed.compat import shard_map_compat
 from . import bitset as bs
 from . import blocks as bl
 from . import cost as cm
+from . import faults
 from . import unrank as ur
 from .batch import (NMAX_BATCH, PEND_WINDOW, _CLIP, _LevelLoop, _bcap,
                     _beval_dpsub_chunk, _beval_general_chunk,
@@ -208,7 +209,8 @@ class ShardedBatchEngine(_LevelLoop):
                  chunk: int = CHUNK, algorithm: str = "dpsub",
                  cyc_cap: int = CYC_CAP_DEFAULT,
                  pipeline: bool | None = None,
-                 pend_window: int | None = None):
+                 pend_window: int | None = None,
+                 deadline_s: float | None = None):
         if not graphs:
             raise ValueError("empty batch")
         if algorithm not in ("dpsub", "mpdp_tree", "mpdp_general"):
@@ -232,6 +234,9 @@ class ShardedBatchEngine(_LevelLoop):
         # both host-only — results are bit-identical for any pend_window
         self.pend_window = (PEND_WINDOW if pend_window is None
                             else int(pend_window))
+        self.deadline_s = deadline_s
+        self._deadline_at: float | None = None
+        self.degraded: dict | None = None
         self.chunks_dispatched = 0
         self._exec_keys: set[tuple] = set()
         self._wall = 0.0
@@ -394,6 +399,7 @@ class ShardedBatchEngine(_LevelLoop):
             fpad[:, : Bs + 1] = fl
             ctx["pend"].append(kf(jnp.asarray(fpad), k_arr, self.binom_b,
                                   self.adj_b))
+            faults.fire("chunk")
             self.chunks_dispatched += 1
             self._filter_drain(ctx, self.pend_window)
         self.timings["filter"] = (self.timings.get("filter", 0.0)
@@ -557,6 +563,7 @@ class ShardedBatchEngine(_LevelLoop):
                     self.all_sets, jnp.asarray(epad), loff_d, soff_d, seg0_d,
                     i_arr, self.adj_b, self.memo_cost, self.memo_rows)
             ctx["pend"].append((lane0, seg0, out))
+            faults.fire("chunk")
             self.chunks_dispatched += 1
             self._eval_drain(ctx, self.pend_window)
         self.timings["evaluate"] = (self.timings.get("evaluate", 0.0)
@@ -678,6 +685,7 @@ class ShardedBatchEngine(_LevelLoop):
                 jnp.asarray(lane_cnt), self.adj_b, self.memo_cost,
                 self.memo_rows)
             ctx["pend"].append((p0s, npairs, out))
+            faults.fire("chunk")
             self.chunks_dispatched += 1
             self._eval_general_drain(ctx, self.pend_window)
         self.timings["evaluate"] = (self.timings.get("evaluate", 0.0)
@@ -739,12 +747,28 @@ class ShardedBatchEngine(_LevelLoop):
             d, s = qi % self.D, qi // self.D
             base = s << self.nmax
             cost = float(cost_all[d, base + g.full_set])
-            if not np.isfinite(cost):
+            if np.isfinite(cost):
+                p = extract_plan(g.full_set,
+                                 left_all[d, base: base + self.size], g)
+                r = OptimizeResult(plan=p, cost=cost,
+                                   counters=self.counters[qi],
+                                   algorithm=f"batch_{self.algorithm}",
+                                   wall_s=wall / self.B, levels=g.n)
+            elif self.degraded is not None:
+                # deadline expired mid-batch: anytime stitch over this
+                # query's committed memo prefix (see BatchEngine.collect)
+                from ..heuristics.idp import stitch_partial_memo
+                p, c, dinfo = stitch_partial_memo(
+                    g, cost_all[d, base: base + self.size],
+                    left_all[d, base: base + self.size])
+                r = OptimizeResult(plan=p, cost=c,
+                                   counters=self.counters[qi],
+                                   algorithm=f"batch_{self.algorithm}",
+                                   wall_s=wall / self.B,
+                                   levels=self.degraded["levels_done"])
+                r.info["degraded"] = {**self.degraded, **dinfo}
+            else:
                 raise RuntimeError(f"no plan found for batch query {qi}")
-            p = extract_plan(g.full_set, left_all[d, base: base + self.size], g)
-            r = OptimizeResult(plan=p, cost=cost, counters=self.counters[qi],
-                               algorithm=f"batch_{self.algorithm}",
-                               wall_s=wall / self.B, levels=g.n)
             r.timings = dict(self.timings)
             out.append(r)
         return out

@@ -28,6 +28,8 @@ deterministic gates (bit-identical results, zero compiles after warmup,
 cross-client cache hits, clean drain) run in CI.
 """
 from .client import DaemonClient, DaemonError, DaemonShed
+from .protocol import FrameTimeout
 from .server import OptimizerDaemon
 
-__all__ = ["DaemonClient", "DaemonError", "DaemonShed", "OptimizerDaemon"]
+__all__ = ["DaemonClient", "DaemonError", "DaemonShed", "FrameTimeout",
+           "OptimizerDaemon"]

@@ -24,6 +24,7 @@ work: it needs only sockets, the graph builders and the plan re-coster.
 """
 from __future__ import annotations
 
+import random
 import socket
 import time
 
@@ -60,46 +61,104 @@ class DaemonClient:
             raise ValueError("pass socket_path= (unix) or host=/port= (tcp)")
         self.tenant = tenant
         self.last_meta: dict | None = None     # wall_s/flights/cache_hits of
-        deadline = time.monotonic() + connect_timeout   # the last optimize
+        self._socket_path = socket_path        # the last optimize
+        self._host, self._port = host, port
+        self._connect_timeout = connect_timeout
+        self._connect()
+
+    def _connect(self) -> None:
+        deadline = time.monotonic() + self._connect_timeout
+        last_err: OSError | None = None
         while True:
             try:
-                if socket_path is not None:
+                if self._socket_path is not None:
                     self._sock = socket.socket(socket.AF_UNIX,
                                                socket.SOCK_STREAM)
-                    self._sock.connect(socket_path)
+                    self._sock.connect(self._socket_path)
                 else:
-                    self._sock = socket.create_connection((host, port))
+                    self._sock = socket.create_connection(
+                        (self._host, self._port))
                 return
-            except OSError:
+            except OSError as e:
+                last_err = e
                 if time.monotonic() >= deadline:
-                    raise
+                    where = (self._socket_path if self._socket_path is not None
+                             else f"{self._host}:{self._port}")
+                    raise DaemonError(
+                        f"could not connect to {where} within "
+                        f"{self._connect_timeout}s") from last_err
                 time.sleep(0.05)
 
+    def _reconnect(self) -> None:
+        self.close()
+        self._connect()
+
     # --------------------------------------------------------------- plumbing
-    def _call(self, msg: dict) -> dict:
-        proto.send_msg(self._sock, msg)
-        reply = proto.recv_msg(self._sock)
+    def _call(self, msg: dict, timeout: float | None = None) -> dict:
+        """One request/reply round trip.  ``timeout`` bounds the socket
+        recv (a stalled daemon raises ``protocol.FrameTimeout`` instead of
+        hanging forever); the socket is restored to blocking after."""
+        try:
+            if timeout is not None:
+                self._sock.settimeout(timeout)
+            proto.send_msg(self._sock, msg)
+            reply = proto.recv_msg(self._sock)
+        finally:
+            if timeout is not None:
+                self._sock.settimeout(None)
         if reply is None:
             raise DaemonError("daemon closed the connection")
         if not reply.get("ok"):
             if reply.get("shed"):
                 raise DaemonShed(reply.get("reason", "?"))
-            raise DaemonError(reply.get("error", "unknown daemon error"))
+            err = DaemonError(reply.get("error", "unknown daemon error"))
+            err.retryable = bool(reply.get("retryable"))
+            raise err
         return reply
 
     # ------------------------------------------------------------------- api
-    def optimize(self, graphs, config=None) -> list:
+    def optimize(self, graphs, config=None, *, timeout: float | None = None,
+                 retries: int = 0, backoff_s: float = 0.05,
+                 max_backoff_s: float = 2.0) -> list:
         """Optimize ``graphs`` on the daemon; returns ``OptimizeResult``\\ s
         in input order (plans re-costed locally — bit-identical to
-        in-process).  Request-level metadata lands on ``self.last_meta``."""
+        in-process).  Request-level metadata lands on ``self.last_meta``.
+
+        ``timeout`` bounds each round trip at the socket (a stalled daemon
+        raises ``FrameTimeout``).  ``retries > 0`` makes the call resilient:
+        ``DaemonShed`` and retryable daemon errors (worker crash, forced
+        drain, request deadline) back off exponentially with jitter and
+        resend; a reset connection reconnects and resends.  The request is
+        idempotent — the daemon recomputes (or serves from its plan cache),
+        so a resend can only repeat work, never corrupt state.
+        """
         msg = {"op": "optimize", "tenant": self.tenant,
                "graphs": [proto.graph_to_wire(g) for g in graphs]}
         if config is not None:
             msg["config"] = config.to_wire()
-        reply = self._call(msg)
+        attempt, delay = 0, backoff_s
+        while True:
+            try:
+                reply = self._call(msg, timeout=timeout)
+                break
+            except (DaemonShed, DaemonError, ConnectionResetError,
+                    BrokenPipeError) as e:
+                if isinstance(e, proto.FrameTimeout):
+                    raise          # a stalled socket is the caller's signal
+                retryable = (isinstance(e, (DaemonShed, ConnectionResetError,
+                                            BrokenPipeError))
+                             or getattr(e, "retryable", False))
+                if not retryable or attempt >= retries:
+                    raise
+                attempt += 1
+                if isinstance(e, (ConnectionResetError, BrokenPipeError)):
+                    self._reconnect()
+                else:
+                    time.sleep(delay * random.uniform(0.5, 1.0))
+                    delay = min(delay * 2, max_backoff_s)
         self.last_meta = {k: reply[k] for k in
                           ("wall_s", "flights", "lattice", "solo",
-                           "cache_hits") if k in reply}
+                           "cache_hits", "degraded") if k in reply}
         return [proto.result_from_wire(d, g)
                 for d, g in zip(reply["results"], graphs)]
 

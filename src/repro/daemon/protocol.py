@@ -38,6 +38,8 @@ import json
 import socket
 import struct
 
+from ..core import faults
+
 MAX_FRAME = 64 << 20     # 64 MiB: a ~1000-relation heuristic-tier graph is
                          # a few hundred KiB; anything near this is garbage
 
@@ -48,12 +50,33 @@ class ProtocolError(ConnectionError):
     """Malformed frame: oversized length prefix or EOF mid-frame."""
 
 
+class FrameTimeout(ProtocolError):
+    """The peer stalled mid-frame past the socket's receive deadline.
+
+    Distinct from a bare ``socket.timeout`` so callers can tell a stalled
+    *daemon* (retryable with a fresh connection) from their own misuse;
+    subclassing ``ProtocolError`` keeps every existing handler working.
+    """
+
+
 def send_msg(sock: socket.socket, obj) -> None:
     """Serialize ``obj`` to one length-prefixed JSON frame and send it."""
     data = json.dumps(obj, separators=(",", ":")).encode()
     if len(data) > MAX_FRAME:
         raise ProtocolError(f"frame too large: {len(data)} > {MAX_FRAME}")
-    sock.sendall(_LEN.pack(len(data)) + data)
+    buf = _LEN.pack(len(data)) + data
+    if faults.active():
+        rule = faults.check("socket_send")
+        if rule is not None and rule.action == "stall":
+            # injected mid-frame stall: half the frame, a pause, the rest —
+            # the peer's recv deadline (FrameTimeout) is what's under test
+            mid = max(len(buf) // 2, 1)
+            sock.sendall(buf[:mid])
+            import time
+            time.sleep(rule.delay_s)
+            sock.sendall(buf[mid:])
+            return
+    sock.sendall(buf)
 
 
 def recv_msg(sock: socket.socket):
@@ -71,7 +94,11 @@ def recv_msg(sock: socket.socket):
 def _recv_exactly(sock: socket.socket, n: int, *, eof_ok: bool):
     chunks, got = [], 0
     while got < n:
-        chunk = sock.recv(min(n - got, 1 << 20))
+        try:
+            chunk = sock.recv(min(n - got, 1 << 20))
+        except TimeoutError as e:
+            raise FrameTimeout(
+                f"peer stalled mid-frame ({got}/{n} bytes)") from e
         if not chunk:
             if eof_ok and got == 0:
                 return None
@@ -132,21 +159,33 @@ def plan_shape_from_wire(e, g):
 
 
 def result_to_wire(r) -> dict:
-    return {"cost": float(r.cost),
-            "algorithm": r.algorithm,
-            "levels": r.levels,
-            "wall_s": r.wall_s,
-            "evaluated": r.counters.evaluated,
-            "ccp": r.counters.ccp,
-            "plan": plan_shape_to_wire(r.plan)}
+    d = {"cost": float(r.cost),
+         "algorithm": r.algorithm,
+         "levels": r.levels,
+         "wall_s": r.wall_s,
+         "evaluated": r.counters.evaluated,
+         "ccp": r.counters.ccp,
+         "plan": plan_shape_to_wire(r.plan)}
+    # degraded metadata (deadline stitch / re-dispatch) is already pure
+    # literals — pass it through so clients can see best-effort results
+    if "degraded" in r.info:
+        d["degraded"] = r.info["degraded"]
+    if r.info.get("redispatched"):
+        d["redispatched"] = True
+    return d
 
 
 def result_from_wire(d: dict, g):
     from ..core.plan import Counters, OptimizeResult
-    return OptimizeResult(
+    r = OptimizeResult(
         plan=plan_shape_from_wire(d["plan"], g),
         cost=d["cost"],
         counters=Counters(evaluated=d["evaluated"], ccp=d["ccp"]),
         algorithm=d["algorithm"],
         wall_s=d["wall_s"],
         levels=d["levels"])
+    if "degraded" in d:
+        r.info["degraded"] = d["degraded"]
+    if d.get("redispatched"):
+        r.info["redispatched"] = True
+    return r

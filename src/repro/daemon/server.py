@@ -49,6 +49,7 @@ import time
 from collections import deque
 
 from . import protocol as proto
+from ..core import faults
 
 
 class _Job:
@@ -82,7 +83,8 @@ class OptimizerDaemon:
                  tenant_inflight: int = 2, history: int = 4096,
                  devices: int | None = None, mesh=None,
                  policy=None, policy_file: str | None = None,
-                 worker_gate: threading.Event | None = None):
+                 worker_gate: threading.Event | None = None,
+                 drain_timeout: float | None = None):
         if socket_path is None and host is None:
             raise ValueError("pass socket_path= (unix) or host=/port= (tcp)")
         self._socket_path = socket_path
@@ -93,6 +95,7 @@ class OptimizerDaemon:
         self._tenant_inflight_cap = tenant_inflight
         self._devices, self._mesh = devices, mesh
         self._worker_gate = worker_gate
+        self._drain_timeout = drain_timeout
 
         if cache is None:
             from ..core.plancache import PlanCache
@@ -121,7 +124,11 @@ class OptimizerDaemon:
         self._tenant_totals: dict[str, dict] = {}
         self._draining = threading.Event()
         self._drain_claimed = False
+        self._force_drain = threading.Event()
+        self._drain_forced = False
         self._stopped = threading.Event()
+        self._current_job: _Job | None = None      # held by the worker
+        self._worker_restarts = 0
         self._listen: socket.socket | None = None
         self._threads: list[threading.Thread] = []
         self.address: tuple | str | None = None
@@ -160,7 +167,7 @@ class OptimizerDaemon:
         self._listen.listen(64)
         self._started_at = time.perf_counter()
         for target, name in ((self._accept_loop, "daemon-accept"),
-                             (self._worker_loop, "daemon-worker"),
+                             (self._worker_main, "daemon-worker"),
                              (self._drain_watcher, "daemon-drain")):
             t = threading.Thread(target=target, name=name, daemon=True)
             t.start()
@@ -168,14 +175,22 @@ class OptimizerDaemon:
 
     def serve_forever(self, install_signals: bool = True) -> None:
         """``start()`` then block until drained.  With ``install_signals``
-        SIGTERM/SIGINT trigger a graceful drain (main-thread only)."""
+        SIGTERM/SIGINT trigger a graceful drain; a *second* signal forces
+        the drain (answer queued jobs with a retryable error, checkpoint,
+        exit) instead of waiting out in-flight work (main-thread only)."""
         self.start()
         if install_signals:
             for sig in (signal.SIGTERM, signal.SIGINT):
-                signal.signal(sig, lambda *_: self._draining.set())
+                signal.signal(sig, self._on_signal)
         # timed wait so the main thread keeps servicing signal handlers
         while not self._stopped.wait(timeout=0.2):
             pass
+
+    def _on_signal(self, *_) -> None:
+        if self._draining.is_set():
+            self._force_drain.set()                # second signal: force it
+        else:
+            self._draining.set()
 
     def _drain_watcher(self) -> None:
         """Runs the actual drain once anything sets ``_draining`` — a
@@ -183,10 +198,19 @@ class OptimizerDaemon:
         self._draining.wait()
         self.drain()
 
-    def drain(self) -> None:
+    def drain(self, timeout: float | None = None) -> None:
         """Graceful shutdown: stop admitting, flush the queue and in-flight
         replies, checkpoint the cache, close the socket.  Idempotent; a
-        second caller just waits for the first to finish."""
+        second caller just waits for the first to finish.
+
+        ``timeout`` (default: the ``drain_timeout`` passed at construction)
+        bounds the flush wait.  On expiry — or when ``_force_drain`` is set
+        by a second SIGTERM/SIGINT — the drain is *forced*: queued-but-
+        unstarted jobs are answered with a retryable shutdown error so no
+        client hangs, the final checkpoint still runs, and the process
+        exits.  The job the worker holds right now finishes normally."""
+        if timeout is None:
+            timeout = self._drain_timeout
         self._draining.set()
         with self._lock:
             claimed, self._drain_claimed = self._drain_claimed, True
@@ -194,13 +218,31 @@ class OptimizerDaemon:
             self._stopped.wait()
             return
         # wait for admitted work to finish (bounded queue -> bounded wait)
+        deadline = None if timeout is None else time.monotonic() + timeout
         while True:
             with self._lock:
                 idle = self._queue.empty() and \
                     not any(self._tenant_inflight.values())
             if idle:
                 break
+            if self._force_drain.is_set() or (
+                    deadline is not None and time.monotonic() >= deadline):
+                self._drain_forced = True
+                break
             time.sleep(0.01)
+        if self._drain_forced:
+            while True:                            # flush unstarted jobs
+                try:
+                    job = self._queue.get_nowait()
+                except queue.Empty:
+                    break
+                if job is None:
+                    continue
+                job.reply = {"ok": False, "retryable": True,
+                             "error": "daemon shutting down (forced drain)"}
+                with self._lock:
+                    self._tenant_inflight[job.tenant] -= 1
+                job.done.set()
         self._queue.put(None)                      # worker sentinel
         if self._listen is not None:
             try:
@@ -283,16 +325,47 @@ class OptimizerDaemon:
                 self._tenant_inflight[tenant] -= 1
                 self._shed += 1
             return {"ok": False, "shed": True, "reason": "queue"}
-        job.done.wait()
+        # a request that carries a deadline gets a *bounded* handler wait:
+        # the worker's engines enforce the deadline cooperatively (anytime
+        # results), so the wait only expires when something is truly wedged
+        # — answer a structured retryable TIMEOUT instead of hanging
+        dl = (msg.get("config") or {}).get("deadline_s")
+        wait = None if not dl else float(dl) + max(float(dl) * 0.2, 1.0)
+        if not job.done.wait(wait):
+            return {"ok": False, "timeout": True, "retryable": True,
+                    "error": f"request deadline ({dl}s) exceeded"}
         return job.reply
 
     # --------------------------------------------------------------- worker -
+    def _worker_main(self) -> None:
+        """Worker supervision: a crashed worker thread (a bug escaping the
+        per-job handler, or an injected ``worker`` fault) is re-spawned in
+        place — the job it held is answered with a retryable error so its
+        client can resend, and everything still queued survives."""
+        while True:
+            try:
+                self._worker_loop()
+                return                             # clean sentinel exit
+            except BaseException as e:
+                with self._lock:
+                    job, self._current_job = self._current_job, None
+                    self._worker_restarts += 1
+                if job is not None:
+                    job.reply = {"ok": False, "retryable": True,
+                                 "error": f"optimizer worker crashed: {e!r}"}
+                    with self._lock:
+                        self._tenant_inflight[job.tenant] -= 1
+                    job.done.set()
+
     def _worker_loop(self) -> None:
         while True:
             job = self._queue.get()
             if job is None:
                 return
-            if self._worker_gate is not None:
+            with self._lock:
+                self._current_job = job
+            faults.fire("worker")                  # injected crash: escapes
+            if self._worker_gate is not None:      # to _worker_main
                 self._worker_gate.wait()
             t0 = time.perf_counter()
             try:
@@ -304,6 +377,7 @@ class OptimizerDaemon:
                              "error": f"{type(e).__name__}: {e}"}
             finally:
                 with self._lock:
+                    self._current_job = None
                     self._tenant_inflight[job.tenant] -= 1
                 job.done.set()
 
@@ -343,7 +417,8 @@ class OptimizerDaemon:
                 "flights": len(report.flights),
                 "lattice": report.lattice,
                 "solo": report.solo,
-                "cache_hits": self.cache.stats.hits - hits0}
+                "cache_hits": self.cache.stats.hits - hits0,
+                "degraded": sum(1 for r in results if "degraded" in r.info)}
 
     def _checkpoint(self, force: bool = False) -> None:
         """Atomic cache + policy checkpoint (worker/drain only — both
@@ -381,6 +456,8 @@ class OptimizerDaemon:
                 "queries": self._queries,
                 "shed": self._shed,
                 "errors": self._errors,
+                "worker_restarts": self._worker_restarts,
+                "drain_forced": self._drain_forced,
                 "flights": self._flights,
                 "queue_depth": self._queue_depth,
                 "queued": self._queue.qsize(),
@@ -430,6 +507,11 @@ def main(argv=None) -> int:
                     help="persisted PolicyTable path: enables learned "
                          "dispatch policies, loaded when present and "
                          "checkpointed atomically alongside the plan cache")
+    ap.add_argument("--drain-timeout", type=float, default=None,
+                    help="bound the graceful-drain flush wait: on expiry "
+                         "queued jobs get a retryable error and the daemon "
+                         "checkpoints + exits (a second SIGTERM does the "
+                         "same immediately)")
     args = ap.parse_args(argv)
     if (args.socket is None) == (args.tcp is None):
         ap.error("exactly one of --socket / --tcp is required")
@@ -437,6 +519,7 @@ def main(argv=None) -> int:
     # before the first jax import: backends read XLA_FLAGS exactly once
     from repro.hostdev import ensure_host_devices
     ensure_host_devices(args.devices)
+    faults.install_from_env()          # REPRO_FAULTS= chaos harness, if any
 
     host = port = None
     if args.tcp is not None:
@@ -446,6 +529,7 @@ def main(argv=None) -> int:
         socket_path=args.socket, host=host, port=port or 0,
         cache_file=args.cache_file, checkpoint_every=args.checkpoint_every,
         queue_depth=args.queue_depth, tenant_inflight=args.tenant_inflight,
-        devices=args.devices, policy_file=args.policy_file)
+        devices=args.devices, policy_file=args.policy_file,
+        drain_timeout=args.drain_timeout)
     daemon.serve_forever()
     return 0

@@ -261,6 +261,59 @@ def run_rounds(ug: UnitGraph, tree: _TNode, k: int, batch, batch_sub,
     return final_unit
 
 
+def stitch_partial_memo(g: JoinGraph, memo_cost, memo_left):
+    """Anytime completion of a deadline-abandoned exact DP (paper's
+    time-budget contract, IDP2 composition).
+
+    ``memo_cost``/``memo_left`` are one query's memo slices with only the
+    first k levels committed.  Every finite composite entry is an *exact*
+    optimum over its relation set, so: greedily cover the relations with
+    the largest (cheapest-first among equal sizes) disjoint solved sets,
+    extract each exact sub-plan, wrap them as temp-table ``Unit``\\ s and
+    let GOO order the remaining joins — exactly how IDP2 composes exact
+    islands.  The result is compared against plain GOO-from-scratch and
+    the cheaper plan wins, so the degraded cost is never worse than GOO.
+
+    Returns ``(plan, cost, dinfo)`` with ``dinfo`` describing the stitch
+    (merged into ``OptimizeResult.info["degraded"]`` by the engines).
+    """
+    import numpy as np
+
+    from ..core.plan import extract_plan, leaf_plan
+    from .common import Unit
+    from . import goo as _goo
+
+    full = 1 << g.n
+    cost = np.asarray(memo_cost[:full], np.float32)
+    solved = [int(s) for s in np.flatnonzero(np.isfinite(cost))
+              if int(s).bit_count() >= 2]
+    # largest exact islands first; cheaper first among equal sizes
+    solved.sort(key=lambda s: (-s.bit_count(), float(cost[s])))
+    units, covered, stitched = [], 0, 0
+    for s in solved:
+        if s & covered:
+            continue
+        p = extract_plan(s, memo_left, g)
+        rows = float(cm.np_rows_for_sets(np.array([s]), g)[0])
+        units.append(Unit(rel_set=s, rows_log2=rows, plan=p))
+        covered |= s
+        stitched += 1
+    for v in range(g.n):
+        if not (covered >> v) & 1:
+            units.append(Unit(rel_set=1 << v,
+                              rows_log2=float(g.log2_card[v]),
+                              plan=leaf_plan(v, g)))
+    ug = UnitGraph(g, units=units)
+    unit = goo_plan(ug)
+    stitch = cost_plan(unit.plan, g)
+    plain = _goo.solve(g)
+    if plain.cost < stitch.cost:
+        return plain.plan, plain.cost, {"stitched_units": stitched,
+                                        "fallback": "goo"}
+    return stitch, stitch.cost, {"stitched_units": stitched,
+                                 "fallback": "stitch"}
+
+
 def _replace(root: _TNode, target: _TNode, leaf: _TNode) -> _TNode:
     if root is target:
         return leaf

@@ -12,7 +12,8 @@ import pytest
 from repro.core import engine
 from repro.core.config import OptimizerConfig
 from repro.core.plancache import PlanCache
-from repro.daemon import DaemonClient, DaemonShed, OptimizerDaemon
+from repro.daemon import (DaemonClient, DaemonError, DaemonShed,
+                          OptimizerDaemon)
 from repro.daemon import protocol as proto
 from repro.workloads import generators as gen
 
@@ -286,3 +287,79 @@ class TestDrainAndCheckpoint:
         assert not bad
         final = PlanCache.load(ckpt)
         assert not final.stale_load and len(final) == len(SMALL)
+
+    def _park_one_job(self, d):
+        """Start a request against a gated daemon and wait until the worker
+        has dequeued it and parked; returns (thread, outcomes dict)."""
+        outcomes: dict[str, object] = {}
+
+        def send(name, tenant):
+            try:
+                with DaemonClient(socket_path=d.address, tenant=tenant) as c:
+                    outcomes[name] = fingerprint(c.optimize(SMALL[:1]))
+            except DaemonError as e:
+                outcomes[name] = ("err", getattr(e, "retryable", False),
+                                  str(e))
+
+        t = threading.Thread(target=send, args=("held", "a"))
+        t.start()
+        deadline = time.monotonic() + 10
+        while time.monotonic() < deadline:
+            with d._lock:
+                if d._current_job is not None:
+                    break
+            time.sleep(0.005)
+        else:
+            pytest.fail("worker never picked up the job")
+        return t, outcomes, send
+
+    def test_drain_timeout_forces_exit_and_answers_queued(self, tmp_path):
+        """A drain that cannot flush within its bound force-exits: queued
+        (unstarted) jobs get a retryable shutdown error instead of hanging
+        their clients; the job the worker holds still finishes normally."""
+        gate = threading.Event()
+        d = OptimizerDaemon(socket_path=str(tmp_path / "fd.sock"),
+                            worker_gate=gate)
+        d.start()
+        try:
+            t1, outcomes, send = self._park_one_job(d)
+            t2 = threading.Thread(target=send, args=("queued", "b"))
+            t2.start()
+            deadline = time.monotonic() + 10   # b's job sits in the queue
+            while d._queue.qsize() < 1 and time.monotonic() < deadline:
+                time.sleep(0.005)
+            t0 = time.monotonic()
+            d.drain(timeout=0.3)
+            assert time.monotonic() - t0 < 5.0
+            assert d._drain_forced
+            t2.join(timeout=10)
+            assert outcomes["queued"][0] == "err"
+            assert outcomes["queued"][1] is True       # retryable
+            assert "forced drain" in outcomes["queued"][2]
+            gate.set()                                 # release held job
+            t1.join(timeout=60)
+            assert outcomes["held"] == fingerprint(
+                engine.optimize_many(SMALL[:1]))
+            assert d._stopped.wait(10)
+        finally:
+            gate.set()
+
+    def test_second_signal_forces_drain(self, tmp_path):
+        """First SIGTERM drains gracefully; a second one forces the drain
+        (the ``_on_signal`` path ``serve_forever`` installs)."""
+        gate = threading.Event()
+        d = OptimizerDaemon(socket_path=str(tmp_path / "sg.sock"),
+                            worker_gate=gate)
+        d.start()
+        try:
+            t1, outcomes, _ = self._park_one_job(d)
+            d._on_signal()                     # graceful: waits on the job
+            time.sleep(0.2)
+            assert not d._stopped.is_set()
+            d._on_signal()                     # second signal: force it
+            assert d._stopped.wait(10)
+            assert d._drain_forced
+            gate.set()
+            t1.join(timeout=60)
+        finally:
+            gate.set()

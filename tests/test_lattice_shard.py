@@ -259,7 +259,7 @@ class _SpyLattice:
     calls: list = []
 
     def __init__(self, g, mesh=None, chunk=None, algorithm=None,
-                 pipeline=None):
+                 pipeline=None, deadline_s=None):
         self.g = g
         type(self).calls.append((g.n, algorithm))
         self._res = engine.optimize(g, "auto")
