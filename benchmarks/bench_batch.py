@@ -65,6 +65,20 @@ repeats — and the throughput half against a conservative noise floor
 (the learned dispatch must not *lose* to the static defaults it was
 trained against).
 
+``--mixed-joins`` additionally runs the **typed-join** smoke: a
+``mixed_joins_stream`` (left/semi/anti/full bridges + explicit m:n
+fan-outs) shares one ``optimize_many`` flight with a plain inner-only
+stream.  Every gate is deterministic and enforced by
+``check_regression.py``: each plan passes the brute-force oracle's
+conflict rules (``tests/oracle.py``) and each typed query small enough to
+enumerate exhaustively costs within 2 ulp of the true optimum; batched
+costs are bit-identical to the solo engine per resolved lane space; the
+inner-only queries' per-query evaluated-lane counts in the mixed flight
+equal the same queries optimized alone (typed graphs bucket separately —
+the inner kernels must be byte-for-byte undisturbed); the flight's total
+lane count must not grow over the baseline and the timed repeats must
+trigger zero retraces.  Throughput is reported, never gated.
+
 ``--json`` writes the machine-readable report consumed by
 ``benchmarks/check_regression.py`` (the CI bench-regression gate; the
 ``devices-4`` CI job adds the sharded section to the gated report);
@@ -92,7 +106,8 @@ def _lanes(results):
 def bench(nq: int = 32, repeat: int = 3, seed: int = 0,
           devices: int | None = None, pipeline: bool = False,
           uniondp: bool = False, lattice: bool = False,
-          policy: bool = False, smoke: bool = False) -> dict:
+          policy: bool = False, mixed_joins: bool = False,
+          smoke: bool = False) -> dict:
     from repro.core import engine
     graphs = make_stream(nq, seed)
 
@@ -159,7 +174,108 @@ def bench(nq: int = 32, repeat: int = 3, seed: int = 0,
         out["uniondp_quality"] = bench_uniondp_quality(smoke)
     if lattice:
         out["lattice"] = bench_lattice(devices, repeat)
+    if mixed_joins:
+        out["mixed_joins"] = bench_mixed_joins(repeat, smoke)
     return out
+
+
+# exhaustive-oracle ceiling: tests/oracle.py enumerates every ordered CCP of
+# every connected subset, so the spot-check stays cheap only up to here
+_MIXED_ORACLE_NMAX = 7
+
+
+def bench_mixed_joins(repeat: int, smoke: bool) -> dict:
+    """Typed-join (non-inner + m:n) smoke on the batched engines.
+
+    A ``mixed_joins_stream`` and a plain inner-only ``mixed_stream`` share
+    one ``optimize_many`` flight.  Everything gated here is deterministic
+    (``check_regression.py``):
+
+      * ``oracle_valid`` — every plan in the flight satisfies the
+        brute-force oracle's conflict rules (``tests/oracle.py``, the
+        independent TES restatement) plus ``validate_plan``, and each typed
+        query with n <= ``_MIXED_ORACLE_NMAX`` costs within 2 ulp of the
+        exhaustively enumerated optimum (``oracle_checked`` counts those);
+      * ``costs_equal_solo`` — batched costs bit-identical to the solo
+        engine on each query's resolved lane space;
+      * ``inner_lanes_unchanged`` — the inner queries' *per-query*
+        evaluated-lane counts in the mixed flight equal the same queries
+        optimized alone: typed graphs bucket separately, so inner flights
+        must be byte-for-byte undisturbed by the typed extension;
+      * ``evaluated_lanes`` (whole flight) must not grow over the baseline
+        and the timed repeats must trigger zero ``retraces``.
+    """
+    from repro.core import engine
+    from repro.core.exec_cache import EXEC
+    from repro.core.plan import validate_plan
+    from repro.workloads.generators import mixed_joins_stream, mixed_stream
+    try:
+        from tests import oracle as _oracle     # repo-root checkouts (CI)
+    except ImportError:
+        _oracle = None
+
+    algo = "mpdp"
+    nt, ni = (8, 6) if smoke else (16, 12)
+    typed = mixed_joins_stream(nt, seed=0, sizes=(5, 6, 7, 8))
+    inner = mixed_stream(ni, seed=1, sizes=(8, 9, 10))
+    flight = inner + typed
+
+    # warm every path the section times or compares against
+    alone = engine.optimize_many(inner, algorithm=algo)
+    engine.optimize_many(flight, algorithm=algo)
+    rs = engine.optimize_many(flight, algorithm=algo)
+    solo = [engine.optimize(g, r.algorithm.replace("batch_", ""))
+            for g, r in zip(flight, rs)]
+
+    compiles0 = EXEC.total()
+    t_bat = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        rs = engine.optimize_many(flight, algorithm=algo)
+        t_bat.append(time.perf_counter() - t0)
+    retraces = EXEC.total() - compiles0
+
+    # recorded, not asserted (same convention as bench_pipeline): failures
+    # must land in the JSON report so check_regression can gate them
+    costs_equal = all(s.cost == r.cost for s, r in zip(solo, rs))
+    if not costs_equal:
+        print("# WARNING: mixed-joins batched costs diverged from solo")
+    lanes_alone = [r.counters.evaluated for r in alone]
+    lanes_mixed = [r.counters.evaluated for r in rs[:len(inner)]]
+    inner_unchanged = lanes_alone == lanes_mixed
+    if not inner_unchanged:
+        print("# WARNING: inner-only lane counts perturbed by typed flight")
+    valid, checked = True, 0
+    for g, r in zip(flight, rs):
+        try:
+            validate_plan(r.plan, g)
+        except AssertionError:
+            valid = False
+        if _oracle is not None:
+            valid = valid and _oracle.plan_valid(g, r.plan)
+            if g.typed and g.n <= _MIXED_ORACLE_NMAX:
+                oc, _ = _oracle.solve(g)
+                valid = valid and _oracle.ulp_diff(r.cost, oc) <= 2
+                checked += 1
+    if not valid:
+        print("# WARNING: a mixed-joins plan failed the oracle spot-check")
+    ev, ccp = _lanes(rs)
+    best = min(t_bat)
+    return {
+        "algorithm": algo,
+        "typed_queries": nt,
+        "inner_queries": ni,
+        "batch_s": best,
+        "qps": len(flight) / best,
+        "evaluated_lanes": ev,
+        "ccp_lanes": ccp,
+        "spaces": sorted({r.algorithm for r in rs}),
+        "costs_equal_solo": costs_equal,
+        "inner_lanes_unchanged": inner_unchanged,
+        "oracle_valid": valid,
+        "oracle_checked": checked,
+        "retraces": retraces,
+    }
 
 
 # (space, generator kind, n) — one case per lane space; the snowflake is the
@@ -557,6 +673,12 @@ def main() -> None:
                          "the static defaults (costs bit-identical + "
                          "policy-off lane identity + zero-retrace gates; "
                          "throughput gated against a noise floor)")
+    ap.add_argument("--mixed-joins", action="store_true",
+                    help="also bench the typed-join (non-inner + m:n) "
+                         "stream sharing a flight with inner queries (all "
+                         "gates deterministic: oracle-valid plans, costs "
+                         "equal solo, inner lane counts unchanged, zero "
+                         "retraces)")
     ap.add_argument("--smoke", action="store_true",
                     help="trimmed CI mode (16 queries, min-of-2 repeats)")
     ap.add_argument("--json", type=str, default=None,
@@ -575,7 +697,8 @@ def main() -> None:
         nq, repeat = min(nq, 16), 2
     r = bench(nq, repeat, args.seed, devices=args.devices,
               pipeline=args.pipeline, uniondp=args.uniondp,
-              lattice=args.lattice, policy=args.policy, smoke=args.smoke)
+              lattice=args.lattice, policy=args.policy,
+              mixed_joins=args.mixed_joins, smoke=args.smoke)
     print("mode,queries,wall_s,queries_per_s,evaluated_lanes")
     print(f"sequential,{r['queries']},{r['seq_s']:.3f},{r['seq_qps']:.2f},-")
     for algo, a in r["algorithms"].items():
@@ -632,6 +755,16 @@ def main() -> None:
               f"frontier n={front['n']} (nmax {front['nmax']} > batched cap) "
               f"solved in {front['wall_s']:.2f}s, "
               f"{front['speedup_vs_solo']:.2f}x vs solo oracle")
+    if "mixed_joins" in r:
+        mj = r["mixed_joins"]
+        print(f"mixed-joins[{mj['algorithm']}],"
+              f"{mj['inner_queries']}+{mj['typed_queries']}t,"
+              f"{mj['batch_s']:.3f},{mj['qps']:.2f},{mj['evaluated_lanes']}")
+        print(f"# mixed-joins oracle valid {mj['oracle_valid']} "
+              f"(exhaustive on {mj['oracle_checked']} queries), costs equal "
+              f"solo {mj['costs_equal_solo']}, inner lanes unchanged "
+              f"{mj['inner_lanes_unchanged']}, {mj['retraces']} retraces; "
+              f"spaces {','.join(mj['spaces'])}")
     if "uniondp_quality" in r:
         u = r["uniondp_quality"]
         print("stream,kind,n,new/goo,new/idp2,old/new,reopt_passes")

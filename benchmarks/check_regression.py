@@ -30,6 +30,16 @@ runner's core count, not the code.  A current report without a ``sharded``
 section skips these checks with a note (the single-device CI jobs bench
 without ``--devices``; the ``devices-4`` job provides the gating run).
 
+When the baseline carries a ``mixed_joins`` section (from ``bench_batch
+--mixed-joins``), the typed-join path is gated on its deterministic
+invariants: every plan in the mixed (inner + non-inner/m:n) flight passes
+the brute-force oracle's conflict rules, the exhaustive cost spot-check
+covers at least as many small typed queries as the baseline, batched costs
+equal the solo engine bit-for-bit, the inner-only queries' per-query lane
+counts are untouched by typed graphs sharing the flight, the flight's
+total lane count does not grow, and the timed repeats trigger zero
+retraces.  Throughput is reported, never gated.
+
 When the baseline carries a ``pipeline`` section (from ``bench_batch
 --pipeline``), the pipelined path is gated on its two deterministic
 invariants: pipelined costs **equal** the synchronous run's bit-for-bit, and
@@ -125,6 +135,7 @@ def check(current: dict, baseline: dict, tolerance: float = 0.25) -> list[str]:
             f"{algos['mpdp']['evaluated_lanes']} >= "
             f"{algos['dpsub']['evaluated_lanes']}")
     errors += check_sharded(current, baseline, tolerance)
+    errors += check_mixed_joins(current, baseline)
     errors += check_pipeline(current, baseline)
     errors += check_policy(current, baseline)
     errors += check_lattice(current, baseline)
@@ -382,6 +393,63 @@ def check_policy(current: dict, baseline: dict) -> list[str]:
     return errors
 
 
+def check_mixed_joins(current: dict, baseline: dict) -> list[str]:
+    """Deterministic typed-join gates (from ``bench_batch --mixed-joins``):
+    every plan in the mixed flight passes the brute-force oracle's conflict
+    rules with the exhaustive cost spot-check covering at least as many
+    queries as the baseline, batched costs equal the solo engine
+    bit-for-bit, the inner-only queries' per-query lane counts are
+    untouched by typed graphs sharing the flight, the flight's total lane
+    count does not grow, and the timed repeats trigger zero retraces.
+    Throughput is reported, never gated."""
+    base_m = baseline.get("mixed_joins")
+    cur_m = current.get("mixed_joins")
+    if base_m is None:
+        if cur_m is not None:
+            print("note: current report has a mixed_joins section but the "
+                  "baseline does not — typed-join gates are vacuous until "
+                  "the baseline is refreshed with bench_batch --mixed-joins")
+        return []
+    if cur_m is None:
+        print("note: baseline has a mixed_joins section but the current "
+              "report was benched without --mixed-joins; typed-join checks "
+              "skipped (the bench-regression CI job runs the gating "
+              "configuration)")
+        return []
+    errors: list[str] = []
+    if not cur_m.get("oracle_valid", False):
+        errors.append(
+            "[mixed-joins] a plan failed the brute-force oracle spot-check "
+            "(conflict-rule validity on every query, exhaustive cost "
+            "optimality on the small typed ones)")
+    if cur_m.get("oracle_checked", 0) < base_m.get("oracle_checked", 0):
+        errors.append(
+            f"[mixed-joins] exhaustive oracle coverage shrank: "
+            f"{cur_m.get('oracle_checked', 0)} queries < baseline "
+            f"{base_m.get('oracle_checked', 0)}")
+    if not cur_m.get("costs_equal_solo", False):
+        errors.append(
+            "[mixed-joins] batched costs diverged from the solo engine "
+            "(same lane space must be bit-identical batched vs solo)")
+    if not cur_m.get("inner_lanes_unchanged", False):
+        errors.append(
+            "[mixed-joins] inner-only per-query lane counts were perturbed "
+            "by typed graphs sharing the flight (typed queries must bucket "
+            "separately — inner flights stay byte-for-byte unchanged)")
+    if cur_m.get("evaluated_lanes", 0) > base_m.get("evaluated_lanes", 0):
+        errors.append(
+            f"[mixed-joins] evaluated lanes grew: "
+            f"{cur_m.get('evaluated_lanes')} > baseline "
+            f"{base_m.get('evaluated_lanes')} (the conflict mask prunes "
+            "lanes — growth means typed bucketing or masking regressed)")
+    if cur_m.get("retraces", 0) > base_m.get("retraces", 0):
+        errors.append(
+            f"[mixed-joins] timed repeats retraced kernels: "
+            f"{cur_m['retraces']} > baseline {base_m['retraces']} "
+            "(repeated typed bucket shapes must hit the executable cache)")
+    return errors
+
+
 def check_pipeline(current: dict, baseline: dict) -> list[str]:
     """Deterministic pipeline gates: pipelined costs equal the synchronous
     path bit-for-bit, and the timed repeats compile nothing (the executable
@@ -474,6 +542,14 @@ def main() -> int:
                   f"({a['qps_per_device']:.2f}/device) speedup "
                   f"{a['speedup']:.2f}x scaling {a['scaling_vs_1dev']:.2f}x "
                   f"lanes {a['evaluated_lanes']}")
+    if "mixed_joins" in current:
+        m = current["mixed_joins"]
+        print(f"[mixed-joins:{m['algorithm']}] qps {m['qps']:.2f} "
+              f"oracle_valid {m['oracle_valid']} "
+              f"(exhaustive on {m['oracle_checked']}) "
+              f"costs_equal_solo {m['costs_equal_solo']} "
+              f"inner_lanes_unchanged {m['inner_lanes_unchanged']} "
+              f"lanes {m['evaluated_lanes']} retraces {m['retraces']}")
     if "pipeline" in current:
         p = current["pipeline"]
         print(f"[pipeline:{p['algorithm']}] qps {p['qps']:.2f} "

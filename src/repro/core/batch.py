@@ -82,9 +82,9 @@ from .config import (MAX_FLIGHT, UNSET, OptimizerConfig, alias_kwarg,
                      resolve_config)
 from .engine import (CHUNK, CYC_CAP_DEFAULT, INF, _cap, _merge_best,
                      _merge_scattered, _prune, _scatter_f32, _scatter_i32,
-                     _use_pallas, _use_pipeline)
+                     _typed_lane_cost, _use_pallas, _use_pipeline)
 from .exec_cache import EXEC
-from .joingraph import JoinGraph
+from .joingraph import JoinGraph, typed_edge_arrays
 from .plan import Counters, OptimizeResult, extract_plan, leaf_plan
 
 NMAX_BATCH = 16          # memo is (bcap << NMAX): past 16 fall back to solo
@@ -132,8 +132,10 @@ def _bfilter_chunk(foff, k, binom, adj_b, *, nmax: int, chunk: int, bcap: int,
 
 def _beval_dpsub_chunk(all_sets, eoff, loff, soff, seg0, i,
                        adj_b, memo_cost, memo_rows,
+                       ekind_b=None, elm_b=None, erm_b=None,
+                       etes_l_b=None, etes_r_b=None,
                        *, nmax: int, chunk: int, nseg: int, bcap: int,
-                       pallas: bool = False):
+                       pallas: bool = False, typed: bool = False):
     """Batched DPSUB evaluate: lane -> (query, set, subset) decode.
 
     eoff: i32[bcap+1] chunk-local per-query lane offsets (prefix of ns_q<<i).
@@ -165,10 +167,18 @@ def _beval_dpsub_chunk(all_sets, eoff, loff, soff, seg0, i,
     rows_S = memo_rows[mbase | S]
     cl = memo_cost[mbase | lb]
     cr = memo_cost[mbase | rb]
-    jc = cm.join_cost(memo_rows[mbase | lb], memo_rows[mbase | rb], rows_S)
-    cand = jnp.where(ccp, cl + cr + jc, INF)
+    if typed:
+        cand, lbx = _typed_lane_cost(
+            lb, rb, rows_S, ccp, cl, cr,
+            memo_rows[mbase | lb], memo_rows[mbase | rb],
+            ekind_b[qid], elm_b[qid], erm_b[qid],
+            etes_l_b[qid], etes_r_b[qid])
+    else:
+        jc = cm.join_cost(memo_rows[mbase | lb], memo_rows[mbase | rb], rows_S)
+        cand = jnp.where(ccp, cl + cr + jc, INF)
+        lbx = lb
     seg = jnp.clip(soff[qid] + set_idx - seg0, 0, nseg - 1)
-    seg_cost, seg_left = _prune(seg, cand, lb, nseg)
+    seg_cost, seg_left = _prune(seg, cand, lbx, nseg)
     ev_q = jax.ops.segment_sum(live.astype(jnp.int32), qid, num_segments=bcap)
     ccp_q = jax.ops.segment_sum(ccp.astype(jnp.int32), qid, num_segments=bcap)
     return seg_cost, seg_left, ev_q, ccp_q
@@ -176,8 +186,10 @@ def _beval_dpsub_chunk(all_sets, eoff, loff, soff, seg0, i,
 
 def _beval_tree_chunk(all_sets, eoff, loff, soff, seg0, m_b,
                       adj_b, emu_b, emv_b, memo_cost, memo_rows,
+                      ekind_b=None, elm_b=None, erm_b=None,
+                      etes_l_b=None, etes_r_b=None,
                       *, nmax: int, chunk: int, nseg: int, bcap: int,
-                      pallas: bool = False):
+                      pallas: bool = False, typed: bool = False):
     """Batched MPDP:Tree evaluate: lane -> (query, set, edge) decode.
 
     eoff: i32[bcap+1] chunk-local per-query lane offsets (prefix of ns_q*m_q).
@@ -212,11 +224,19 @@ def _beval_tree_chunk(all_sets, eoff, loff, soff, seg0, m_b,
     rows_S = memo_rows[mbase | S]
     cl = memo_cost[mbase | S_left]
     cr = memo_cost[mbase | S_right]
-    jc = cm.join_cost(memo_rows[mbase | S_left], memo_rows[mbase | S_right],
-                      rows_S)
-    cand = jnp.where(ccp, cl + cr + jc, INF)
+    if typed:
+        cand, lbx = _typed_lane_cost(
+            S_left, S_right, rows_S, ccp, cl, cr,
+            memo_rows[mbase | S_left], memo_rows[mbase | S_right],
+            ekind_b[qid], elm_b[qid], erm_b[qid],
+            etes_l_b[qid], etes_r_b[qid])
+    else:
+        jc = cm.join_cost(memo_rows[mbase | S_left], memo_rows[mbase | S_right],
+                          rows_S)
+        cand = jnp.where(ccp, cl + cr + jc, INF)
+        lbx = S_left
     seg = jnp.clip(soff[qid] + set_idx - seg0, 0, nseg - 1)
-    seg_cost, seg_left = _prune(seg, cand, S_left, nseg)
+    seg_cost, seg_left = _prune(seg, cand, lbx, nseg)
     ev_q = jax.ops.segment_sum(evaluated.astype(jnp.int32), qid,
                                num_segments=bcap)
     ccp_q = jax.ops.segment_sum(ccp.astype(jnp.int32), qid, num_segments=bcap)
@@ -225,8 +245,10 @@ def _beval_tree_chunk(all_sets, eoff, loff, soff, seg0, m_b,
 
 def _beval_general_chunk(pair_set, pair_block, pair_qid, off_local, n_pairs,
                          lane_count, adj_b, memo_cost, memo_rows,
+                         ekind_b=None, elm_b=None, erm_b=None,
+                         etes_l_b=None, etes_r_b=None,
                          *, nmax: int, chunk: int, pcap: int, bcap: int,
-                         pallas: bool = False):
+                         pallas: bool = False, typed: bool = False):
     """Batched MPDP-general evaluate: lane -> (query, set, block, rank).
 
     Phase A (host, per query) compacted every set's blocks into sorted
@@ -264,10 +286,18 @@ def _beval_general_chunk(pair_set, pair_block, pair_qid, off_local, n_pairs,
     rows_S = memo_rows[mbase | S]
     cl = memo_cost[mbase | S_left]
     cr = memo_cost[mbase | S_right]
-    jc = cm.join_cost(memo_rows[mbase | S_left], memo_rows[mbase | S_right],
-                      rows_S)
-    cand = jnp.where(ccp_blk, cl + cr + jc, INF)
-    seg_cost, seg_left = _prune(p, cand, S_left, pcap)
+    if typed:
+        cand, lbx = _typed_lane_cost(
+            S_left, S_right, rows_S, ccp_blk, cl, cr,
+            memo_rows[mbase | S_left], memo_rows[mbase | S_right],
+            ekind_b[qid], elm_b[qid], erm_b[qid],
+            etes_l_b[qid], etes_r_b[qid])
+    else:
+        jc = cm.join_cost(memo_rows[mbase | S_left], memo_rows[mbase | S_right],
+                          rows_S)
+        cand = jnp.where(ccp_blk, cl + cr + jc, INF)
+        lbx = S_left
+    seg_cost, seg_left = _prune(p, cand, lbx, pcap)
     ev_q = jax.ops.segment_sum(enum_ok.astype(jnp.int32), qid,
                                num_segments=bcap)
     ccp_q = jax.ops.segment_sum(ccp_blk.astype(jnp.int32), qid,
@@ -458,6 +488,20 @@ class BatchEngine(_LevelLoop):
         self.eu_idx_b = jnp.asarray(eui)
         self.ev_idx_b = jnp.asarray(evi)
         self.edge_live_b = jnp.asarray(eliv)
+        # typed-edge conflict channel: stacked (bcap, emax) kind / operand /
+        # TES arrays, present only when some query has a non-inner edge.
+        # Inner-only batches pass no extra args and carry typed=False, so
+        # their kernel traces (and bits) are exactly the pre-typed ones.
+        self.typed = any(g.typed for g in graphs)
+        if self.typed:
+            tarr = [np.zeros((self.bcap, self.emax), np.int32)
+                    for _ in range(5)]
+            for q, g in enumerate(graphs):
+                for a, col in zip(tarr, typed_edge_arrays(g, self.emax)):
+                    a[q] = col
+            self._targs = tuple(jnp.asarray(a) for a in tarr)
+        else:
+            self._targs = ()
         self.m_b = jnp.asarray(
             np.array([g.m for g in graphs] + [0] * (self.bcap - self.B),
                      np.int32))
@@ -660,11 +704,11 @@ class BatchEngine(_LevelLoop):
         if self.algorithm == "mpdp_tree":
             kernel = self._jit("btree", _beval_tree_chunk, nmax=self.nmax,
                                chunk=self.chunk, nseg=nseg, bcap=self.bcap,
-                               pallas=self.pallas)
+                               pallas=self.pallas, typed=self.typed)
         else:
             kernel = self._jit("bdpsub", _beval_dpsub_chunk, nmax=self.nmax,
                                chunk=self.chunk, nseg=nseg, bcap=self.bcap,
-                               pallas=self.pallas)
+                               pallas=self.pallas, typed=self.typed)
         ctx = {"pend": deque(),
                "best_cost": np.full(int(soff[-1]), INF, np.float32),
                "best_left": np.zeros(int(soff[-1]), np.int32),
@@ -681,11 +725,11 @@ class BatchEngine(_LevelLoop):
                 out = kernel(self.all_sets, jnp.asarray(epad), loff_d, soff_d,
                              jnp.int32(seg0), self.m_b, self.adj_b,
                              self.emu_b, self.emv_b, self.memo_cost,
-                             self.memo_rows)
+                             self.memo_rows, *self._targs)
             else:
                 out = kernel(self.all_sets, jnp.asarray(epad), loff_d, soff_d,
                              jnp.int32(seg0), jnp.int32(i), self.adj_b,
-                             self.memo_cost, self.memo_rows)
+                             self.memo_cost, self.memo_rows, *self._targs)
             ctx["pend"].append((seg0, out))
             faults.fire("chunk")
             self.chunks_dispatched += 1
@@ -783,11 +827,12 @@ class BatchEngine(_LevelLoop):
             ofl = np.clip(ofl, -_CLIP, _CLIP).astype(np.int32)
             kernel = self._jit("bgeneral", _beval_general_chunk,
                                nmax=self.nmax, chunk=self.chunk, pcap=pcap,
-                               bcap=self.bcap, pallas=self.pallas)
+                               bcap=self.bcap, pallas=self.pallas,
+                               typed=self.typed)
             out = kernel(jnp.asarray(psl), jnp.asarray(pbl), jnp.asarray(pql),
                          jnp.asarray(ofl), jnp.int32(npair),
                          jnp.int32(lane1 - lane0), self.adj_b,
-                         self.memo_cost, self.memo_rows)
+                         self.memo_cost, self.memo_rows, *self._targs)
             ctx["pend"].append((p0, npair, out))
             faults.fire("chunk")
             self.chunks_dispatched += 1
@@ -943,16 +988,19 @@ def dedup_pending(graphs, pending: list[int], cache):
 
 
 def bucket_pending(graphs, pending: list[int], algorithm: str):
-    """Admission grouping: (NMAX bucket, lane space) -> stream indices.
-    Queries no batched space can serve (forced ``mpdp_tree`` on a cyclic
-    graph, ``nmax_bucket(n) > NMAX_BATCH``) come back in the solo list."""
-    buckets: dict[tuple[int, str], list[int]] = {}
+    """Admission grouping: (NMAX bucket, lane space, typed) -> stream
+    indices.  Typed queries (some non-inner edge) bucket separately from
+    inner-only ones so the latter keep their pre-typed kernel traces —
+    the byte-identity guarantee for inner-only streams.  Queries no batched
+    space can serve (forced ``mpdp_tree`` on a cyclic graph,
+    ``nmax_bucket(n) > NMAX_BATCH``) come back in the solo list."""
+    buckets: dict[tuple[int, str, bool], list[int]] = {}
     solo: list[int] = []
     for qi in pending:
         b = bs.nmax_bucket(graphs[qi].n)
         space = _lane_space(graphs[qi], algorithm)
         if space is not None and b <= NMAX_BATCH:
-            buckets.setdefault((b, space), []).append(qi)
+            buckets.setdefault((b, space, graphs[qi].typed), []).append(qi)
         else:
             solo.append(qi)
     return buckets, solo
@@ -1073,7 +1121,7 @@ def optimize_many(graphs: list[JoinGraph], algorithm=UNSET, chunk=UNSET,
     # sub-batch step: per-shard sub-batches stay capped at max_flight
     step = cfg.max_flight if shard_mesh is None else \
         cfg.max_flight * _shard.mesh_size(shard_mesh)
-    for (b, space), idxs in sorted(buckets.items()):
+    for (b, space, _typed), idxs in sorted(buckets.items()):
         for s0 in range(0, len(idxs), step):
             group = idxs[s0: s0 + step]
             run_space, run_chunk, run_kw = space, chunk, {}

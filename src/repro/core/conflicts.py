@@ -1,0 +1,259 @@
+"""Conflict rules for non-inner join edges (reorderability; beyond-paper).
+
+The paper's MPDP enumeration assumes freely reorderable inner equi-joins.
+Real workloads mix LEFT / FULL / SEMI / ANTI joins, which are *not* freely
+reorderable: a (csg, cmp) split that places a preserved side on the wrong
+operand, or fires an outer join before its null-supplying side is fully
+assembled, yields a cheap but semantically different plan.  This module
+implements a conservative TES (total eligibility set) flavour of the
+Moerkotte/Neumann conflict-detector family:
+
+* every non-inner edge must be a **bridge** of the query graph — removing it
+  splits the graph into the edge's left component and right component;
+* for a directional edge (LEFT / SEMI / ANTI, all of which preserve or probe
+  their *left* operand), ``TES_l`` is just the left-operand vertex and
+  ``TES_r`` is the full right component: the null-supplying / filtering side
+  must be completely assembled before the edge fires;
+* a FULL edge needs *both* components assembled (``TES_l`` = left component,
+  ``TES_r`` = right component): it is the topmost join over its bridge;
+* a (left, right) operand pair crossing a non-inner edge is valid iff
+  ``TES_l ⊆ left`` and ``TES_r ⊆ right`` (either orientation for FULL).
+
+Construction-time checks (``analyze``) raise ``ValueError`` for non-bridge
+non-inner edges and for *infeasible* TES configurations (two edges each
+requiring the other to fire first — e.g. two LEFT joins preserving opposite
+endpoints of a shared relation), so every graph that exists admits at least
+one valid join tree.  ``tests/test_reorderability.py`` pins the whole rule
+set against a brute-force oracle.
+
+Cardinality semantics ride on the *effective selectivity* trick: the memo
+rows formula ``rows(S) = Σ card + Σ sel  (edges ⊆ S)`` is a pure set
+function, so we fold each non-inner edge's output-cardinality rule into its
+stored selectivity (``effective_sels``).  Because ``TES_r`` (and ``TES_l``
+for FULL) is always fully assembled when the edge can fire, the component
+rows terms are constants and the folding is exact for every valid plan:
+
+    LEFT  out = max(join, rows(left))     -> sel' = max(sel, -rows(TES_r))
+    FULL  out = max(join, rows(l), rows(r))
+                                  -> sel' = max(sel, -rows(TES_r), -rows(TES_l))
+    SEMI  out = min(join, rows(left))     -> sel' = min(sel, -rows(TES_r))
+    ANTI  out = rows(left) * keep         -> sel' = -rows(TES_r) + ANTI_KEEP_L2
+
+All-inner graphs never reach this module and keep raw selectivities —
+the byte-identity guarantee of the typed extension.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# per-edge join-kind codes (DeviceGraph packs these as i32)
+KIND_INNER = 0
+KIND_LEFT = 1
+KIND_FULL = 2
+KIND_SEMI = 3
+KIND_ANTI = 4
+KIND_NAMES = ("inner", "left", "full", "semi", "anti")
+KIND_CODES = {name: code for code, name in enumerate(KIND_NAMES)}
+
+# log2 of the assumed surviving fraction of an anti join's preserved side
+ANTI_KEEP_L2 = -1.0
+
+
+def normalize_kind(k) -> int:
+    """Accept a kind name or code; return the code."""
+    if isinstance(k, str):
+        try:
+            return KIND_CODES[k]
+        except KeyError:
+            raise ValueError(f"unknown join kind {k!r} "
+                             f"(expected one of {KIND_NAMES})") from None
+    k = int(k)
+    if not 0 <= k < len(KIND_NAMES):
+        raise ValueError(f"unknown join kind code {k}")
+    return k
+
+
+# ------------------------------------------------------------- host (graph) --
+
+def _reach_excl(start: int, adj: list, u: int, v: int) -> int:
+    """Vertices reachable from ``start`` without traversing edge (u, v)."""
+    seen = 1 << start
+    frontier = [start]
+    while frontier:
+        x = frontier.pop()
+        nb = adj[x]
+        if x == u:
+            nb &= ~(1 << v)
+        elif x == v:
+            nb &= ~(1 << u)
+        new = nb & ~seen
+        while new:
+            b = new & -new
+            new ^= b
+            seen |= b
+            frontier.append(b.bit_length() - 1)
+    return seen
+
+
+def _set_rows_l2(s: int, cards_l2, edges, sels) -> float:
+    """Host rows formula (f64): Σ member cards + Σ inside sels, clamped."""
+    out = 0.0
+    for v in range(len(cards_l2)):
+        if (s >> v) & 1:
+            out += float(cards_l2[v])
+    for i, (u, v) in enumerate(edges):
+        if ((s >> u) & 1) and ((s >> v) & 1):
+            out += float(sels[i])
+    return max(out, 0.0)
+
+
+def analyze(n: int, edges, kinds, ldirs, cards_l2, sels_raw):
+    """Validate a typed graph and derive its conflict/cardinality metadata.
+
+    Returns ``(tes_l, tes_r, eff_sels)``: per-edge TES bitmaps (Python ints,
+    0 for inner edges) and the effective f32 selectivities.  Raises
+    ``ValueError`` when a non-inner edge is not a bridge or when the TES
+    constraints deadlock (no valid join tree exists).
+    """
+    m = len(edges)
+    adj = [0] * n
+    for (u, v) in edges:
+        adj[u] |= 1 << v
+        adj[v] |= 1 << u
+    tes_l = [0] * m
+    tes_r = [0] * m
+    for i, (u, v) in enumerate(edges):
+        k = kinds[i]
+        if k == KIND_INNER:
+            continue
+        l, r = (v, u) if ldirs[i] else (u, v)
+        reach_r = _reach_excl(r, adj, u, v)
+        if (reach_r >> l) & 1:
+            raise ValueError(
+                f"non-inner edge ({u}, {v}) [{KIND_NAMES[k]}] is not a "
+                "bridge: its endpoints stay connected without it, so the "
+                "conservative TES rules cannot order it")
+        tes_r[i] = reach_r
+        tes_l[i] = _reach_excl(l, adj, u, v) if k == KIND_FULL else (1 << l)
+    _check_feasible(edges, kinds, tes_l, tes_r)
+    eff = effective_sels(edges, kinds, tes_l, tes_r, cards_l2, sels_raw)
+    return tuple(tes_l), tuple(tes_r), eff
+
+
+def _check_feasible(edges, kinds, tes_l, tes_r) -> None:
+    """Greedy assembly simulation (Kahn): edge i can fire only after every
+    non-inner edge inside its TES sides has fired; a cycle in that relation
+    means no valid join tree exists."""
+    pend = [i for i in range(len(edges)) if kinds[i] != KIND_INNER]
+    ebit = {i: (1 << edges[i][0]) | (1 << edges[i][1]) for i in pend}
+    done: set[int] = set()
+    while len(done) < len(pend):
+        fired = False
+        for i in pend:
+            if i in done:
+                continue
+            need = tes_r[i] | (tes_l[i] if kinds[i] == KIND_FULL else 0)
+            if all(j in done or (ebit[j] & ~need) or j == i for j in pend):
+                done.add(i)
+                fired = True
+        if not fired:
+            stuck = [edges[i] for i in pend if i not in done]
+            raise ValueError(
+                f"infeasible non-inner join configuration: edges {stuck} "
+                "each require another to fire first (TES deadlock)")
+
+
+def effective_sels(edges, kinds, tes_l, tes_r, cards_l2, sels_raw) -> np.ndarray:
+    """Fold the per-kind output-cardinality rules into the stored f32
+    selectivities (module docstring).  Processed inner-bridge-first (by
+    popcount of the TES union) so component rows always use already-folded
+    values; deterministic for a given graph, so wire receivers recompute
+    bit-identical effective stats."""
+    eff = [float(s) for s in sels_raw]
+    order = sorted((i for i in range(len(edges)) if kinds[i] != KIND_INNER),
+                   key=lambda i: (bin(tes_l[i] | tes_r[i]).count("1"), i))
+    for i in order:
+        k = kinds[i]
+        r_b = _set_rows_l2(tes_r[i], cards_l2, edges, eff)
+        if k == KIND_LEFT:
+            eff[i] = max(eff[i], -r_b)
+        elif k == KIND_SEMI:
+            eff[i] = min(eff[i], -r_b)
+        elif k == KIND_ANTI:
+            eff[i] = -r_b + ANTI_KEEP_L2
+        elif k == KIND_FULL:
+            r_a = _set_rows_l2(tes_l[i], cards_l2, edges, eff)
+            eff[i] = max(eff[i], -r_b, -r_a)
+    return np.minimum(np.asarray(eff, np.float32), np.float32(0.0))
+
+
+# --------------------------------------------------------- host (plan-side) --
+
+def ordered_valid(lb: int, rb: int, g) -> bool:
+    """Is joining ``lb`` (left operand) with ``rb`` (right) admissible under
+    ``g``'s conflict rules?  Inner-only graphs are always valid.  Host twin
+    of the kernel mask ``lane_valid_kinds`` — the brute-force oracle and
+    ``plan.validate_plan`` both route through here."""
+    if not g.typed:
+        return True
+    for i, (u, v) in enumerate(g.edges):
+        k = g.kinds[i]
+        if k == KIND_INNER:
+            continue
+        ub, vb = 1 << u, 1 << v
+        cross = (bool(lb & ub) and bool(rb & vb)) or \
+                (bool(rb & ub) and bool(lb & vb))
+        if not cross:
+            continue
+        tl, tr = g.tes_l[i], g.tes_r[i]
+        if (tl & ~lb) == 0 and (tr & ~rb) == 0:
+            continue
+        if k == KIND_FULL and (tl & ~rb) == 0 and (tr & ~lb) == 0:
+            continue
+        return False
+    return True
+
+
+def crossing_kind(lb: int, rb: int, g) -> int:
+    """Join-kind code of the operator joining ``lb`` and ``rb``: the max
+    kind over crossing edges (at most one crossing edge is non-inner —
+    non-inner edges are bridges)."""
+    if not g.typed:
+        return KIND_INNER
+    k = KIND_INNER
+    for i, (u, v) in enumerate(g.edges):
+        ub, vb = 1 << u, 1 << v
+        if (bool(lb & ub) and bool(rb & vb)) or \
+                (bool(rb & ub) and bool(lb & vb)):
+            k = max(k, g.kinds[i])
+    return k
+
+
+# ------------------------------------------------------------ device (jnp) --
+
+def lane_valid_kinds(lb, rb, ekind, elm, erm, etes_l, etes_r):
+    """Vectorised conflict mask for a chunk of candidate (left, right) lanes.
+
+    ``lb``/``rb`` are ``(chunk,)`` i32 bitmaps; the edge arrays are either
+    ``(emax,)`` (solo engine: one query) or ``(chunk, emax)`` (batched:
+    already gathered per lane by query id).  Returns ``(valid_A, valid_B,
+    lane_kind)``: admissibility of the (lb, rb) and (rb, lb) orientations
+    plus the kind code of the crossing non-inner edge (0 if none).  Padding
+    edges have ``elm = erm = 0`` and never cross.
+    """
+    def e2(a):
+        return a if a.ndim == 2 else a[None, :]
+    ek, lm, rm = e2(ekind), e2(elm), e2(erm)
+    tl, tr = e2(etes_l), e2(etes_r)
+    L = lb[:, None]
+    R = rb[:, None]
+    cross = (((lm & L) != 0) & ((rm & R) != 0)) | \
+            (((lm & R) != 0) & ((rm & L) != 0))
+    lane_kind = jnp.max(jnp.where(cross, ek, 0), axis=1)
+    sub_a = ((tl & ~L) == 0) & ((tr & ~R) == 0)
+    sub_b = ((tl & ~R) == 0) & ((tr & ~L) == 0)
+    is_full = ek == KIND_FULL
+    ok_a = (~cross) | (ek == KIND_INNER) | sub_a | (is_full & sub_b)
+    ok_b = (~cross) | (ek == KIND_INNER) | sub_b | (is_full & sub_a)
+    return jnp.all(ok_a, axis=1), jnp.all(ok_b, axis=1), lane_kind

@@ -54,6 +54,22 @@ def join_cost(rl2_l, rl2_r, rl2_out):
     return jnp.minimum(hj, jnp.minimum(mj, nl))
 
 
+def join_cost_kind(rl2_l, rl2_r, rl2_out, kind):
+    """Kind-aware ``join_cost``: ``rl2_l`` is the LEFT operand (preserved /
+    probe side).  Inner/left/full keep the three-operator minimum (all are
+    symmetric in the operands); semi/anti joins are pinned to the hash plan
+    that builds on the filtering right side and probes the preserved left —
+    the standard execution strategy, and the asymmetry the orientation-aware
+    DP lanes exist to exploit.  ``kind`` is a ``conflicts.KIND_*`` code
+    (scalar or per-lane array; 3 = semi, 4 = anti)."""
+    base = join_cost(rl2_l, rl2_r, rl2_out)
+    rl = rows_from_log2(rl2_l)
+    rr = rows_from_log2(rl2_r)
+    ro = rows_from_log2(rl2_out)
+    hj = C_HASH_BUILD * rr + C_HASH_PROBE * rl + C_TUP * ro
+    return jnp.where(kind >= 3, hj, base)
+
+
 # ------------------------------------------------------------------- numpy --
 
 def np_rows_from_log2(rl2):
@@ -79,6 +95,19 @@ def np_join_cost(rl2_l, rl2_r, rl2_out):
                                                 np.float32(LOG2_CAP)), dtype=np.float32)
           + np.float32(C_TUP) * ro)
     return np.minimum(hj, np.minimum(mj, nl))
+
+
+def np_join_cost_kind(rl2_l, rl2_r, rl2_out, kind):
+    """numpy twin of ``join_cost_kind`` (bit-identical; ``rl2_l`` = left
+    operand).  Kind codes < 3 (inner/left/full) fall through to the
+    symmetric three-operator minimum."""
+    base = np_join_cost(rl2_l, rl2_r, rl2_out)
+    rl = np_rows_from_log2(rl2_l)
+    rr = np_rows_from_log2(rl2_r)
+    ro = np_rows_from_log2(rl2_out)
+    hj = (np.float32(C_HASH_BUILD) * rr + np.float32(C_HASH_PROBE) * rl
+          + np.float32(C_TUP) * ro)
+    return np.where(np.asarray(kind) >= 3, hj, base)
 
 
 # ----------------------------------------------- partition-boundary helper --
@@ -165,6 +194,16 @@ def np_corrected_graph(g, rows_l2: dict):
                 changed = True
     if not changed:
         return g
+    if g.typed:
+        # effective selectivities fold component rows, which depend on the
+        # base cards — rebuild from raw stats so TES folding stays exact
+        fans = None
+        if g.fan_l2 is not None and len(g.fan_l2):
+            fans = [float(f) if np.isfinite(f) else None for f in g.fan_l2]
+        return type(g).from_log2(
+            n=g.n, edges=list(g.edges), cards_l2=new,
+            sels_l2=[float(g.sel_raw(i)) for i in range(g.m)],
+            kinds=g.kinds, ldirs=g.ldirs, fans_l2=fans, names=g.names)
     return dataclasses.replace(g, log2_card=new)
 
 

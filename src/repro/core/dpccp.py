@@ -13,6 +13,7 @@ import time
 import numpy as np
 
 from . import bitset as bs
+from . import conflicts as cf
 from . import cost as cm
 from .plan import Counters, OptimizeResult, Plan, extract_plan
 
@@ -114,10 +115,25 @@ def solve(g) -> OptimizeResult:
             rows_cache[s] = r
         return r
 
+    typed = g.typed
     for (a, b) in pairs:
         s = a | b
         rl2 = rows_l2(s)
         memo_rows[s] = rl2
+        if typed:
+            # typed edges break cost symmetry (semi/anti) and admissibility:
+            # evaluate each order under the conflict rules
+            k = cf.crossing_kind(a, b, g)
+            for (x, y) in ((a, b), (b, a)):
+                if not cf.ordered_valid(x, y, g):
+                    continue
+                jc = cm.np_join_cost_kind(memo_rows[x], memo_rows[y], rl2, k)
+                cand = memo_cost[x] + memo_cost[y] + jc
+                if cand < memo_cost[s] or (cand == memo_cost[s]
+                                           and x > memo_left[s]):
+                    memo_cost[s] = cand
+                    memo_left[s] = x
+            continue
         # evaluate both orders (costs symmetric in our model, counted twice)
         jc = cm.np_join_cost(memo_rows[a], memo_rows[b], rl2)
         cand = memo_cost[a] + memo_cost[b] + jc

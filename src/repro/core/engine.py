@@ -32,6 +32,7 @@ import jax.numpy as jnp
 
 from . import bitset as bs
 from . import blocks as bl
+from . import conflicts as cf
 from . import cost as cm
 from . import faults
 from . import unrank as ur
@@ -116,6 +117,24 @@ def _lane_cost(S_left, S_right, S_rows, memo_cost, memo_rows):
     return cl + cr + jc
 
 
+def _typed_lane_cost(lb, rb, S_rows, ccp, cl, cr, rl, rr,
+                     ekind, elm, erm, etes_l, etes_r):
+    """Typed twin of ``_lane_cost``: evaluates BOTH operand orientations of
+    the (lb, rb) split under the conflict mask and returns the cheaper valid
+    candidate plus its chosen left bitmap (ties prefer lb, the
+    enumeration-order operand).  ``cl``/``cr``/``rl``/``rr`` are the
+    pre-gathered per-lane memo cost/rows of lb/rb (the batch engines gather
+    with their region offsets).  Cost addition order matches ``_lane_cost``
+    (``(cl + cr) + jc``) so the host oracle reproduces every bit."""
+    va, vb, lk = cf.lane_valid_kinds(lb, rb, ekind, elm, erm, etes_l, etes_r)
+    base = cl + cr
+    cand_a = jnp.where(ccp & va, base + cm.join_cost_kind(rl, rr, S_rows, lk),
+                       INF)
+    cand_b = jnp.where(ccp & vb, base + cm.join_cost_kind(rr, rl, S_rows, lk),
+                       INF)
+    return jnp.minimum(cand_a, cand_b), jnp.where(cand_b < cand_a, rb, lb)
+
+
 def _merge_best(best_cost, best_left, base, seg_cost, seg_left):
     """Fold a chunk's per-segment minima into the level's host-side best
     arrays (min cost, ties broken by max left bitmap).  Shared by ExactEngine
@@ -155,10 +174,11 @@ def _prune(seg, cand_cost, cand_left, nseg: int):
     return seg_cost, seg_left
 
 
-@partial(jax.jit, static_argnames=("nmax", "chunk", "nseg"))
+@partial(jax.jit, static_argnames=("nmax", "chunk", "nseg", "typed"))
 def _eval_dpsub_chunk(all_sets, level_off, base_set, base_sub, i, lane_count,
                       adj, memo_cost, memo_rows,
-                      *, nmax: int, chunk: int, nseg: int):
+                      ekind=None, elm=None, erm=None, etes_l=None, etes_r=None,
+                      *, nmax: int, chunk: int, nseg: int, typed: bool = False):
     t = jnp.arange(chunk, dtype=jnp.int32)
     sub_g = base_sub + t
     set_idx = base_set + (sub_g >> i)
@@ -179,16 +199,23 @@ def _eval_dpsub_chunk(all_sets, level_off, base_set, base_sub, i, lane_count,
         cross = (bs.neighbors(lb, adj) & rb) != 0
         ccp = live & nonempty & conn_l & conn_r & cross
     rows_S = memo_rows[S]
-    cand = jnp.where(ccp, _lane_cost(lb, rb, rows_S, memo_cost, memo_rows), INF)
+    if typed:
+        cand, lbx = _typed_lane_cost(
+            lb, rb, rows_S, ccp, memo_cost[lb], memo_cost[rb],
+            memo_rows[lb], memo_rows[rb], ekind, elm, erm, etes_l, etes_r)
+    else:
+        cand = jnp.where(ccp, _lane_cost(lb, rb, rows_S, memo_cost, memo_rows), INF)
+        lbx = lb
     seg = set_idx - base_set
-    seg_cost, seg_left = _prune(seg, cand, lb, nseg)
+    seg_cost, seg_left = _prune(seg, cand, lbx, nseg)
     return seg_cost, seg_left, evaluated.sum(), ccp.sum()
 
 
-@partial(jax.jit, static_argnames=("nmax", "chunk", "nseg"))
+@partial(jax.jit, static_argnames=("nmax", "chunk", "nseg", "typed"))
 def _eval_tree_chunk(all_sets, level_off, base_set, base_e, m, lane_count,
                      adj, emask_u, emask_v, memo_cost, memo_rows,
-                     *, nmax: int, chunk: int, nseg: int):
+                     ekind=None, elm=None, erm=None, etes_l=None, etes_r=None,
+                     *, nmax: int, chunk: int, nseg: int, typed: bool = False):
     t = jnp.arange(chunk, dtype=jnp.int32)
     e_g = base_e + t
     set_idx = base_set + e_g // m
@@ -204,16 +231,25 @@ def _eval_tree_chunk(all_sets, level_off, base_set, base_e, m, lane_count,
     evaluated = edge_in
     ccp = edge_in
     rows_S = memo_rows[S]
-    cand = jnp.where(ccp, _lane_cost(S_left, S_right, rows_S, memo_cost, memo_rows), INF)
+    if typed:
+        cand, lbx = _typed_lane_cost(
+            S_left, S_right, rows_S, ccp, memo_cost[S_left],
+            memo_cost[S_right], memo_rows[S_left], memo_rows[S_right],
+            ekind, elm, erm, etes_l, etes_r)
+    else:
+        cand = jnp.where(ccp, _lane_cost(S_left, S_right, rows_S, memo_cost, memo_rows), INF)
+        lbx = S_left
     seg = set_idx - base_set
-    seg_cost, seg_left = _prune(seg, cand, S_left, nseg)
+    seg_cost, seg_left = _prune(seg, cand, lbx, nseg)
     return seg_cost, seg_left, evaluated.sum(), ccp.sum()
 
 
-@partial(jax.jit, static_argnames=("nmax", "chunk", "pcap"))
+@partial(jax.jit, static_argnames=("nmax", "chunk", "pcap", "typed"))
 def _eval_general_chunk(pair_set, pair_block, off_local, n_pairs, lane_count,
                         adj, memo_cost, memo_rows,
-                        *, nmax: int, chunk: int, pcap: int):
+                        ekind=None, elm=None, erm=None, etes_l=None, etes_r=None,
+                        *, nmax: int, chunk: int, pcap: int,
+                        typed: bool = False):
     t = jnp.arange(chunk, dtype=jnp.int32)
     live = t < lane_count
     p = jnp.searchsorted(off_local, t, side="right").astype(jnp.int32) - 1
@@ -231,9 +267,16 @@ def _eval_general_chunk(pair_set, pair_block, off_local, n_pairs, lane_count,
     S_left = bs.grow(lb, S & ~rb, adj)                     # Alg.3 line 17
     S_right = S & ~S_left
     rows_S = memo_rows[S]
-    cand = jnp.where(ccp_blk, _lane_cost(S_left, S_right, rows_S,
-                                         memo_cost, memo_rows), INF)
-    seg_cost, seg_left = _prune(p, cand, S_left, pcap)
+    if typed:
+        cand, lbx = _typed_lane_cost(
+            S_left, S_right, rows_S, ccp_blk, memo_cost[S_left],
+            memo_cost[S_right], memo_rows[S_left], memo_rows[S_right],
+            ekind, elm, erm, etes_l, etes_r)
+    else:
+        cand = jnp.where(ccp_blk, _lane_cost(S_left, S_right, rows_S,
+                                             memo_cost, memo_rows), INF)
+        lbx = S_left
+    seg_cost, seg_left = _prune(p, cand, lbx, pcap)
     return seg_cost, seg_left, enum_ok.sum(), ccp_blk.sum()
 
 
@@ -299,6 +342,13 @@ class ExactEngine:
         self.eu_idx = jnp.asarray(eu)
         self.ev_idx = jnp.asarray(ev)
         self.edge_live = jnp.asarray(lv)
+        # typed-edge conflict arrays: passed to the eval kernels (with the
+        # typed=True static) only when the query has non-inner edges, so the
+        # inner-only trace stays byte-identical to the pre-typed engine
+        self.typed = g.typed
+        self._targs = ((self.dg.ekind, self.dg.elm, self.dg.erm,
+                        self.dg.etes_l, self.dg.etes_r)
+                       if self.typed else (None,) * 5)
         self.counters = Counters()
         self.timings: dict[str, float] = {}
         self._init_memo()
@@ -447,8 +497,9 @@ class ExactEngine:
                 sc, sl, ev, cc = _eval_dpsub_chunk(
                     self.all_sets, jnp.int32(off), jnp.int32(lane0 >> i),
                     jnp.int32(lane0 & ((1 << i) - 1)), jnp.int32(i), jnp.int32(cnt),
-                    self.dg.adj, self.memo_cost, self.memo_rows,
-                    nmax=self.nmax, chunk=self.chunk, nseg=self.chunk + 1)
+                    self.dg.adj, self.memo_cost, self.memo_rows, *self._targs,
+                    nmax=self.nmax, chunk=self.chunk, nseg=self.chunk + 1,
+                    typed=self.typed)
                 self.counters.evaluated += int(ev)
                 self.counters.ccp += int(cc)
                 _merge_best(best_cost, best_left, lane0 >> i,
@@ -478,8 +529,9 @@ class ExactEngine:
                     self.all_sets, jnp.int32(off), jnp.int32(lane0 // m),
                     jnp.int32(lane0 % m), jnp.int32(m), jnp.int32(cnt),
                     self.dg.adj, self.dg.emask_u, self.dg.emask_v,
-                    self.memo_cost, self.memo_rows,
-                    nmax=self.nmax, chunk=self.chunk, nseg=self.chunk + 1)
+                    self.memo_cost, self.memo_rows, *self._targs,
+                    nmax=self.nmax, chunk=self.chunk, nseg=self.chunk + 1,
+                    typed=self.typed)
                 self.counters.evaluated += int(ev)
                 self.counters.ccp += int(cc)
                 _merge_best(best_cost, best_left, lane0 // m,
@@ -538,8 +590,9 @@ class ExactEngine:
                 sc, sl, ev, cc = _eval_general_chunk(
                     jnp.asarray(psl), jnp.asarray(pbl), jnp.asarray(ofl),
                     jnp.int32(npair), jnp.int32(lane1 - lane0),
-                    self.dg.adj, self.memo_cost, self.memo_rows,
-                    nmax=self.nmax, chunk=self.chunk, pcap=pcap)
+                    self.dg.adj, self.memo_cost, self.memo_rows, *self._targs,
+                    nmax=self.nmax, chunk=self.chunk, pcap=pcap,
+                    typed=self.typed)
                 self.counters.evaluated += int(ev)
                 self.counters.ccp += int(cc)
                 scn = np.asarray(sc)[:npair]
@@ -555,6 +608,10 @@ class ExactEngine:
 
     # ------------------------------------------------------------- DPSIZE --
     def run_dpsize(self) -> None:
+        if self.typed:
+            raise ValueError(
+                "dpsize does not support non-inner join edges (use dpsub / "
+                "mpdp / dpccp — the conflict-masked lane spaces)")
         level_sets: dict[int, np.ndarray] = {1: np.array([1 << v for v in range(self.n)], np.int32)}
         self._arm_deadline()
         for i in range(2, self.n + 1):

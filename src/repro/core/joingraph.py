@@ -1,8 +1,8 @@
 """Host-side join-query representation (paper §2.1).
 
 A query is a graph G(R, E): vertices are the FROM-clause relations, edges the
-inner equi-join predicates.  We carry the statistics the cost model needs
-(base cardinalities, per-edge selectivities) in log2 space.
+join predicates.  We carry the statistics the cost model needs (base
+cardinalities, per-edge selectivities) in log2 space.
 
 Two regimes:
 * ``n <= NMAX_HARD`` — device form (``DeviceGraph``): int32 adjacency bitmaps +
@@ -10,82 +10,166 @@ Two regimes:
 * arbitrary ``n`` (heuristics, up to 1000s of relations) — ``JoinGraph`` keeps
   Python-int bitsets / numpy arrays; heuristics carve <= k sub-queries out of
   it and ship those through ``subgraph()`` to the device kernels.
+
+**Typed edges (beyond-paper).**  Every edge carries a join ``kind`` (inner /
+left / full / semi / anti; ``core.conflicts.KIND_*`` codes) and a left-operand
+direction bit (``ldirs[i] = 1`` means the stored edge's *v* endpoint is the
+preserved/probe side).  Non-inner edges get TES bitmaps and effective
+selectivities from ``core.conflicts`` at construction; invalid configurations
+(non-bridge non-inner edges, TES deadlocks, duplicate predicates on one pair
+with conflicting kinds) raise ``ValueError`` here, never inside a kernel.
+All-inner graphs take the exact pre-typed construction path — same fields,
+empty ``kinds`` — so their stats and plans stay byte-identical.
+
+**Many-to-many stats channel.**  ``make(fanouts=...)`` /
+``from_log2(fans_l2=...)`` attach per-edge join fan-out (|u ⋈ v|, linear /
+log2), replacing the implicit PK-FK assumption: the edge's selectivity is
+derived as ``fan − card_u − card_v`` and the explicit fan round-trips the
+daemon wire codec bit-identically (``fans_l2`` property; NaN = derived).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 import jax.numpy as jnp
 
 from . import bitset as bs
+from . import conflicts as cf
+
+
+def _norm_edges(edges, sels, kinds, ldirs, fans):
+    """Normalize (u, v) -> (min, max) with the direction bit following the
+    swap; dedup same-pair predicates.  Two inner predicates on one pair keep
+    the more selective one (and its fan, if explicit); any duplicate
+    involving a non-inner kind is a hard error — silently keeping one would
+    change query semantics."""
+    norm, seen = [], {}
+    nsel, nkind, nldir, nfan = [], [], [], []
+    for i, (u, v) in enumerate(edges):
+        if u == v:
+            raise ValueError("self-join edge")
+        k = cf.normalize_kind(kinds[i]) if kinds else cf.KIND_INNER
+        d = int(ldirs[i]) if ldirs else 0
+        if k == cf.KIND_INNER:
+            d = 0
+        elif u > v:
+            d ^= 1
+        e = (min(u, v), max(u, v))
+        s = float(sels[i])
+        f = float(fans[i]) if fans is not None and fans[i] is not None \
+            else float("nan")
+        if e in seen:
+            j = seen[e]
+            if k != cf.KIND_INNER or nkind[j] != cf.KIND_INNER:
+                raise ValueError(
+                    f"duplicate predicates on relation pair {e} with join "
+                    f"kinds {cf.KIND_NAMES[nkind[j]]!r} / "
+                    f"{cf.KIND_NAMES[k]!r}: non-inner duplicates cannot be "
+                    "merged")
+            if s < nsel[j]:        # keep the most selective inner predicate
+                nsel[j] = s
+                nfan[j] = f
+            continue
+        seen[e] = len(norm)
+        norm.append(e)
+        nsel.append(s)
+        nkind.append(k)
+        nldir.append(d)
+        nfan.append(f)
+    return norm, nsel, nkind, nldir, nfan
+
+
+def _build(n, norm, nsel, nkind, nldir, nfan, cards_l2, names):
+    """Shared tail of make()/from_log2(): typed analysis + field assembly.
+    ``nsel`` is the raw log2 selectivities (already clamped <= 0)."""
+    if not names:
+        names = tuple(f"R{i}" for i in range(n))
+    sel_raw = np.minimum(np.asarray(nsel, np.float32), np.float32(0.0))
+    fan = np.asarray(nfan, np.float32) if nfan else np.zeros(0, np.float32)
+    explicit = bool(len(fan)) and bool(np.isfinite(fan).any())
+    typed = any(k != cf.KIND_INNER for k in nkind)
+    if typed:
+        tes_l, tes_r, eff = cf.analyze(n, norm, nkind, nldir,
+                                       cards_l2, sel_raw)
+        return JoinGraph(
+            n=n, edges=tuple(norm), log2_card=cards_l2, log2_sel=eff,
+            names=tuple(names), kinds=tuple(nkind), ldirs=tuple(nldir),
+            log2_sel_raw=sel_raw, fan_l2=fan if explicit else None,
+            tes_l=tes_l, tes_r=tes_r)
+    return JoinGraph(
+        n=n, edges=tuple(norm), log2_card=cards_l2, log2_sel=sel_raw,
+        names=tuple(names), fan_l2=fan if explicit else None)
 
 
 @dataclasses.dataclass(frozen=True)
 class JoinGraph:
-    """Immutable join query: n relations, undirected edges with selectivities."""
+    """Immutable join query: n relations, edges with kinds + selectivities."""
 
     n: int
     edges: tuple[tuple[int, int], ...]          # (u, v) with u < v, deduped
     log2_card: np.ndarray                       # f32[n]  log2(base cardinality)
-    log2_sel: np.ndarray                        # f32[m]  log2(selectivity) (<= 0)
+    log2_sel: np.ndarray                        # f32[m]  log2(effective sel) (<= 0)
     names: tuple[str, ...] = ()
+    kinds: tuple[int, ...] = ()                 # per-edge KIND_* (() = all inner)
+    ldirs: tuple[int, ...] = ()                 # 1 -> v is the left operand
+    log2_sel_raw: Optional[np.ndarray] = None   # f32[m] raw sels (typed only)
+    fan_l2: Optional[np.ndarray] = None         # f32[m] explicit fans (NaN = derived)
+    tes_l: tuple[int, ...] = ()                 # per-edge TES bitmaps (typed only)
+    tes_r: tuple[int, ...] = ()
 
     @staticmethod
     def make(n: int,
              edges: Sequence[tuple[int, int]],
              cards: Sequence[float],
              sels: Sequence[float],
-             names: Sequence[str] = ()) -> "JoinGraph":
-        norm, seen, nsel = [], {}, []
-        for (u, v), s in zip(edges, sels):
-            if u == v:
-                raise ValueError("self-join edge")
-            e = (min(u, v), max(u, v))
-            if e in seen:  # keep the most selective predicate
-                nsel[seen[e]] = min(nsel[seen[e]], float(s))
-                continue
-            seen[e] = len(norm)
-            norm.append(e)
-            nsel.append(float(s))
-        if not names:
-            names = tuple(f"R{i}" for i in range(n))
-        return JoinGraph(
-            n=n,
-            edges=tuple(norm),
-            log2_card=np.log2(np.maximum(np.asarray(cards, np.float64), 1.0)).astype(np.float32),
-            log2_sel=np.log2(np.clip(np.asarray(nsel, np.float64), 1e-30, 1.0)).astype(np.float32),
-            names=tuple(names),
-        )
+             names: Sequence[str] = (),
+             kinds: Sequence = (),
+             ldirs: Sequence[int] = (),
+             fanouts: Optional[Sequence] = None) -> "JoinGraph":
+        """Build from linear-space stats.  ``kinds``/``ldirs`` align with
+        ``edges`` (kind names or codes; missing = all inner).  ``fanouts``
+        optionally gives |u ⋈ v| per edge (``None`` entries = PK-FK
+        default); an explicit fan *derives* that edge's selectivity."""
+        cards_l2 = np.log2(np.maximum(np.asarray(cards, np.float64),
+                                      1.0)).astype(np.float32)
+        sels_l2, fans_l2 = [], []
+        for i, s in enumerate(sels):
+            f = None if fanouts is None else fanouts[i]
+            if f is not None:
+                u, v = edges[i]
+                fl2 = np.float32(np.log2(max(float(f), 1.0)))
+                sels_l2.append(np.float32(float(fl2) - float(cards_l2[u])
+                                          - float(cards_l2[v])))
+                fans_l2.append(float(fl2))
+            else:
+                sels_l2.append(np.float32(np.log2(
+                    np.clip(np.float64(s), 1e-30, 1.0))))
+                fans_l2.append(None)
+        norm, nsel, nkind, nldir, nfan = _norm_edges(
+            edges, sels_l2, kinds, ldirs, fans_l2)
+        return _build(n, norm, nsel, nkind, nldir, nfan, cards_l2,
+                      tuple(names))
 
     @staticmethod
     def from_log2(n: int,
                   edges: Sequence[tuple[int, int]],
                   cards_l2: Sequence[float],
                   sels_l2: Sequence[float],
-                  names: Sequence[str] = ()) -> "JoinGraph":
+                  names: Sequence[str] = (),
+                  kinds: Sequence = (),
+                  ldirs: Sequence[int] = (),
+                  fans_l2: Optional[Sequence] = None) -> "JoinGraph":
         """Like make(), but stats already in log2 space (composite/temp-table
-        nodes of IDP2/UnionDP can exceed float64 in linear space)."""
-        norm, seen, nsel = [], {}, []
-        for (u, v), s in zip(edges, sels_l2):
-            if u == v:
-                raise ValueError("self-join edge")
-            e = (min(u, v), max(u, v))
-            if e in seen:
-                nsel[seen[e]] = min(nsel[seen[e]], float(s))
-                continue
-            seen[e] = len(norm)
-            norm.append(e)
-            nsel.append(float(s))
-        if not names:
-            names = tuple(f"R{i}" for i in range(n))
-        return JoinGraph(
-            n=n, edges=tuple(norm),
-            log2_card=np.maximum(np.asarray(cards_l2, np.float32), 0.0),
-            log2_sel=np.minimum(np.asarray(nsel, np.float32), 0.0),
-            names=tuple(names),
-        )
+        nodes of IDP2/UnionDP can exceed float64 in linear space).
+        ``sels_l2`` stays authoritative; ``fans_l2`` entries are carried as
+        explicit fan stats (wire round-trip), never re-derived."""
+        fans = list(fans_l2) if fans_l2 is not None else None
+        norm, nsel, nkind, nldir, nfan = _norm_edges(
+            edges, sels_l2, kinds, ldirs, fans)
+        cl2 = np.maximum(np.asarray(cards_l2, np.float32), 0.0)
+        return _build(n, norm, nsel, nkind, nldir, nfan, cl2, tuple(names))
 
     @property
     def m(self) -> int:
@@ -94,6 +178,40 @@ class JoinGraph:
     @property
     def full_set(self) -> int:
         return (1 << self.n) - 1
+
+    @property
+    def typed(self) -> bool:
+        """True when any edge is non-inner (conflict rules apply)."""
+        return bool(self.kinds) and any(k != cf.KIND_INNER for k in self.kinds)
+
+    def kind(self, i: int) -> int:
+        return self.kinds[i] if self.kinds else cf.KIND_INNER
+
+    def left_op(self, i: int) -> int:
+        """Left-operand (preserved/probe side) vertex of edge ``i``."""
+        u, v = self.edges[i]
+        return v if (self.ldirs and self.ldirs[i]) else u
+
+    def sel_raw(self, i: int) -> np.float32:
+        """Raw (pre-conflict-folding) log2 selectivity of edge ``i``."""
+        if self.log2_sel_raw is not None:
+            return np.float32(self.log2_sel_raw[i])
+        return np.float32(self.log2_sel[i])
+
+    @property
+    def fans_l2(self) -> np.ndarray:
+        """Per-edge log2 join fan-out: explicit where given, else derived
+        from the PK-FK identity ``fan = card_u + card_v + sel_raw``."""
+        raw = (self.log2_sel_raw if self.log2_sel_raw is not None
+               else self.log2_sel)
+        der = np.array(
+            [np.float32(float(self.log2_card[u]) + float(self.log2_card[v])
+                        + float(raw[i]))
+             for i, (u, v) in enumerate(self.edges)], np.float32)
+        if self.fan_l2 is None or not len(self.fan_l2):
+            return der
+        return np.where(np.isfinite(self.fan_l2), self.fan_l2,
+                        der).astype(np.float32)
 
     def adjacency(self) -> list:
         """Python-int bitmaps (arbitrary precision — heuristics reach 1000s
@@ -117,9 +235,30 @@ class JoinGraph:
 
     # -- subproblem extraction (heuristics -> device kernels) ---------------
     def subgraph(self, rel_ids: Sequence[int]) -> tuple["JoinGraph", list[int]]:
-        """Induced subgraph on ``rel_ids``; returns (graph, local->global map)."""
+        """Induced subgraph on ``rel_ids``; returns (graph, local->global map).
+        Typed edges keep their kind/direction/raw stats; TES and effective
+        selectivities are re-derived on the induced graph."""
         rel_ids = list(rel_ids)
         gmap = {g: l for l, g in enumerate(rel_ids)}
+        if self.typed:
+            sub_edges, sub_sels, sub_kinds, sub_ldirs, sub_fans = \
+                [], [], [], [], []
+            for i, (u, v) in enumerate(self.edges):
+                if u in gmap and v in gmap:
+                    sub_edges.append((gmap[u], gmap[v]))
+                    sub_sels.append(float(self.sel_raw(i)))
+                    sub_kinds.append(self.kinds[i])
+                    sub_ldirs.append(self.ldirs[i])
+                    sub_fans.append(
+                        float(self.fan_l2[i]) if self.fan_l2 is not None
+                        and np.isfinite(self.fan_l2[i]) else None)
+            g = JoinGraph.from_log2(
+                n=len(rel_ids), edges=sub_edges,
+                cards_l2=[float(self.log2_card[r]) for r in rel_ids],
+                sels_l2=sub_sels, kinds=sub_kinds, ldirs=sub_ldirs,
+                fans_l2=sub_fans,
+                names=[self.names[r] for r in rel_ids])
+            return g, rel_ids
         sub_edges, sub_sels = [], []
         for (u, v), s in zip(self.edges, self.log2_sel):
             if u in gmap and v in gmap:
@@ -146,8 +285,14 @@ class DeviceGraph:
     adj: jnp.ndarray         # i32[nmax]    adjacency bitmaps
     emask_u: jnp.ndarray     # i32[emax]    1 << u  (0 pad)
     emask_v: jnp.ndarray     # i32[emax]    1 << v  (0 pad)
-    esel_l2: jnp.ndarray     # f32[emax]    log2 selectivity (0 pad)
+    esel_l2: jnp.ndarray     # f32[emax]    log2 effective selectivity (0 pad)
     card_l2: jnp.ndarray     # f32[nmax]    log2 base cardinality (0 pad)
+    typed: bool = False      # any non-inner edge?
+    ekind: jnp.ndarray = None    # i32[emax]  KIND_* code (0 pad = inner)
+    elm: jnp.ndarray = None      # i32[emax]  1 << left-operand vertex (0 pad)
+    erm: jnp.ndarray = None      # i32[emax]  1 << right-operand vertex (0 pad)
+    etes_l: jnp.ndarray = None   # i32[emax]  TES bitmap, left side (0 pad)
+    etes_r: jnp.ndarray = None   # i32[emax]  TES bitmap, right side (0 pad)
 
     @staticmethod
     def from_graph(g: JoinGraph) -> "DeviceGraph":
@@ -166,8 +311,34 @@ class DeviceGraph:
             es[i] = g.log2_sel[i]
         cl = np.zeros(nmax, np.float32)
         cl[: g.n] = g.log2_card
+        typed = g.typed
+        ekind, elm, erm, etl, etr = typed_edge_arrays(g, emax)
         return DeviceGraph(
             n=g.n, m=g.m, nmax=nmax, emax=emax,
             adj=jnp.asarray(adj), emask_u=jnp.asarray(eu), emask_v=jnp.asarray(ev),
             esel_l2=jnp.asarray(es), card_l2=jnp.asarray(cl),
+            typed=typed, ekind=jnp.asarray(ekind), elm=jnp.asarray(elm),
+            erm=jnp.asarray(erm), etes_l=jnp.asarray(etl),
+            etes_r=jnp.asarray(etr),
         )
+
+
+def typed_edge_arrays(g: JoinGraph, emax: int):
+    """Padded i32[emax] conflict arrays (kind, operand masks, TES bitmaps)
+    for the kernels' typed validity mask; all-zero for inner-only graphs
+    (inner pad edges never constrain a lane)."""
+    ekind = np.zeros(emax, np.int32)
+    elm = np.zeros(emax, np.int32)
+    erm = np.zeros(emax, np.int32)
+    etl = np.zeros(emax, np.int32)
+    etr = np.zeros(emax, np.int32)
+    if g.typed:
+        for i, (u, v) in enumerate(g.edges):
+            l = g.left_op(i)
+            r = v if l == u else u
+            ekind[i] = g.kinds[i]
+            elm[i] = 1 << l
+            erm[i] = 1 << r
+            etl[i] = g.tes_l[i]
+            etr[i] = g.tes_r[i]
+    return ekind, elm, erm, etl, etr

@@ -76,7 +76,7 @@ from .config import UNSET, OptimizerConfig, resolve_config
 from .engine import (CHUNK, CYC_CAP_DEFAULT, INF, _cap, _merge_best,
                      _merge_scattered, _use_pallas, _use_pipeline)
 from .exec_cache import EXEC
-from .joingraph import JoinGraph
+from .joingraph import JoinGraph, typed_edge_arrays
 from .plan import Counters, OptimizeResult, extract_plan
 from .shard import (BATCH_AXIS, _exec_key, _set_drop, _sharded, batch_mesh,
                     mesh_size)
@@ -153,6 +153,14 @@ class LatticeShardedEngine(_LevelLoop):
             adj[0, v] |= 1 << u
         self.adj_b = self._put(np.broadcast_to(adj, (D, 1, nmax)))
         self.emax = max(8, int(np.ceil(max(g.m, 1) / 8.0)) * 8)
+        # typed-join edge metadata, replicated (D, 1, emax) like emu/emv
+        self.typed = g.typed
+        if self.typed:
+            self._targs = tuple(
+                self._put(np.broadcast_to(a, (D, 1, self.emax)))
+                for a in typed_edge_arrays(g, self.emax))
+        else:
+            self._targs = ()
         if algorithm == "mpdp_tree":
             emu = np.zeros((1, self.emax), np.int32)
             emv = np.zeros((1, self.emax), np.int32)
@@ -353,11 +361,11 @@ class LatticeShardedEngine(_LevelLoop):
         if self.algorithm == "mpdp_tree":
             kernel = self._kernel(_beval_tree_chunk, nmax=self.nmax,
                                   chunk=self.chunk, nseg=nseg, bcap=1,
-                                  pallas=self.pallas)
+                                  pallas=self.pallas, typed=self.typed)
         else:
             kernel = self._kernel(_beval_dpsub_chunk, nmax=self.nmax,
                                   chunk=self.chunk, nseg=nseg, bcap=1,
-                                  pallas=self.pallas)
+                                  pallas=self.pallas, typed=self.typed)
         loff_d = jnp.asarray(
             np.full((D, 1), self._level_off[i], np.int32))
         soff_d = jnp.asarray(np.zeros((D, 1), np.int32))
@@ -376,11 +384,12 @@ class LatticeShardedEngine(_LevelLoop):
             if self.algorithm == "mpdp_tree":
                 out = kernel(self.all_sets, jnp.asarray(epad), loff_d, soff_d,
                              seg0_d, self.m_b, self.adj_b, self.emu_b,
-                             self.emv_b, self.memo_cost, self.memo_rows)
+                             self.emv_b, self.memo_cost, self.memo_rows,
+                             *self._targs)
             else:
                 out = kernel(self.all_sets, jnp.asarray(epad), loff_d, soff_d,
                              seg0_d, i_arr, self.adj_b, self.memo_cost,
-                             self.memo_rows)
+                             self.memo_rows, *self._targs)
             ctx["pend"].append((c0, seg0, out))
             faults.fire("chunk")
             self.chunks_dispatched += 1
@@ -478,13 +487,13 @@ class LatticeShardedEngine(_LevelLoop):
             ofl = np.clip(ofl, -_CLIP, _CLIP).astype(np.int32)
             kernel = self._kernel(_beval_general_chunk, nmax=self.nmax,
                                   chunk=self.chunk, pcap=pcap, bcap=1,
-                                  pallas=self.pallas)
+                                  pallas=self.pallas, typed=self.typed)
             out = kernel(
                 jnp.asarray(psl), jnp.asarray(pbl), jnp.asarray(pql),
                 jnp.asarray(ofl),
                 jnp.asarray(np.maximum(npairs, 1).astype(np.int32)),
                 jnp.asarray(lane_cnt), self.adj_b, self.memo_cost,
-                self.memo_rows)
+                self.memo_rows, *self._targs)
             ctx["pend"].append((p0s, npairs, out))
             faults.fire("chunk")
             self.chunks_dispatched += 1

@@ -7,6 +7,7 @@ from typing import Optional
 import numpy as np
 
 from . import bitset as bs
+from . import conflicts as cf
 from . import cost as cm
 
 
@@ -85,11 +86,19 @@ def leaf_plan(v: int, g) -> Plan:
 
 
 def join_plans(l: Plan, r: Plan, g) -> Plan:
-    """Host-side join of two plans under the shared cost model."""
+    """Host-side join of two plans under the shared cost model.  ``l`` is
+    the LEFT operand: on typed graphs the crossing edge's kind selects the
+    kind-aware cost (semi/anti are orientation-asymmetric)."""
     s = l.rel_set | r.rel_set
     rl2 = float(cm.np_rows_log2(s, g))
-    jc = float(cm.np_join_cost(np.float32(l.rows_log2), np.float32(r.rows_log2),
-                               np.float32(rl2)))
+    if g.typed:
+        k = cf.crossing_kind(l.rel_set, r.rel_set, g)
+        jc = float(cm.np_join_cost_kind(
+            np.float32(l.rows_log2), np.float32(r.rows_log2),
+            np.float32(rl2), k))
+    else:
+        jc = float(cm.np_join_cost(np.float32(l.rows_log2), np.float32(r.rows_log2),
+                                   np.float32(rl2)))
     return Plan(rel_set=s, cost=l.cost + r.cost + jc, rows_log2=rl2, left=l, right=r)
 
 
@@ -103,7 +112,9 @@ def cost_plan(p: Plan, g) -> Plan:
 def validate_plan(p: Plan, g, require_ccp: bool = True) -> None:
     """Assert structural validity: covers each relation once; every join is a
     CCP-Pair (both sides connected, disjoint, cross edge exists) unless
-    ``require_ccp`` is False (cross-product-tolerant heuristics)."""
+    ``require_ccp`` is False (cross-product-tolerant heuristics).  On typed
+    graphs every join's (left, right) orientation must additionally satisfy
+    the conflict rules (``conflicts.ordered_valid``)."""
     adj = g.adjacency()
 
     def rec(node: Plan) -> int:
@@ -118,6 +129,8 @@ def validate_plan(p: Plan, g, require_ccp: bool = True) -> None:
             assert bs.np_is_connected(ls, adj), f"left side {ls:#x} disconnected"
             assert bs.np_is_connected(rs, adj), f"right side {rs:#x} disconnected"
             assert bs.np_neighbors(ls, adj) & rs, "no edge between join sides"
+        assert cf.ordered_valid(ls, rs, g), \
+            f"join ({ls:#x}, {rs:#x}) violates the conflict rules"
         return node.rel_set
 
     covered = rec(p)

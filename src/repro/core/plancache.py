@@ -67,15 +67,27 @@ def canonical_signature(g) -> tuple[tuple, list[int]]:
 
     The key is a hashable tuple fully describing the query up to relabeling:
     ``(n, canonical edges, quantized cards in canonical order, quantized sels
-    in canonical edge order)``.
+    in canonical edge order)``.  Typed graphs append per-edge
+    ``(kind, canonical left-operand endpoint)`` rows — two queries share a
+    key only if their join kinds and operand orientations also match after
+    relabeling; inner-only keys are byte-identical to the pre-typed format,
+    so persisted caches stay valid.
     """
     n = g.n
+    typed = g.typed
     qcard = [_quantize(g.log2_card[v]) for v in range(n)]
     qsel = [_quantize(s) for s in g.log2_sel]
-    nbrs: list[list[tuple[int, int]]] = [[] for _ in range(n)]
+    nbrs: list[list[tuple]] = [[] for _ in range(n)]
     for ei, (u, v) in enumerate(g.edges):
-        nbrs[u].append((qsel[ei], v))
-        nbrs[v].append((qsel[ei], u))
+        if typed:
+            # role bit separates the preserved/probe endpoint so automorphic-
+            # modulo-direction vertices refine apart (inner tags stay 2-tuple)
+            lo = g.left_op(ei)
+            nbrs[u].append((qsel[ei], g.kinds[ei], int(lo == u), v))
+            nbrs[v].append((qsel[ei], g.kinds[ei], int(lo == v), u))
+        else:
+            nbrs[u].append((qsel[ei], v))
+            nbrs[v].append((qsel[ei], u))
 
     # WL refinement: vertex invariant <- hash(own stats, sorted multiset of
     # (edge stat, neighbour invariant)).  Stats-seeded, so generic queries
@@ -84,7 +96,8 @@ def canonical_signature(g) -> tuple[tuple, list[int]]:
     inv = [_stable_hash(("card", c)) for c in qcard]
     for _ in range(_REFINE_ROUNDS):
         inv = [_stable_hash(
-                   (inv[v], tuple(sorted((s, inv[u]) for s, u in nbrs[v]))))
+                   (inv[v],
+                    tuple(sorted(t[:-1] + (inv[t[-1]],) for t in nbrs[v]))))
                for v in range(n)]
 
     order = sorted(range(n), key=lambda v: (inv[v], v))
@@ -93,12 +106,15 @@ def canonical_signature(g) -> tuple[tuple, list[int]]:
         perm[orig] = canon
 
     edge_rows = sorted(
-        ((min(perm[u], perm[v]), max(perm[u], perm[v])), qsel[ei])
+        ((min(perm[u], perm[v]), max(perm[u], perm[v])), qsel[ei],
+         (g.kinds[ei], perm[g.left_op(ei)]) if typed else ())
         for ei, (u, v) in enumerate(g.edges))
     key = (n,
-           tuple(e for e, _ in edge_rows),
+           tuple(e for e, _, _ in edge_rows),
            tuple(qcard[orig] for orig in order),
-           tuple(s for _, s in edge_rows))
+           tuple(s for _, s, _ in edge_rows))
+    if typed:
+        key = key + (tuple(t for _, _, t in edge_rows),)
     return key, perm
 
 

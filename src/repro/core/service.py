@@ -166,7 +166,7 @@ class StreamOptimizer:
             step *= _shard.mesh_size(self.mesh)
             latt, solo = lattice_pending(graphs, solo, self.algorithm)
         flights = [FlightReport(b, space, idxs_b[s0: s0 + step])
-                   for (b, space), idxs_b in sorted(buckets.items())
+                   for (b, space, _typed), idxs_b in sorted(buckets.items())
                    for s0 in range(0, len(idxs_b), step)]
         if latt:
             from .lattice import lattice_bucket

@@ -84,7 +84,7 @@ from .batch import (NMAX_BATCH, PEND_WINDOW, _CLIP, _LevelLoop, _bcap,
 from .engine import (CHUNK, CYC_CAP_DEFAULT, INF, _cap, _merge_best,
                      _merge_scattered, _use_pallas, _use_pipeline)
 from .exec_cache import EXEC
-from .joingraph import JoinGraph
+from .joingraph import JoinGraph, typed_edge_arrays
 from .plan import Counters, OptimizeResult, extract_plan
 
 BATCH_AXIS = "batch"
@@ -284,6 +284,19 @@ class ShardedBatchEngine(_LevelLoop):
         self.emu_b = self._put(emu)
         self.emv_b = self._put(emv)
         self.m_b = self._put(m_np)
+        # typed-join edge metadata, stacked (D, bcap, emax) like emu/emv;
+        # pad graphs are inner-only so their rows stay all-zero (mask-true)
+        self.typed = any(g.typed for g in self.graphs)
+        if self.typed:
+            tarr = [np.zeros((D, bcap, self.emax), np.int32)
+                    for _ in range(5)]
+            for d, sh in enumerate(self.shard_graphs):
+                for q, g in enumerate(sh):
+                    for a, col in zip(tarr, typed_edge_arrays(g, self.emax)):
+                        a[d, q] = col
+            self._targs = tuple(self._put(a) for a in tarr)
+        else:
+            self._targs = ()
         if algorithm == "mpdp_general":
             # phase A runs per (shard, query) on the host driver every
             # level — build its per-query device rows once, not per level
@@ -530,11 +543,11 @@ class ShardedBatchEngine(_LevelLoop):
         if self.algorithm == "mpdp_tree":
             kernel = self._kernel(_beval_tree_chunk, nmax=self.nmax,
                                   chunk=self.chunk, nseg=nseg, bcap=bcap,
-                                  pallas=self.pallas)
+                                  pallas=self.pallas, typed=self.typed)
         else:
             kernel = self._kernel(_beval_dpsub_chunk, nmax=self.nmax,
                                   chunk=self.chunk, nseg=nseg, bcap=bcap,
-                                  pallas=self.pallas)
+                                  pallas=self.pallas, typed=self.typed)
         i_arr = jnp.asarray(np.full(D, i, np.int32))
         ctx = {"pend": deque(), "totals": totals,
                "best_cost": [np.full(int(soff[d, -1]), INF, np.float32)
@@ -557,11 +570,12 @@ class ShardedBatchEngine(_LevelLoop):
                 out = kernel(
                     self.all_sets, jnp.asarray(epad), loff_d, soff_d, seg0_d,
                     self.m_b, self.adj_b, self.emu_b, self.emv_b,
-                    self.memo_cost, self.memo_rows)
+                    self.memo_cost, self.memo_rows, *self._targs)
             else:
                 out = kernel(
                     self.all_sets, jnp.asarray(epad), loff_d, soff_d, seg0_d,
-                    i_arr, self.adj_b, self.memo_cost, self.memo_rows)
+                    i_arr, self.adj_b, self.memo_cost, self.memo_rows,
+                    *self._targs)
             ctx["pend"].append((lane0, seg0, out))
             faults.fire("chunk")
             self.chunks_dispatched += 1
@@ -677,13 +691,13 @@ class ShardedBatchEngine(_LevelLoop):
             ofl = np.clip(ofl, -_CLIP, _CLIP).astype(np.int32)
             kernel = self._kernel(_beval_general_chunk, nmax=self.nmax,
                                   chunk=self.chunk, pcap=pcap, bcap=self.bcap,
-                                  pallas=self.pallas)
+                                  pallas=self.pallas, typed=self.typed)
             out = kernel(
                 jnp.asarray(psl), jnp.asarray(pbl), jnp.asarray(pql),
                 jnp.asarray(ofl),
                 jnp.asarray(np.maximum(npairs, 1).astype(np.int32)),
                 jnp.asarray(lane_cnt), self.adj_b, self.memo_cost,
-                self.memo_rows)
+                self.memo_rows, *self._targs)
             ctx["pend"].append((p0s, npairs, out))
             faults.fire("chunk")
             self.chunks_dispatched += 1

@@ -35,6 +35,7 @@ stays usable).
 from __future__ import annotations
 
 import json
+import math
 import socket
 import struct
 
@@ -114,12 +115,25 @@ def graph_to_wire(g) -> dict:
     """``JoinGraph`` -> pure literals.  Stats ship in log2 space (the
     internal representation): float(np.float32) widens exactly and JSON's
     shortest-repr floats round-trip f64 exactly, so ``graph_from_wire``
-    rebuilds a bit-identical graph."""
-    return {"n": g.n,
-            "edges": [[u, v] for (u, v) in g.edges],
-            "cards_l2": [float(c) for c in g.log2_card],
-            "sels_l2": [float(s) for s in g.log2_sel],
-            "names": list(g.names)}
+    rebuilds a bit-identical graph.  Typed graphs ship the *raw* per-edge
+    selectivities plus ``kinds``/``ldirs`` (effective selectivities are a
+    pure f32 function of those and re-derive bit-identically on receive);
+    explicit m:n fan-outs ship as ``fans_l2`` (``None`` = derived).  All
+    three keys are omitted for plain inner queries, so their wire dicts —
+    and every pre-typed client/server pairing — are unchanged."""
+    d = {"n": g.n,
+         "edges": [[u, v] for (u, v) in g.edges],
+         "cards_l2": [float(c) for c in g.log2_card],
+         "sels_l2": [float(s) for s in (g.log2_sel_raw if g.typed
+                                        else g.log2_sel)],
+         "names": list(g.names)}
+    if g.typed:
+        d["kinds"] = list(g.kinds)
+        d["ldirs"] = list(g.ldirs)
+    if g.fan_l2 is not None and len(g.fan_l2):
+        d["fans_l2"] = [float(f) if math.isfinite(float(f)) else None
+                        for f in g.fan_l2]
+    return d
 
 
 def graph_from_wire(d: dict):
@@ -129,7 +143,10 @@ def graph_from_wire(d: dict):
         edges=[(int(u), int(v)) for u, v in d["edges"]],
         cards_l2=d["cards_l2"],
         sels_l2=d["sels_l2"],
-        names=tuple(d["names"]))
+        names=tuple(d["names"]),
+        kinds=[int(k) for k in d.get("kinds", [])],
+        ldirs=[int(x) for x in d.get("ldirs", [])],
+        fans_l2=d.get("fans_l2"))
 
 
 # =========================================================== result codec ==

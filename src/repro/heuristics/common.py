@@ -19,6 +19,7 @@ from typing import Callable, Optional
 import numpy as np
 
 from ..core import bitset as bs
+from ..core import conflicts as cf
 from ..core import cost as cm
 from ..core.joingraph import JoinGraph
 from ..core.plan import Plan, cost_plan, join_plans, leaf_plan
@@ -154,6 +155,89 @@ def expand_unit_plan(p: Plan, units: list[Unit], g: JoinGraph) -> Plan:
         return join_plans(l, r, g)
 
     return cost_plan(rec(p), g)
+
+
+def _inner_component_plan(g: JoinGraph, vset: int, inner_solve) -> Plan:
+    """Solve one inner-only component of a typed graph with the heuristic's
+    own machinery (``inner_solve`` maps an inner JoinGraph to a Plan over its
+    local ids) and expand back to base-relation vocabulary."""
+    verts = list(bs.iter_bits(vset))
+    if len(verts) == 1:
+        return leaf_plan(verts[0], g)
+    lmap = {v: l for l, v in enumerate(verts)}
+    ed, sl = [], []
+    for (a, b), s in zip(g.edges, g.log2_sel):
+        if a in lmap and b in lmap:
+            ed.append((lmap[a], lmap[b]))
+            sl.append(float(s))
+    jg = JoinGraph.from_log2(
+        n=len(verts), edges=ed,
+        cards_l2=[float(g.log2_card[v]) for v in verts],
+        sels_l2=sl,
+        names=tuple(g.names[v] for v in verts))
+    units = [Unit(rel_set=1 << v, rows_log2=float(g.log2_card[v]),
+                  plan=leaf_plan(v, g)) for v in verts]
+    return expand_unit_plan(inner_solve(jg), units, g)
+
+
+def solve_typed(g: JoinGraph, inner_solve: Callable) -> Plan:
+    """Typed-join decomposition shared by the heuristics (GOO/IDP2/UnionDP).
+
+    Non-inner edges are bridges (``conflicts.analyze`` rejects anything
+    else), so cutting them splits the query into inner-only components where
+    all the reordering freedom lives.  The conservative TES rule admits
+    exactly one shape across each bridge: the whole non-preserved side as
+    the RIGHT operand and any superset of the preserved endpoint as the
+    LEFT (either orientation for FULL, and a complete side is valid there
+    too).  Recursing on the two sides of each bridge and stitching with
+    ``join_plans`` — preserved side left — therefore yields a conflict-valid
+    tree *by construction*; the inner components go through ``inner_solve``
+    (the heuristic's normal path, including its batched exact subcalls).
+    The result is re-costed canonically on the base typed graph, so plan
+    quality stays comparable across techniques."""
+
+    def reach(start: int, ei: int, vset: int) -> int:
+        seen = 1 << start
+        frontier = [start]
+        while frontier:
+            x = frontier.pop()
+            for j, (a, b) in enumerate(g.edges):
+                if j == ei or not ((vset >> a) & 1 and (vset >> b) & 1):
+                    continue
+                y = b if a == x else (a if b == x else -1)
+                if y >= 0 and not (seen >> y) & 1:
+                    seen |= 1 << y
+                    frontier.append(y)
+        return seen
+
+    def need(i: int) -> int:
+        # vertices that must be fully assembled before edge i fires
+        # (its right TES; both sides for FULL) — _check_feasible's relation
+        return g.tes_r[i] | (g.tes_l[i] if g.kind(i) == cf.KIND_FULL else 0)
+
+    def rec(vset: int) -> Plan:
+        cand = [i for i, (a, b) in enumerate(g.edges)
+                if (vset >> a) & 1 and (vset >> b) & 1
+                and g.kind(i) != cf.KIND_INNER]
+        if not cand:
+            return _inner_component_plan(g, vset, inner_solve)
+        # topmost join = the LAST edge in the Kahn firing order: its TES
+        # lies inside vset and no other pending edge's need contains it
+        # (an edge inside need(j) must fire before j, so it cannot be top).
+        # analyze()'s feasibility check guarantees a maximal edge exists.
+        ni = next(
+            i for i in cand
+            if need(i) & ~vset == 0
+            and not any(j != i and (need(j) >> a) & 1 and (need(j) >> b) & 1
+                        for j in cand
+                        for a, b in [g.edges[i]]))
+        l = g.left_op(ni)
+        a, b = g.edges[ni]
+        r = b if l == a else a
+        rset = reach(r, ni, vset)
+        return join_plans(rec(vset & ~rset), rec(rset), g)
+
+    return cost_plan(rec(g.full_set), g)
 
 
 def exact_subsolver(algorithm: str = "mpdp") -> Callable:

@@ -40,6 +40,14 @@ def goo_plan(ug: UnitGraph):
 
 def solve(g: JoinGraph) -> OptimizeResult:
     t0 = time.perf_counter()
+    if g.typed:
+        # non-inner bridges pin the join shape across components; GOO orders
+        # the inner components, the shared decomposition stitches validly
+        from .common import solve_typed
+        p = solve_typed(g, lambda jg: solve(jg).plan)
+        return OptimizeResult(plan=p, cost=p.cost, counters=Counters(),
+                              algorithm="goo",
+                              wall_s=time.perf_counter() - t0)
     ug = UnitGraph(g)
     u = goo_plan(ug)
     p = cost_plan(u.plan, g)

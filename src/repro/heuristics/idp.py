@@ -331,6 +331,23 @@ def solve(g: JoinGraph, k: int = 15, subsolver: str = "mpdp",
           pipeline: bool | None = None, policy=None) -> OptimizeResult:
     t0 = time.perf_counter()
     counters = Counters()
+    if g.typed:
+        # decompose at non-inner bridges; each inner component runs the full
+        # IDP2 machinery (GOO seed + batched exact rounds) independently
+        from .common import solve_typed
+
+        def inner(jg):
+            r = solve(jg, k=k, subsolver=subsolver, max_rounds=max_rounds,
+                      batch=batch, devices=devices, mesh=mesh,
+                      pipeline=pipeline, policy=policy)
+            counters.evaluated += r.counters.evaluated
+            counters.ccp += r.counters.ccp
+            return r.plan
+
+        p = solve_typed(g, inner)
+        return OptimizeResult(plan=p, cost=p.cost, counters=counters,
+                              algorithm=f"idp2_{subsolver}",
+                              wall_s=time.perf_counter() - t0)
     if subsolver == "lindp":
         from . import lindp as _l
 

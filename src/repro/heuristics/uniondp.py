@@ -236,6 +236,26 @@ def solve(g: JoinGraph, k: int = 15, subsolver: str = "mpdp",
           pipeline: bool | None = None, policy=None) -> OptimizeResult:
     t0 = time.perf_counter()
     counters = Counters()
+    if g.typed:
+        # decompose at non-inner bridges: partitioning + re-optimization run
+        # per inner component (reordering across a bridge is inadmissible
+        # anyway), the shared stitch joins components conflict-validly
+        from .common import solve_typed
+
+        def inner(jg):
+            r = solve(jg, k=k, subsolver=subsolver, goo_floor=goo_floor,
+                      partition=partition, reopt_rounds=reopt_rounds,
+                      reopt_batch=reopt_batch, devices=devices, mesh=mesh,
+                      pipeline=pipeline, policy=policy)
+            counters.evaluated += r.counters.evaluated
+            counters.ccp += r.counters.ccp
+            return r.plan
+
+        p = solve_typed(g, inner)
+        return OptimizeResult(plan=p, cost=p.cost, counters=counters,
+                              algorithm=f"uniondp_{subsolver}",
+                              info={"partitions": [], "round_costs": [p.cost]},
+                              wall_s=time.perf_counter() - t0)
     from ..core import engine as _e
     if policy is not None:
         # learned re-optimization budget: one past the EMA of passes that

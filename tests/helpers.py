@@ -77,3 +77,76 @@ def rand_graph(n, extra=0, seed=0):
     cards = [r.uniform(10, 1e6) for _ in range(n)]
     sels = [10 ** r.uniform(-6, -0.5) for _ in edges]
     return JoinGraph.make(n, edges, cards, sels)
+
+
+def rand_typed(n, seed, tree=False):
+    """Random typed graph: random spanning tree (+ optional extra edges),
+    random non-inner kinds on up to 3 bridges with *random* orientations,
+    ~30% m:n fan-outs on inner edges.  Returns ``None`` when the drawn
+    orientation set is infeasible (``conflicts.analyze`` deadlock) — callers
+    sweep seeds and keep the feasible draws, so the suite also exercises
+    arbitrary (non-root-nested) orientations the workload generator's
+    always-feasible rule never produces."""
+    rng = random.Random(seed)
+    edges = [(rng.randrange(v), v) for v in range(1, n)]
+    if not tree:
+        extra = rng.randrange(0, max(1, n - 2))
+        tried = 0
+        norm = {(min(a, b), max(a, b)) for a, b in edges}
+        while extra and tried < 20:
+            tried += 1
+            u, v = rng.randrange(n), rng.randrange(n)
+            if u != v and (min(u, v), max(u, v)) not in norm:
+                edges.append((u, v))
+                norm.add((min(u, v), max(u, v)))
+                extra -= 1
+    cards = [rng.uniform(10, 1e6) for _ in range(n)]
+    sels = [10 ** rng.uniform(-6, 0) for _ in edges]
+
+    def is_bridge(i):
+        adj = [0] * n
+        for j, (u, v) in enumerate(edges):
+            if j != i:
+                adj[u] |= 1 << v
+                adj[v] |= 1 << u
+        seen, fr = 1, [0]
+        while fr:
+            x = fr.pop()
+            new = adj[x] & ~seen
+            while new:
+                b = new & -new
+                new ^= b
+                seen |= b
+                fr.append(b.bit_length() - 1)
+        return seen != (1 << n) - 1
+
+    kinds = ["inner"] * len(edges)
+    ldirs = [0] * len(edges)
+    bridges = [i for i in range(len(edges)) if is_bridge(i)]
+    rng.shuffle(bridges)
+    for i in bridges[:rng.randrange(0, min(3, len(bridges)) + 1)]:
+        kinds[i] = rng.choice(["left", "full", "semi", "anti"])
+        ldirs[i] = rng.randrange(2)
+    fanouts = [None] * len(edges)
+    for i, (u, v) in enumerate(edges):
+        if rng.random() < 0.3 and kinds[i] == "inner":
+            fanouts[i] = min(cards[u] * cards[v],
+                             max(cards[u], cards[v]) * rng.uniform(1, 50))
+    try:
+        return JoinGraph.make(n, edges, cards, sels,
+                              kinds=kinds, ldirs=ldirs, fanouts=fanouts)
+    except ValueError:
+        return None
+
+
+def typed_pool(count, sizes=(3, 4, 5, 6), seed0=0, tree=False,
+               require_typed=True):
+    """First ``count`` feasible draws from ``rand_typed`` over a seed sweep
+    (deterministic), cycling ``sizes``."""
+    out, seed = [], seed0
+    while len(out) < count:
+        g = rand_typed(sizes[seed % len(sizes)], seed, tree=tree)
+        seed += 1
+        if g is not None and (g.typed or not require_typed):
+            out.append(g)
+    return out

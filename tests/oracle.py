@@ -1,0 +1,255 @@
+"""Brute-force reorderability oracle (pure-Python enumeration, n <= ~7).
+
+Independent re-implementation of the typed-join semantics: its own
+reachability, its own TES derivation from (kinds, ldirs), its own validity
+rule and an exhaustive memoized minimum over *ordered* connected splits.
+It deliberately shares nothing with ``core.conflicts`` / the DP engines
+except the arithmetic: costs are computed with the exact functions and f32
+association the engines use — leaf scans via the vectorized
+``np_scan_cost``, memo rows via ``np_rows_for_sets`` (the canonical table
+both ExactEngine and BatchEngine scatter), and split costs via the *jnp*
+``join_cost``/``join_cost_kind`` with the kernels' ``(cl + cr) + jc``
+order.  numpy's and XLA's ``exp2`` differ by 1 ulp on some inputs, so
+tracking the engines to the last bits requires the jnp twins.  One caveat
+keeps the comparison at ``ulp_diff(...) <= 2`` rather than ``==``: XLA's
+FMA contraction of the cost polynomial is *program*-dependent, so two lane
+spaces (or a lane space and this oracle) can disagree by 1 ulp per level
+on rare inputs even though each space is bit-identical to itself across
+batching, sharding, meshes and pipelining.  (DPCCP costs with the numpy
+twins — compare it at the usual 1e-4 relative tolerance, as
+``test_exact`` always has.)
+
+Exhaustive: every connected set, every ordered split, every orientation —
+O(3^n) splits, fine for the n <= 7 suite.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cost as cm
+from repro.core.conflicts import (KIND_ANTI, KIND_FULL, KIND_INNER,
+                                  KIND_LEFT, KIND_SEMI)
+
+INF = np.float32(np.inf)
+
+
+def ulp_diff(a, b) -> int:
+    """Distance in f32 representable values (0 == bitwise equal; inf/nan
+    never compare close).  Lexicographic int32 mapping, sign-aware."""
+    ia, ib = (np.float32(x).view(np.int32) for x in (a, b))
+    if not (np.isfinite(np.float32(a)) and np.isfinite(np.float32(b))):
+        return 0 if ia == ib else np.iinfo(np.int32).max
+    fix = lambda i: np.int64(i) if i >= 0 else np.int64(-2147483648) - np.int64(i)
+    return int(abs(fix(ia) - fix(ib)))
+
+
+# ------------------------------------------------------- independent rules --
+
+def _adj(g) -> list:
+    adj = [0] * g.n
+    for (u, v) in g.edges:
+        adj[u] |= 1 << v
+        adj[v] |= 1 << u
+    return adj
+
+
+def _connected(s: int, adj) -> bool:
+    if s == 0:
+        return False
+    start = s & -s
+    seen = start
+    frontier = [start.bit_length() - 1]
+    while frontier:
+        x = frontier.pop()
+        new = adj[x] & s & ~seen
+        while new:
+            b = new & -new
+            new ^= b
+            seen |= b
+            frontier.append(b.bit_length() - 1)
+    return seen == s
+
+
+def edge_tes(g, i: int) -> tuple[int, int]:
+    """(TES_left, TES_right) of edge ``i`` by first-principles reachability:
+    the right (non-preserved) component of the graph minus the edge; for
+    FULL also the left component.  Raises on non-bridge non-inner edges."""
+    u, v = g.edges[i]
+    ldir = g.ldirs[i] if g.ldirs else 0
+    l, r = (v, u) if ldir else (u, v)
+    adj = _adj(g)
+
+    def reach(start: int) -> int:
+        seen = 1 << start
+        frontier = [start]
+        while frontier:
+            x = frontier.pop()
+            nb = adj[x]
+            if x == u:
+                nb &= ~(1 << v)
+            elif x == v:
+                nb &= ~(1 << u)
+            new = nb & ~seen
+            while new:
+                b = new & -new
+                new ^= b
+                seen |= b
+                frontier.append(b.bit_length() - 1)
+        return seen
+
+    tes_r = reach(r)
+    assert not (tes_r >> l) & 1, "oracle: non-inner edge is not a bridge"
+    tes_l = reach(l) if g.kind(i) == KIND_FULL else (1 << l)
+    return tes_l, tes_r
+
+
+def split_valid(g, lb: int, rb: int) -> bool:
+    """Is the ordered join (lb LEFT-operand, rb right) admissible?  The
+    oracle's own statement of the conflict rules: every crossing non-inner
+    edge must have its TES sides contained in the matching operands
+    (either orientation for FULL)."""
+    if not g.typed:
+        return True
+    for i, (u, v) in enumerate(g.edges):
+        k = g.kind(i)
+        if k == KIND_INNER:
+            continue
+        ub, vb = 1 << u, 1 << v
+        crosses = (lb & ub and rb & vb) or (rb & ub and lb & vb)
+        if not crosses:
+            continue
+        tl, tr = edge_tes(g, i)
+        if (tl & ~lb) == 0 and (tr & ~rb) == 0:
+            continue
+        if k == KIND_FULL and (tl & ~rb) == 0 and (tr & ~lb) == 0:
+            continue
+        return False
+    return True
+
+
+def split_kind(g, lb: int, rb: int) -> int:
+    """Join kind of the (lb, rb) operator: max kind over crossing edges."""
+    k = KIND_INNER
+    for i, (u, v) in enumerate(g.edges):
+        ub, vb = 1 << u, 1 << v
+        if (lb & ub and rb & vb) or (rb & ub and lb & vb):
+            k = max(k, g.kind(i))
+    return k
+
+
+# ------------------------------------------------------- exhaustive search --
+
+@partial(jax.jit, static_argnames=("typed",))
+def _cand_kernel(base, rl, rr, ro, kinds, *, typed: bool):
+    """Jitted candidate costs — the engines' lane formula
+    ``(cost_l + cost_r) + join_cost``.  Must run under ``jax.jit``: XLA's
+    fused elementwise codegen contracts the cost polynomial's mul/adds into
+    FMAs, so the jitted bits differ from eager op-by-op dispatch by 1 ulp
+    on some inputs, and the kernels are always jitted."""
+    if typed:
+        jc = cm.join_cost_kind(rl, rr, ro, kinds)
+    else:
+        jc = cm.join_cost(rl, rr, ro)
+    return base + jc
+
+
+def _split_costs(g, splits, rows, memo):
+    """f32 candidate costs of the ordered splits of one set."""
+    s = splits[0][0] | splits[0][1]
+    rl = np.array([rows[lb] for (lb, _) in splits], np.float32)
+    rr = np.array([rows[rb] for (_, rb) in splits], np.float32)
+    if g.typed:
+        kinds = np.array([split_kind(g, lb, rb) for (lb, rb) in splits],
+                         np.int32)
+    else:
+        kinds = np.zeros(len(splits), np.int32)
+    base = np.array([np.float32(memo[lb][0] + memo[rb][0])
+                     for (lb, rb) in splits], np.float32)
+    return np.asarray(_cand_kernel(base, rl, rr, jnp.float32(rows[s]),
+                                   kinds, typed=g.typed), np.float32)
+
+
+def solve(g):
+    """Exhaustive optimum.  Returns ``(cost, memo)`` where ``memo`` maps
+    every assemblable connected set to ``(f32 cost, left-operand bitmap)``
+    (leaves map to ``(scan cost, 0)``); ``memo[g.full_set][0]`` is the
+    oracle minimum, ``np.inf`` when no valid tree exists."""
+    adj = _adj(g)
+    full = g.full_set
+    # memo rows exactly as every engine path registers them: per level, the
+    # connected sets of that size ascending, through np_rows_for_sets.  (The
+    # batch shape matters: numpy's BLAS matmul bits depend on it, and the
+    # log2-domain ulp it moves is amplified ~2^ulp by exp2 in the costs.)
+    rows = {}
+    for v in range(g.n):
+        rows[1 << v] = np.float32(np.float32(g.log2_card[v]))
+    by_size: dict[int, list] = {}
+    for s in range(3, full + 1):
+        k = bin(s).count("1")
+        if k >= 2 and _connected(s, adj):
+            by_size.setdefault(k, []).append(s)
+    for k in sorted(by_size):
+        sets_np = np.array(by_size[k], np.int32)
+        rows_np = cm.np_rows_for_sets(sets_np, g)
+        for s, r in zip(by_size[k], rows_np):
+            rows[s] = np.float32(r)
+    memo: dict[int, tuple[np.float32, int]] = {}
+    lcost = cm.np_scan_cost(g.log2_card.astype(np.float32)).astype(np.float32)
+    for v in range(g.n):
+        memo[1 << v] = (np.float32(lcost[v]), 0)
+    for s in range(3, full + 1):
+        if bin(s).count("1") < 2 or not _connected(s, adj):
+            continue
+        splits = []
+        lb = (s - 1) & s
+        while lb:
+            rb = s & ~lb
+            if (rb and lb in memo and rb in memo
+                    and _connected(lb, adj) and _connected(rb, adj)
+                    and split_valid(g, lb, rb)):
+                splits.append((lb, rb))
+            lb = (lb - 1) & s
+        if not splits:
+            continue
+        cand = _split_costs(g, splits, rows, memo)
+        i = int(np.argmin(cand))
+        if np.isfinite(cand[i]):
+            memo[s] = (np.float32(cand[i]), splits[i][0])
+    cost = memo[full][0] if full in memo else INF
+    return cost, memo
+
+
+def extract(g, memo, s=None):
+    """One optimal plan as nested ``(left, right)`` bitmap tuples."""
+    if s is None:
+        s = g.full_set
+    if bin(s).count("1") == 1:
+        return s
+    lb = memo[s][1]
+    return (extract(g, memo, lb), extract(g, memo, s & ~lb))
+
+
+def plan_valid(g, p) -> bool:
+    """Semantic validity of a ``core.plan.Plan`` tree under the oracle's
+    rules: structural cover + connectivity + ordered conflict validity."""
+    adj = _adj(g)
+    ok = True
+
+    def rec(node):
+        nonlocal ok
+        if node.is_leaf:
+            return node.rel_set
+        ls, rs = rec(node.left), rec(node.right)
+        if (ls & rs) or (ls | rs) != node.rel_set:
+            ok = False
+        if not (_connected(ls, adj) and _connected(rs, adj)):
+            ok = False
+        if not split_valid(g, ls, rs):
+            ok = False
+        return node.rel_set
+
+    return rec(p) == g.full_set and ok

@@ -1,0 +1,170 @@
+"""Conflict-detector properties (hypothesis via the ``tests.helpers`` shim)
+and the inner-only byte-identity guard of the typed-join extension.
+
+Three layers of the same rule set are cross-checked per drawn graph:
+``conflicts.ordered_valid`` (host), ``conflicts.lane_valid_kinds`` (the
+device kernels' vectorised mask) and ``tests.oracle.split_valid`` (the
+independent brute-force restatement).  The fingerprint test pins inner-only
+``optimize`` costs to f64 hex literals captured *before* the typed
+extension landed: any byte drift on plain inner queries — the paths every
+existing user is on — fails loudly.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import conflicts as cf
+from repro.core import engine
+from repro.core.joingraph import JoinGraph, typed_edge_arrays
+from repro.workloads import generators as gen
+from tests import oracle
+from tests.helpers import given, settings, st, rand_typed
+
+# f64 hex of optimize(g, "mpdp").cost captured on the pre-typed tree
+# (commit dcb2ca4): mixed_stream(6, seed=3, sizes=(6,7,8)) by index, then
+# named topology graphs at their default seeds.  Literals, not recomputed.
+FINGERPRINTS = {
+    0: (6, "0x1.667ac60000000p+22"),
+    1: (7, "0x1.29e2380000000p+20"),
+    2: (8, "0x1.0f10f60000000p+25"),
+    3: (6, "0x1.9657f40000000p+26"),
+    4: (7, "0x1.c57dfe0000000p+16"),
+    5: (8, "0x1.7bb6920000000p+24"),
+    "star6": (6, "0x1.f985d00000000p+26"),
+    "chain7": (7, "0x1.b5c89a0000000p+26"),
+    "cycle6": (6, "0x1.56b55c0000000p+26"),
+    "clique5": (5, "0x1.a674da0000000p+29"),
+}
+
+
+def test_inner_only_byte_identity_fingerprints():
+    graphs = dict(enumerate(gen.mixed_stream(6, seed=3, sizes=(6, 7, 8))))
+    graphs["star6"] = gen.star(6)
+    graphs["chain7"] = gen.chain(7)
+    graphs["cycle6"] = gen.cycle(6)
+    graphs["clique5"] = gen.clique(5)
+    for key, g in graphs.items():
+        n, hexcost = FINGERPRINTS[key]
+        assert g.n == n
+        assert not g.typed
+        r = engine.optimize(g, "mpdp")
+        assert float(r.cost).hex() == hexcost, \
+            f"inner-only cost drift on {key}: {float(r.cost).hex()}"
+
+
+def _ordered_splits(g):
+    """Every ordered (lb, rb) pair of connected disjoint sets covering a
+    connected subset of g — the candidates the DP enumerates."""
+    adj = oracle._adj(g)
+    full = g.full_set
+    for s in range(3, full + 1):
+        if bin(s).count("1") < 2 or not oracle._connected(s, adj):
+            continue
+        lb = (s - 1) & s
+        while lb:
+            rb = s & ~lb
+            if rb and oracle._connected(lb, adj) \
+                    and oracle._connected(rb, adj):
+                yield lb, rb
+            lb = (lb - 1) & s
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000))
+def test_host_mask_matches_oracle_rule(seed):
+    g = rand_typed(3 + seed % 4, seed)
+    if g is None:
+        return
+    for lb, rb in _ordered_splits(g):
+        assert cf.ordered_valid(lb, rb, g) == oracle.split_valid(g, lb, rb)
+        assert cf.crossing_kind(lb, rb, g) == oracle.split_kind(g, lb, rb)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_device_mask_matches_host_rule(seed):
+    g = rand_typed(3 + seed % 4, seed)
+    if g is None:
+        return
+    splits = list(_ordered_splits(g))
+    lb = jnp.array([l for l, _ in splits], jnp.int32)
+    rb = jnp.array([r for _, r in splits], jnp.int32)
+    ok_a, ok_b, kind = cf.lane_valid_kinds(
+        lb, rb, *(jnp.asarray(a) for a in typed_edge_arrays(g, len(g.edges))))
+    for i, (l, r) in enumerate(splits):
+        assert bool(ok_a[i]) == cf.ordered_valid(l, r, g)
+        assert bool(ok_b[i]) == cf.ordered_valid(r, l, g)
+        assert int(kind[i]) == cf.crossing_kind(l, r, g)
+
+
+def test_inner_only_mask_is_all_true():
+    g = gen.chain(6, 1)
+    assert not g.typed
+    splits = list(_ordered_splits(g))
+    lb = jnp.array([l for l, _ in splits], jnp.int32)
+    rb = jnp.array([r for _, r in splits], jnp.int32)
+    # inner-only graphs pack all-zero conflict arrays: nothing ever crosses
+    ok_a, ok_b, kind = cf.lane_valid_kinds(
+        lb, rb, *(jnp.asarray(a) for a in typed_edge_arrays(g, len(g.edges))))
+    assert bool(jnp.all(ok_a)) and bool(jnp.all(ok_b))
+    assert int(jnp.max(kind)) == cf.KIND_INNER
+    assert all(cf.ordered_valid(l, r, g) for l, r in splits)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_mask_admitted_plans_are_oracle_valid(seed):
+    g = rand_typed(3 + seed % 4, seed)
+    if g is None or not g.typed:
+        return
+    r = engine.optimize(g, "mpdp")
+    assert oracle.plan_valid(g, r.plan)
+
+
+# ------------------------------------------------ construction-time checks --
+
+def test_duplicate_edge_kinds_raise():
+    """Same (u, v) pair with conflicting kinds must raise, not silently
+    keep one: the two predicates have different semantics."""
+    with pytest.raises(ValueError, match="duplicate"):
+        JoinGraph.make(3, [(0, 1), (1, 0), (1, 2)],
+                       [100.0, 200.0, 300.0], [0.1, 0.2, 0.1],
+                       kinds=["left", "semi", "inner"])
+
+
+def test_duplicate_inner_edges_merge():
+    # duplicate *inner* predicates still merge multiplicatively (hypergraph
+    # clique-ification relies on it)
+    g = JoinGraph.make(3, [(0, 1), (1, 0), (1, 2)],
+                       [100.0, 200.0, 300.0], [0.1, 0.2, 0.1])
+    assert len(g.edges) == 2
+
+
+def test_non_bridge_non_inner_raises():
+    with pytest.raises(ValueError, match="bridge"):
+        JoinGraph.make(3, [(0, 1), (1, 2), (0, 2)],
+                       [100.0, 200.0, 300.0], [0.1, 0.2, 0.1],
+                       kinds=["left", "inner", "inner"])
+
+
+def test_tes_deadlock_raises():
+    # two LEFT joins on one chain preserving opposite outer endpoints: each
+    # edge's non-preserved side contains the other edge, so each requires
+    # the other to fire first
+    with pytest.raises(ValueError, match="infeasible"):
+        JoinGraph.make(4, [(0, 1), (1, 2), (2, 3)],
+                       [10.0, 20.0, 30.0, 40.0], [0.1, 0.1, 0.1],
+                       kinds=["left", "inner", "left"],
+                       ldirs=[0, 0, 1])
+
+
+def test_generator_streams_always_feasible():
+    """The workload generator's root-oriented rule never deadlocks."""
+    for i, g in enumerate(gen.mixed_joins_stream(12, seed=7,
+                                                 sizes=(5, 8, 11))):
+        assert g.n in (5, 8, 11)
+        for kg in (gen.typed_query(14, seed=i, base="chain",
+                                   noninner=0.6, mn=0.5),
+                   gen.hypergraph_query(7, seed=i)):
+            assert kg.full_set == (1 << kg.n) - 1

@@ -1,12 +1,19 @@
 """Cost model: jnp/numpy twins agree; basic sanity (hypothesis optional —
-see tests.helpers for the fixed-example fallback)."""
+see tests.helpers for the fixed-example fallback); m:n fan-out cardinality
+channel vs an independent numpy oracle; typed/fan wire-codec bit-identity."""
+import json
+import math
+
 import numpy as np
 import jax.numpy as jnp
 
-from tests.helpers import given, settings, st
+from tests.helpers import given, settings, st, rand_typed, typed_pool
+from repro.core import conflicts as cf
 from repro.core import cost as cm
+from repro.core.joingraph import JoinGraph
 
 rows = st.floats(0.0, 90.0)
+kind = st.integers(0, 4)
 
 
 @settings(max_examples=100, deadline=None)
@@ -31,3 +38,129 @@ def test_rows_log2_clamped():
     got = float(cm.rows_from_log2(jnp.float32(500.0)))
     exp = float(np.exp2(np.float32(cm.LOG2_CAP)))
     assert abs(got - exp) < 1e-5 * exp  # XLA/numpy exp2 differ by ulps
+
+
+# ------------------------------------------------------- kind-aware costs --
+
+@settings(max_examples=100, deadline=None)
+@given(rows, rows, rows, kind)
+def test_join_cost_kind_twins_agree(a, b, o, k):
+    j = float(cm.join_cost_kind(jnp.float32(a), jnp.float32(b),
+                                jnp.float32(o), jnp.int32(k)))
+    n = float(cm.np_join_cost_kind(np.float32(a), np.float32(b),
+                                   np.float32(o), k))
+    assert np.isfinite(j) and j > 0
+    assert abs(j - n) <= 1e-5 * max(1.0, abs(n))
+
+
+def test_join_cost_kind_inner_is_plain_join_cost():
+    for a, b, o in [(5.0, 9.0, 11.0), (30.0, 2.0, 20.0), (0.0, 0.0, 0.0)]:
+        plain = float(cm.np_join_cost(np.float32(a), np.float32(b),
+                                      np.float32(o)))
+        kinded = float(cm.np_join_cost_kind(np.float32(a), np.float32(b),
+                                            np.float32(o), cf.KIND_INNER))
+        assert plain == kinded  # bitwise: inner lanes must not drift
+
+
+@settings(max_examples=50, deadline=None)
+@given(rows, rows, rows)
+def test_semi_anti_orientation_asymmetry(a, b, o):
+    """Semi/anti pin the hash build to the filtering right side, so the
+    operand order matters — exactly what the ordered DP lanes exploit."""
+    for k in (cf.KIND_SEMI, cf.KIND_ANTI):
+        ab = float(cm.np_join_cost_kind(np.float32(a), np.float32(b),
+                                        np.float32(o), k))
+        ba = float(cm.np_join_cost_kind(np.float32(b), np.float32(a),
+                                        np.float32(o), k))
+        sym = float(cm.np_join_cost(np.float32(a), np.float32(b),
+                                    np.float32(o)))
+        assert ab > 0 and ba > 0
+        # never cheaper than the unconstrained three-operator minimum
+        assert ab >= sym * (1 - 1e-6) and ba >= sym * (1 - 1e-6)
+
+
+# -------------------------------------------------- m:n fan-out cardinality --
+
+def _rows_oracle(s, g):
+    """Independent f64 restatement: Σ member cards + Σ inside (effective)
+    sels, clamped to [0, LOG2_CAP]."""
+    out = sum(float(g.log2_card[v]) for v in range(g.n) if (s >> v) & 1)
+    out += sum(float(sl) for (u, v), sl in zip(g.edges, g.log2_sel)
+               if (s >> u) & 1 and (s >> v) & 1)
+    return min(max(out, 0.0), cm.LOG2_CAP)
+
+
+def test_mn_pair_rows_hit_explicit_fanout():
+    cards = [1e3, 1e4, 50.0]
+    g = JoinGraph.make(3, [(0, 1), (1, 2)], cards, [0.5, 1e-2],
+                       fanouts=[2e5, None])
+    r01 = float(cm.np_rows_for_sets(np.array([0b011]), g)[0])
+    # explicit fan overrides the PK-FK selectivity: |0 >< 1| == fan exactly
+    assert abs(r01 - math.log2(2e5)) < 1e-3
+    assert r01 > math.log2(max(cards[0], cards[1]))  # genuinely m:n
+    # the untouched edge keeps its selectivity
+    r12 = float(cm.np_rows_for_sets(np.array([0b110]), g)[0])
+    assert abs(r12 - (math.log2(1e4) + math.log2(50.0) - math.log2(100))) \
+        < 1e-3
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 10_000))
+def test_rows_for_sets_matches_numpy_oracle(seed):
+    g = rand_typed(3 + seed % 4, seed)
+    if g is None:
+        return
+    sets = np.array([s for s in range(1, g.full_set + 1)], np.int32)
+    got = cm.np_rows_for_sets(sets, g)
+    for s, r in zip(sets, got):
+        exp = _rows_oracle(int(s), g)
+        assert abs(float(r) - exp) <= 1e-3 + 1e-5 * abs(exp)
+
+
+def test_outer_semi_anti_output_rules():
+    """The folded effective selectivities implement the per-kind output
+    cardinality rules on a 2-relation graph (TES side == the right rel)."""
+    c0, c1, sel = 1e5, 1e2, 1e-4     # join = 1e3 rows
+    mk = lambda k: JoinGraph.make(2, [(0, 1)], [c0, c1], [sel], kinds=[k])
+    full = 0b11
+    rows_of = lambda g: 2.0 ** float(
+        cm.np_rows_for_sets(np.array([full]), g)[0])
+    join = c0 * c1 * sel
+    assert abs(rows_of(mk("inner")) - join) < 1e-2 * join
+    assert abs(rows_of(mk("left")) - max(join, c0)) < 1e-2 * c0
+    assert abs(rows_of(mk("full")) - max(join, c0, c1)) < 1e-2 * c0
+    assert abs(rows_of(mk("semi")) - min(join, c0)) < 1e-2 * join
+    keep = 2.0 ** cf.ANTI_KEEP_L2
+    assert abs(rows_of(mk("anti")) - c0 * keep) < 1e-2 * c0 * keep
+
+
+# --------------------------------------------------------- wire bit-identity --
+
+def test_typed_fan_wire_roundtrip_bit_identical():
+    from repro.core import engine
+    from repro.daemon import protocol
+
+    for g in typed_pool(6, sizes=(4, 5, 6)):
+        d = json.loads(json.dumps(protocol.graph_to_wire(g)))
+        h = protocol.graph_from_wire(d)
+        assert h.n == g.n and h.edges == g.edges
+        assert h.kinds == g.kinds and h.ldirs == g.ldirs
+        assert np.array_equal(h.log2_card, g.log2_card)
+        # effective sels re-derive bit-identically from the raw wire stats
+        assert np.array_equal(h.log2_sel, g.log2_sel)
+        if g.fan_l2 is not None:
+            assert np.array_equal(np.nan_to_num(h.fan_l2, nan=-1.0),
+                                  np.nan_to_num(g.fan_l2, nan=-1.0))
+        a = engine.optimize(g, "mpdp")
+        b = engine.optimize(h, "mpdp")
+        assert np.float32(a.cost) == np.float32(b.cost)
+
+
+def test_inner_wire_dict_unchanged_by_typed_extension():
+    from repro.daemon import protocol
+    from repro.workloads import generators as gen
+
+    g = gen.chain(5, 3)
+    d = protocol.graph_to_wire(g)
+    # pre-typed clients/servers must keep parsing these dicts: no new keys
+    assert set(d) == {"n", "edges", "cards_l2", "sels_l2", "names"}

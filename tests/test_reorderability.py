@@ -1,0 +1,198 @@
+"""Non-inner & m:n reorderability: every engine path vs the brute-force
+oracle (``tests/oracle.py`` — independent TES rules + exhaustive ordered
+enumeration, n <= 7).
+
+Differential matrix: {DPCCP sequential, solo DPSUB / MPDP:Tree /
+MPDP-general, batched three lane spaces, sharded ``optimize_many`` at 1 and
+4 devices, intra-query lattice sharding at 1 and 4 devices, GOO / IDP2 /
+UnionDP} x {vector kernels, Pallas interpret (the CI ``pallas-smoke`` job
+re-runs this file with ``REPRO_PALLAS=1``)} x {sync, pipelined}.
+
+Numerics contract (see the oracle docstring): a lane space agrees with the
+oracle — and with the other spaces — to <= 2 ulp (XLA's FMA contraction of
+the cost polynomial is program-dependent), while each space stays
+*bit-identical to itself* across batching, sharding, meshes and pipelining;
+DPCCP costs with the numpy twins and compares at 1e-4 relative.  Plans are
+checked exactly: ``oracle.plan_valid`` + ``validate_plan`` on every path.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import dpccp, engine
+from repro.core.batch import optimize_many
+from repro.core.lattice import optimize_lattice
+from repro.core.plan import validate_plan
+from repro.workloads import generators as gen
+from tests import oracle
+from tests.helpers import rand_graph, typed_pool
+
+NDEV = len(jax.devices())
+
+
+def needs(d):
+    return pytest.param(d, marks=pytest.mark.skipif(
+        NDEV < d, reason=f"needs {d} devices (have {NDEV})"))
+
+
+def plan_shape(p):
+    if p.is_leaf:
+        return p.rel_set
+    return (p.rel_set, plan_shape(p.left), plan_shape(p.right))
+
+
+# deterministic feasible draws; arbitrary orientations, kinds and fan-outs
+POOL = typed_pool(10, sizes=(3, 4, 5, 6, 6, 7))
+TREES = typed_pool(6, sizes=(3, 4, 5, 6), seed0=300, tree=True)
+
+
+@pytest.fixture(scope="module")
+def oracle_pool():
+    return [np.float32(oracle.solve(g)[0]) for g in POOL]
+
+
+@pytest.fixture(scope="module")
+def oracle_trees():
+    return [np.float32(oracle.solve(g)[0]) for g in TREES]
+
+
+def _graphs_for(algo):
+    return TREES if algo == "mpdp_tree" else POOL
+
+
+def _costs_for(algo, oracle_pool, oracle_trees):
+    return oracle_trees if algo == "mpdp_tree" else oracle_pool
+
+
+def check(g, r, oc):
+    assert oracle.ulp_diff(r.cost, oc) <= 2, (r.cost, float(oc))
+    assert oracle.plan_valid(g, r.plan)
+    validate_plan(r.plan, g)
+
+
+# ------------------------------------------------------------------- solo --
+
+@pytest.mark.parametrize("algo", ["dpsub", "mpdp_general", "mpdp_tree"])
+def test_solo_matches_oracle(algo, oracle_pool, oracle_trees):
+    for g, oc in zip(_graphs_for(algo),
+                     _costs_for(algo, oracle_pool, oracle_trees)):
+        check(g, engine.optimize(g, algo), oc)
+
+
+def test_dpccp_matches_oracle(oracle_pool):
+    # DPCCP costs with the numpy twins: 1e-4 relative, as test_exact does
+    for g, oc in zip(POOL, oracle_pool):
+        r = dpccp.solve(g)
+        assert abs(r.cost - float(oc)) <= 1e-4 * max(1.0, float(oc))
+        assert oracle.plan_valid(g, r.plan)
+        validate_plan(r.plan, g)
+
+
+def test_dpsize_rejects_typed():
+    with pytest.raises(ValueError, match="dpsize"):
+        engine.optimize(POOL[0], "dpsize")
+
+
+# ---------------------------------------------------- batched lane spaces --
+
+@pytest.mark.parametrize("algo", ["dpsub", "mpdp_general", "mpdp_tree"])
+def test_batched_matches_oracle_and_solo(algo, oracle_pool, oracle_trees):
+    graphs = _graphs_for(algo)
+    rs = optimize_many(graphs, algorithm=algo)
+    for g, r, oc in zip(graphs, rs,
+                        _costs_for(algo, oracle_pool, oracle_trees)):
+        check(g, r, oc)
+        solo = engine.optimize(g, algo)
+        # same lane space, batched vs solo: bit-identical
+        assert np.float32(r.cost) == np.float32(solo.cost)
+        assert plan_shape(r.plan) == plan_shape(solo.plan)
+
+
+@pytest.mark.parametrize("algo", ["dpsub", "mpdp_general"])
+def test_pipelined_bit_identical(algo):
+    sync = optimize_many(POOL, algorithm=algo)
+    piped = optimize_many(POOL, algorithm=algo, pipeline=True)
+    for a, b in zip(sync, piped):
+        assert np.float32(a.cost) == np.float32(b.cost)
+        assert plan_shape(a.plan) == plan_shape(b.plan)
+
+
+def test_mixed_typed_inner_batch_keeps_inner_bitident():
+    """Typed graphs bucket separately: inner queries sharing the flight see
+    the exact kernels (and results) they saw before the typed extension."""
+    inner = [rand_graph(5, 1, 11), gen.chain(6, 2), gen.star(5, 3)]
+    alone = optimize_many(inner, algorithm="dpsub")
+    mixed = optimize_many(inner + POOL[:4], algorithm="dpsub")
+    for a, b in zip(alone, mixed[:3]):
+        assert np.float32(a.cost) == np.float32(b.cost)
+        assert plan_shape(a.plan) == plan_shape(b.plan)
+
+
+# ----------------------------------------------------------------- sharded --
+
+@pytest.mark.parametrize("devices", [needs(1), needs(4)])
+@pytest.mark.parametrize("algo", ["dpsub", "mpdp_general", "mpdp_tree"])
+def test_sharded_matches_oracle_and_batch(devices, algo, oracle_pool,
+                                          oracle_trees):
+    graphs = _graphs_for(algo)
+    base = optimize_many(graphs, algorithm=algo)
+    rs = optimize_many(graphs, algorithm=algo, devices=devices)
+    for g, r, b, oc in zip(graphs, rs, base,
+                           _costs_for(algo, oracle_pool, oracle_trees)):
+        check(g, r, oc)
+        assert np.float32(r.cost) == np.float32(b.cost)
+        assert plan_shape(r.plan) == plan_shape(b.plan)
+
+
+@pytest.mark.parametrize("devices", [needs(1), needs(4)])
+@pytest.mark.parametrize("algo", ["dpsub", "mpdp_general", "mpdp_tree"])
+def test_lattice_matches_oracle(devices, algo, oracle_pool, oracle_trees):
+    graphs = _graphs_for(algo)
+    for g, oc in zip(graphs[:4],
+                     _costs_for(algo, oracle_pool, oracle_trees)):
+        check(g, optimize_lattice(g, algorithm=algo, devices=devices), oc)
+
+
+# -------------------------------------------------------------- heuristics --
+
+def test_heuristics_valid_and_never_below_oracle(oracle_pool):
+    from repro.heuristics import goo, idp, uniondp
+    for g, oc in zip(POOL, oracle_pool):
+        for solve in (goo.solve, lambda q: idp.solve(q, k=4),
+                      lambda q: uniondp.solve(q, k=4)):
+            r = solve(g)
+            assert oracle.plan_valid(g, r.plan)
+            validate_plan(r.plan, g)
+            # heuristic plans accumulate cost in f64; the oracle optimum is
+            # a f32 lower bound up to rounding
+            assert r.cost >= float(oc) * (1 - 1e-5)
+
+
+def test_heuristics_valid_at_scale():
+    from repro.heuristics import goo, idp, uniondp
+    for g in [gen.typed_query(18, seed=9, base="job", noninner=0.4, mn=0.3),
+              gen.typed_query(24, seed=4, base="chain", noninner=0.5,
+                              mn=0.4)]:
+        for solve in (goo.solve, lambda q: idp.solve(q, k=6),
+                      lambda q: uniondp.solve(q, k=6)):
+            r = solve(g)
+            assert oracle.plan_valid(g, r.plan)
+            validate_plan(r.plan, g)
+
+
+def test_oracle_extract_matches_memo():
+    """The oracle's own plan extraction re-costs to its memo optimum."""
+    g = POOL[0]
+    cost, memo = oracle.solve(g)
+
+    def build(t):
+        from repro.core.plan import Plan
+        if isinstance(t, int):
+            return Plan(rel_set=t, cost=0.0, rows_log2=0.0)
+        l, r = (build(x) for x in t)
+        return Plan(rel_set=l.rel_set | r.rel_set, cost=0.0, rows_log2=0.0,
+                    left=l, right=r)
+
+    p = build(oracle.extract(g, memo))
+    assert oracle.plan_valid(g, p)
